@@ -1,0 +1,56 @@
+"""Data loading throughput (paper §6.2.4, §3.3) and columnar compression
+effectiveness (§3.2): distributed load into the columnar memory store with
+per-partition scheme selection; reports MB/s and compression ratio (paper:
+~3x space vs row objects, 5x load throughput vs HDFS re-load)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DType, Schema
+from repro.core.columnar import from_arrays
+
+from .common import report, timeit
+
+
+def main() -> None:
+    rng = np.random.default_rng(7)
+    n = 2_000_000
+    data = {
+        "orderkey": np.sort(rng.integers(0, n // 4, n)).astype(np.int64),
+        "qty": rng.integers(1, 50, n).astype(np.int32),
+        "price": rng.uniform(900, 100_000, n),
+        "shipmode": np.array(["AIR", "SHIP", "TRUCK", "RAIL", "MAIL", "FOB",
+                              "REG"])[rng.integers(0, 7, n)],
+        "date": np.repeat(rng.integers(8000, 8100, 200).astype(np.int32),
+                          n // 200),
+    }
+    schema = Schema.of(orderkey=DType.INT64, qty=DType.INT32,
+                       price=DType.FLOAT64, shipmode=DType.STRING,
+                       date=DType.INT32)
+    raw_bytes = sum(v.nbytes if v.dtype.kind != "U" else v.nbytes // 2
+                    for v in data.values())
+
+    holder = {}
+
+    def load():
+        holder["t"] = from_arrays("lineitem", schema, data,
+                                  num_partitions=16)
+
+    t = timeit(load, warmup=1, iters=3)
+    table = holder["t"]
+    ratio = raw_bytes / table.nbytes
+    mb_s = raw_bytes / 1e6 / t
+    report("loading_throughput", t,
+           f"{mb_s:.0f}MB/s compression={ratio:.2f}x "
+           f"stored={table.nbytes / 1e6:.0f}MB")
+    # per-encoding census
+    from collections import Counter
+    enc = Counter(b.enc.encoding.value for p in table.partitions
+                  for b in p.columns.values())
+    report("loading_encodings", 0.0, " ".join(f"{k}:{v}"
+                                              for k, v in sorted(enc.items())))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure (see DESIGN.md §7).
+Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--only pavlo,ml_bench]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = ["loading", "kernels_bench", "pavlo", "tpch_micro", "join_pde",
+          "fault_tolerance", "warehouse", "ml_bench", "task_overhead"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of suites")
+    args = ap.parse_args()
+    suites = args.only.split(",") if args.only else SUITES
+    print("name,us_per_call,derived")
+    failures = []
+    for name in suites:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"# {name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Task launching overhead (paper §7.1, Figure 13): job time vs number of
+reduce tasks for fixed total work, under Spark-like (~0.5 ms here, 5 ms in
+the paper) and Hadoop-like launch overheads.  With cheap tasks, MORE tasks
+is safe (skew-robust); with Hadoop overheads the wrong task count is
+catastrophic — reproducing the paper's surprising finding."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DType, Schema
+from repro.core.batch import PartitionBatch
+from repro.core.rdd import ShuffleDependency, ShuffledRDD
+from repro.core.shuffle import bucket_by_hash
+
+from .common import (HIVE_TASK_OVERHEAD_S, SHARK_TASK_OVERHEAD_S, report,
+                     hive_sim_session, shark_session, timeit)
+
+
+def run_group_by(sess, num_reducers: int) -> float:
+    table = sess.catalog.get("t")
+    rdd = sess.ctx.scan(table)
+    dep = ShuffleDependency(
+        rdd.map_partitions(lambda s, b: b.decode_strings()),
+        num_reducers, bucket_by_hash("k", num_reducers))
+
+    def job():
+        sess.ctx.scheduler.run_map_stage(dep)
+        out = ShuffledRDD(dep)
+        sess.ctx.scheduler.run_result_stage(out)
+
+    return timeit(job, warmup=0, iters=1)
+
+
+def load(sess):
+    rng = np.random.default_rng(6)
+    # skewed keys: a few heavy hitters
+    keys = np.concatenate([rng.zipf(1.3, 300_000) % 5000,
+                           np.zeros(50_000, np.int64)])
+    sess.create_table("t", Schema.of(k=DType.INT64, v=DType.FLOAT64),
+                      {"k": keys.astype(np.int64),
+                       "v": rng.normal(size=len(keys))},
+                      num_partitions=16)
+
+
+def main() -> None:
+    for mode, mk in (("spark", shark_session), ("hadoop", hive_sim_session)):
+        sess = mk()
+        load(sess)
+        for n in (4, 16, 64, 256):
+            t = run_group_by(sess, n)
+            report(f"task_overhead_{mode}_{n}tasks", t,
+                   f"overhead_per_task="
+                   f"{SHARK_TASK_OVERHEAD_S if mode == 'spark' else HIVE_TASK_OVERHEAD_S}")
+        sess.shutdown()
+
+
+if __name__ == "__main__":
+    main()

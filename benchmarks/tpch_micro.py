@@ -1,0 +1,36 @@
+"""TPC-H aggregation micro-benchmarks (paper §6.3.1, Figure 7): group-by
+cardinality sweep on lineitem — 1 group (plain count), 7 (SHIPMODE),
+~2500 (RECEIPTDATE), ~250k (ORDERKEY)."""
+
+from __future__ import annotations
+
+from .common import (hive_sim_session, load_lineitem, report, shark_session,
+                     timeit)
+
+QUERIES = [
+    ("1_group", "SELECT COUNT(*) AS c FROM lineitem"),
+    ("7_groups", "SELECT L_SHIPMODE, COUNT(*) AS c FROM lineitem "
+                 "GROUP BY L_SHIPMODE"),
+    ("2500_groups", "SELECT L_RECEIPTDATE, COUNT(*) AS c FROM lineitem "
+                    "GROUP BY L_RECEIPTDATE"),
+    ("250k_groups", "SELECT L_ORDERKEY, COUNT(*) AS c FROM lineitem "
+                    "GROUP BY L_ORDERKEY"),
+]
+
+
+def main() -> None:
+    shark = shark_session()
+    load_lineitem(shark)
+    hive = hive_sim_session()
+    load_lineitem(hive)
+    for name, q in QUERIES:
+        ts = timeit(lambda: shark.sql(q), warmup=1, iters=3)
+        th = timeit(lambda: hive.sql(q), warmup=0, iters=1)
+        report(f"tpch_agg_{name}_shark", ts, f"speedup={th / ts:.1f}x")
+        report(f"tpch_agg_{name}_hivesim", th, "")
+    shark.shutdown()
+    hive.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Checkpoint/restart with manifest lineage and elastic re-sharding.
+
+Fault-tolerance model for the SPMD side (DESIGN.md §2): a chip failure kills
+the whole step, so recovery = restart from the latest checkpoint + replay
+the deterministic data pipeline from the manifest's step counter — the
+lineage idea applied at pod granularity.
+
+Layout:
+    <dir>/step_000123/
+        manifest.json        # step, arch, mesh shape, pipeline manifest,
+                             # leaf index {key -> file, shape, dtype}
+        <key>.npy            # one array per pytree leaf
+
+Saves are atomic (write to .tmp, rename) and optionally asynchronous
+(snapshot to host, background thread writes).  Restore is *elastic*: leaves
+come back as host numpy; the caller jits them onto whatever mesh the new job
+has — a 256-chip checkpoint restores onto 512 chips (or 8) unchanged.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+try:
+    import ml_dtypes
+    _HAS_BF16 = True
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover
+    _HAS_BF16 = False
+    _BF16 = None
+
+
+def _flatten_with_names(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_path_str(p) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Dict[str, Any],
+                    extra_manifest: Optional[Dict] = None) -> str:
+    """Synchronous atomic save.  Returns the checkpoint path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _flatten_with_names(tree)
+    index = {}
+    for name, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        fname = name.replace("/", "__") + ".npy"
+        logical_dtype = str(arr.dtype)
+        if _HAS_BF16 and arr.dtype == _BF16:
+            arr = arr.view(np.uint16)  # np.save can't round-trip bf16
+        np.save(os.path.join(tmp, fname), arr)
+        index[name] = {"file": fname, "shape": list(arr.shape),
+                       "dtype": logical_dtype}
+    manifest = {"step": step, "leaves": index}
+    if extra_manifest:
+        manifest.update(extra_manifest)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore_checkpoint(directory: str, step: Optional[int] = None,
+                       template: Optional[Dict[str, Any]] = None
+                       ) -> Tuple[Dict[str, Any], Dict]:
+    """Restore the given (or latest) step.  With `template`, leaves are
+    reassembled into the template's pytree structure; otherwise a nested
+    dict following the saved key paths is returned."""
+    if step is None:
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+        step = steps[-1]
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = {}
+    for name, meta in manifest["leaves"].items():
+        arr = np.load(os.path.join(path, meta["file"]))
+        if meta["dtype"] == "bfloat16" and _HAS_BF16:
+            arr = arr.view(_BF16)
+        arrays[name] = arr
+    if template is not None:
+        leaves = _flatten_with_names(template)
+        restored = [jax.numpy.asarray(arrays[name]).astype(leaf.dtype)
+                    if hasattr(leaf, "dtype") else arrays[name]
+                    for name, leaf in leaves]
+        treedef = jax.tree_util.tree_structure(template)
+        return treedef.unflatten(restored), manifest
+    nested: Dict[str, Any] = {}
+    for name, arr in arrays.items():
+        parts = name.split("/")
+        d = nested
+        for part in parts[:-1]:
+            d = d.setdefault(part, {})
+        d[parts[-1]] = arr
+    return nested, manifest
+
+
+class CheckpointManager:
+    """Async, retention-managed checkpointing."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree: Dict[str, Any],
+             extra_manifest: Optional[Dict] = None) -> None:
+        # snapshot to host synchronously (cheap vs. training step), write in
+        # the background so the step loop is not blocked on disk
+        snapshot = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+        if self._thread is not None:
+            self._thread.join()
+
+        def work():
+            save_checkpoint(self.directory, step, snapshot, extra_manifest)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def latest_step(self) -> Optional[int]:
+        steps = [int(d.split("_")[1]) for d in os.listdir(self.directory)
+                 if d.startswith("step_") and not d.endswith(".tmp")]
+        return max(steps) if steps else None
+
+    def restore_latest(self, template=None):
+        return restore_checkpoint(self.directory, None, template)
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,20 @@
+"""Shark core: columnar SQL engine with RDD lineage fault tolerance and
+Partial DAG Execution, reproduced in JAX (see DESIGN.md)."""
+
+from .types import DType, Field, Schema
+from .columnar import Table, from_arrays
+from .expr import (And, Between, BinOp, Cmp, Col, Expr, Func, InList, Lit,
+                   Not, Or)
+from .plan import (AggFunc, AggregateNode, AggSpec, FilterNode, JoinNode,
+                   JoinStrategy, LimitNode, ProjectNode, ScanNode, SortNode)
+from .session import SharkSession
+from .runtime import SharkContext
+
+__all__ = [
+    "DType", "Field", "Schema", "Table", "from_arrays",
+    "And", "Between", "BinOp", "Cmp", "Col", "Expr", "Func", "InList", "Lit",
+    "Not", "Or",
+    "AggFunc", "AggregateNode", "AggSpec", "FilterNode", "JoinNode",
+    "JoinStrategy", "LimitNode", "ProjectNode", "ScanNode", "SortNode",
+    "SharkSession", "SharkContext",
+]

@@ -1,0 +1,217 @@
+"""Hash aggregation (paper §6.2.2, §6.3.1).
+
+Like Shark (and Hive), aggregations run in two phases: task-local partial
+aggregation on each partition, then a shuffle of the partial states by group
+key and a final merge on the reduce side.  Spark's hash-based distributed
+aggregation (no sort before shuffle, §7.1) is reproduced: grouping is
+hash/unique-based, never a global sort.
+
+On TPU, the partial phase is the Pallas `groupby_mxu` kernel for small group
+cardinality (group-by as a one-hot matmul on the systolic array) and a
+sort/segment-sum for large cardinality; this module is the engine-level
+(host/numpy) implementation and the oracle for those kernels.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .batch import PartitionBatch
+from .expr import ColumnVal, Evaluator, evaluate
+from .plan import AggFunc, AggSpec
+
+
+def group_indices(keys: Sequence[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
+    """Group rows by composite key.  Returns (representative row indices of
+    each group, inverse mapping row -> group id).  Hash-based (np.unique),
+    not sort-order dependent."""
+    n = len(keys[0]) if keys else 0
+    if not keys:
+        return np.zeros(1, np.int64), np.zeros(n, np.int64)
+    if len(keys) == 1:
+        _, first, inverse = np.unique(keys[0], return_index=True,
+                                      return_inverse=True)
+        return first, inverse
+    # composite: unique over a void view of stacked columns
+    cols = [np.asarray(k) for k in keys]
+    rec = np.empty(n, dtype=[(f"k{i}", c.dtype) for i, c in enumerate(cols)])
+    for i, c in enumerate(cols):
+        rec[f"k{i}"] = c
+    _, first, inverse = np.unique(rec, return_index=True, return_inverse=True)
+    return first, inverse
+
+
+# State columns per aggregate: AVG keeps (sum, count); COUNT_DISTINCT defers
+# to the reduce side (map side emits distinct (group, value) pairs).
+
+def _state_cols(spec: AggSpec) -> List[str]:
+    if spec.func == AggFunc.AVG:
+        return [f"__{spec.out_name}__sum", f"__{spec.out_name}__cnt"]
+    if spec.func == AggFunc.COUNT:
+        return [f"__{spec.out_name}__cnt"]
+    if spec.func == AggFunc.COUNT_DISTINCT:
+        return [f"__{spec.out_name}__val"]
+    return [f"__{spec.out_name}__acc"]
+
+
+def partial_aggregate(batch: PartitionBatch, group_cols: Sequence[str],
+                      aggs: Sequence[AggSpec]) -> PartitionBatch:
+    """Task-local aggregation: one output row per group in this partition."""
+    n = batch.num_rows
+    keys = [np.asarray(batch.col(g).arr) for g in group_cols]
+    # string group keys: group locally on codes (cheap), decode only the
+    # representative rows below.
+    first, inverse = group_indices(keys) if group_cols else \
+        (np.zeros(1, np.int64), np.zeros(n, np.int64))
+    num_groups = len(first)
+
+    out: Dict[str, ColumnVal] = {}
+    for g in group_cols:
+        v = batch.col(g)
+        out[g] = ColumnVal(np.asarray(v.arr)[first], v.sdict, v.sorted_dict)
+
+    distinct_specs = [a for a in aggs if a.func == AggFunc.COUNT_DISTINCT]
+    plain_specs = [a for a in aggs if a.func != AggFunc.COUNT_DISTINCT]
+
+    for spec in plain_specs:
+        if spec.arg is not None:
+            ctx = {name: batch.col(name) for name in batch.names()}
+            val = np.asarray(evaluate(spec.arg, ctx).arr)
+        else:
+            val = None
+        if spec.func == AggFunc.COUNT:
+            acc = np.bincount(inverse, minlength=num_groups).astype(np.int64)
+            out[_state_cols(spec)[0]] = ColumnVal(acc)
+        elif spec.func == AggFunc.SUM:
+            acc = np.bincount(inverse, weights=val.astype(np.float64),
+                              minlength=num_groups)
+            acc = acc.astype(np.int64) if np.issubdtype(val.dtype, np.integer) \
+                else acc
+            out[_state_cols(spec)[0]] = ColumnVal(acc)
+        elif spec.func == AggFunc.AVG:
+            s = np.bincount(inverse, weights=val.astype(np.float64),
+                            minlength=num_groups)
+            c = np.bincount(inverse, minlength=num_groups).astype(np.int64)
+            sc, cc = _state_cols(spec)
+            out[sc] = ColumnVal(s)
+            out[cc] = ColumnVal(c)
+        elif spec.func in (AggFunc.MIN, AggFunc.MAX):
+            fill = np.inf if spec.func == AggFunc.MIN else -np.inf
+            acc = np.full(num_groups, fill, np.float64)
+            ufunc = np.minimum if spec.func == AggFunc.MIN else np.maximum
+            ufunc.at(acc, inverse, val.astype(np.float64))
+            out[_state_cols(spec)[0]] = ColumnVal(acc)
+        else:
+            raise NotImplementedError(spec.func)
+
+    if distinct_specs:
+        # Exact distinct: partial rows become per-(group, value) instead of
+        # per-group.  Plain aggregates stay correct because their states are
+        # additive across the finer grouping; the reduce side re-merges by
+        # group and counts unique (group, value) pairs.
+        if len(distinct_specs) > 1:
+            raise NotImplementedError("multiple COUNT(DISTINCT) columns")
+        spec = distinct_specs[0]
+        ctx = {name: batch.col(name) for name in batch.names()}
+        val = evaluate(spec.arg, ctx)
+        pair_keys = keys + [np.asarray(val.arr)]
+        pfirst, pinverse = group_indices(pair_keys)
+        num_pairs = len(pfirst)
+        out = {}
+        for g in group_cols:
+            v = batch.col(g)
+            out[g] = ColumnVal(np.asarray(v.arr)[pfirst], v.sdict, v.sorted_dict)
+        out[_state_cols(spec)[0]] = ColumnVal(
+            np.asarray(val.arr)[pfirst], val.sdict, val.sorted_dict)
+        for pspec in plain_specs:
+            if pspec.arg is not None:
+                pval = np.asarray(evaluate(pspec.arg, ctx).arr)
+            else:
+                pval = None
+            if pspec.func == AggFunc.COUNT:
+                out[_state_cols(pspec)[0]] = ColumnVal(
+                    np.bincount(pinverse, minlength=num_pairs).astype(np.int64))
+            elif pspec.func == AggFunc.SUM:
+                acc = np.bincount(pinverse, weights=pval.astype(np.float64),
+                                  minlength=num_pairs)
+                if np.issubdtype(pval.dtype, np.integer):
+                    acc = acc.astype(np.int64)
+                out[_state_cols(pspec)[0]] = ColumnVal(acc)
+            elif pspec.func == AggFunc.AVG:
+                s = np.bincount(pinverse, weights=pval.astype(np.float64),
+                                minlength=num_pairs)
+                c = np.bincount(pinverse, minlength=num_pairs).astype(np.int64)
+                sc, cc = _state_cols(pspec)
+                out[sc] = ColumnVal(s)
+                out[cc] = ColumnVal(c)
+            elif pspec.func in (AggFunc.MIN, AggFunc.MAX):
+                fill = np.inf if pspec.func == AggFunc.MIN else -np.inf
+                acc = np.full(num_pairs, fill, np.float64)
+                ufunc = np.minimum if pspec.func == AggFunc.MIN else np.maximum
+                ufunc.at(acc, pinverse, pval.astype(np.float64))
+                out[_state_cols(pspec)[0]] = ColumnVal(acc)
+
+    return PartitionBatch(out)
+
+
+def merge_aggregate(batch: PartitionBatch, group_cols: Sequence[str],
+                    aggs: Sequence[AggSpec]) -> PartitionBatch:
+    """Reduce-side final merge of partial states (one row per group)."""
+    keys = [np.asarray(batch.col(g).arr) for g in group_cols]
+    n = batch.num_rows
+    first, inverse = group_indices(keys) if group_cols else \
+        (np.zeros(1, np.int64), np.zeros(n, np.int64))
+    num_groups = len(first)
+
+    out: Dict[str, ColumnVal] = {}
+    for g in group_cols:
+        v = batch.col(g)
+        out[g] = ColumnVal(np.asarray(v.arr)[first], v.sdict, v.sorted_dict)
+
+    for spec in aggs:
+        if spec.func == AggFunc.COUNT_DISTINCT:
+            vc = batch.col(_state_cols(spec)[0])
+            pair_keys = keys + [np.asarray(vc.arr)]
+            _, pair_inv = group_indices(pair_keys)
+            # count unique (group, value) pairs per group
+            uniq_pairs, pair_first = np.unique(pair_inv, return_index=True)
+            grp_of_pair = inverse[pair_first]
+            cnt = np.bincount(grp_of_pair, minlength=num_groups).astype(np.int64)
+            out[spec.out_name] = ColumnVal(cnt)
+            continue
+        cols = _state_cols(spec)
+        if spec.func == AggFunc.COUNT:
+            acc = np.bincount(inverse,
+                              weights=np.asarray(batch.col(cols[0]).arr,
+                                                 dtype=np.float64),
+                              minlength=num_groups)
+            out[spec.out_name] = ColumnVal(acc.astype(np.int64))
+        elif spec.func == AggFunc.SUM:
+            v = np.asarray(batch.col(cols[0]).arr)
+            acc = np.bincount(inverse, weights=v.astype(np.float64),
+                              minlength=num_groups)
+            acc = acc.astype(np.int64) if np.issubdtype(v.dtype, np.integer) \
+                else acc
+            out[spec.out_name] = ColumnVal(acc)
+        elif spec.func == AggFunc.AVG:
+            s = np.bincount(inverse,
+                            weights=np.asarray(batch.col(cols[0]).arr,
+                                               dtype=np.float64),
+                            minlength=num_groups)
+            c = np.bincount(inverse,
+                            weights=np.asarray(batch.col(cols[1]).arr,
+                                               dtype=np.float64),
+                            minlength=num_groups)
+            out[spec.out_name] = ColumnVal(s / np.maximum(c, 1))
+        elif spec.func in (AggFunc.MIN, AggFunc.MAX):
+            v = np.asarray(batch.col(cols[0]).arr, dtype=np.float64)
+            fill = np.inf if spec.func == AggFunc.MIN else -np.inf
+            acc = np.full(num_groups, fill, np.float64)
+            ufunc = np.minimum if spec.func == AggFunc.MIN else np.maximum
+            ufunc.at(acc, inverse, v)
+            out[spec.out_name] = ColumnVal(acc)
+        else:
+            raise NotImplementedError(spec.func)
+    return PartitionBatch(out)

@@ -1,0 +1,136 @@
+"""PartitionBatch: the unit of data flowing between physical operators.
+
+One batch = one partition's columns.  Numeric columns are arrays; string
+columns stay dictionary-encoded (codes + partition-local dictionary) end to
+end — the engine only materializes strings at result collection or when a
+shuffle must hash raw values.  This mirrors Shark's columnar store, where a
+block of tuples is a single object and per-row materialization never happens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .columnar import Partition
+from .expr import ColumnVal
+from .types import DType, Schema
+
+
+@dataclasses.dataclass
+class PartitionBatch:
+    cols: Dict[str, ColumnVal]
+
+    @property
+    def num_rows(self) -> int:
+        if not self.cols:
+            return 0
+        v = next(iter(self.cols.values()))
+        return int(np.asarray(v.arr).shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        total = 0
+        for v in self.cols.values():
+            total += np.asarray(v.arr).nbytes
+            if v.sdict is not None:
+                total += v.sdict.nbytes
+        return total
+
+    def names(self) -> List[str]:
+        return list(self.cols)
+
+    def col(self, name: str) -> ColumnVal:
+        return self.cols[name]
+
+    def mask(self, m: np.ndarray) -> "PartitionBatch":
+        m = np.asarray(m)
+        return PartitionBatch({
+            n: ColumnVal(np.asarray(v.arr)[m], v.sdict, v.sorted_dict)
+            for n, v in self.cols.items()})
+
+    def take(self, idx: np.ndarray) -> "PartitionBatch":
+        return PartitionBatch({
+            n: ColumnVal(np.asarray(v.arr)[idx], v.sdict, v.sorted_dict)
+            for n, v in self.cols.items()})
+
+    def head(self, n: int) -> "PartitionBatch":
+        return PartitionBatch({
+            k: ColumnVal(np.asarray(v.arr)[:n], v.sdict, v.sorted_dict)
+            for k, v in self.cols.items()})
+
+    def select(self, names: Sequence[str]) -> "PartitionBatch":
+        return PartitionBatch({n: self.cols[n] for n in names})
+
+    def with_col(self, name: str, v: ColumnVal) -> "PartitionBatch":
+        d = dict(self.cols)
+        d[name] = v
+        return PartitionBatch(d)
+
+    def rename(self, mapping: Dict[str, str]) -> "PartitionBatch":
+        return PartitionBatch({mapping.get(n, n): v for n, v in self.cols.items()})
+
+    def decoded(self) -> Dict[str, np.ndarray]:
+        """Materialize logical values (strings decoded)."""
+        return {n: v.decoded() for n, v in self.cols.items()}
+
+    def decode_strings(self) -> "PartitionBatch":
+        """Replace dictionary-coded strings with raw string arrays (used at
+        shuffle boundaries where codes from different partitions collide)."""
+        out = {}
+        for n, v in self.cols.items():
+            if v.is_string:
+                out[n] = ColumnVal(v.decoded(), None)
+            else:
+                out[n] = v
+        return PartitionBatch(out)
+
+    @staticmethod
+    def from_partition(p: Partition, columns: Optional[Sequence[str]] = None
+                       ) -> "PartitionBatch":
+        names = list(columns) if columns is not None else list(p.columns)
+        out = {}
+        for n in names:
+            b = p.columns[n]
+            out[n] = ColumnVal(b.values(), b.str_dict, True)
+        return PartitionBatch(out)
+
+    @staticmethod
+    def from_numpy(d: Dict[str, np.ndarray]) -> "PartitionBatch":
+        out = {}
+        for n, v in d.items():
+            v = np.asarray(v)
+            if v.dtype.kind in ("U", "S", "O"):
+                out[n] = ColumnVal(v.astype(np.str_), None)
+                # raw string array: represent as codes over itself lazily
+                sdict, codes = np.unique(v.astype(np.str_), return_inverse=True)
+                out[n] = ColumnVal(codes.astype(np.int32), sdict, True)
+            else:
+                out[n] = ColumnVal(v, None)
+        return PartitionBatch(out)
+
+    @staticmethod
+    def concat(batches: Sequence["PartitionBatch"]) -> "PartitionBatch":
+        batches = [b for b in batches if b is not None]
+        if not batches:
+            return PartitionBatch({})
+        names = batches[0].names()
+        out: Dict[str, ColumnVal] = {}
+        for n in names:
+            vals = [b.cols[n] for b in batches]
+            if any(v.is_string for v in vals):
+                # merge via decode + re-encode to a fresh shared dictionary
+                raw = np.concatenate([v.decoded() for v in vals]) \
+                    if vals else np.zeros(0, np.str_)
+                sdict, codes = np.unique(raw, return_inverse=True)
+                out[n] = ColumnVal(codes.astype(np.int32), sdict, True)
+            else:
+                out[n] = ColumnVal(
+                    np.concatenate([np.asarray(v.arr) for v in vals]))
+        return PartitionBatch(out)
+
+    @staticmethod
+    def empty_like(b: "PartitionBatch") -> "PartitionBatch":
+        return b.head(0)

@@ -1,0 +1,78 @@
+"""Table catalog — the warehouse metadata store (paper Figure 2).
+
+Shark keeps warehouse metadata in an external transactional database (the
+Hive metastore); here the catalog is an in-process registry of cached
+columnar tables plus "external" tables (loaded lazily from generator
+functions, standing in for HDFS data the engine can also query directly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from .columnar import Table, from_arrays
+from .types import Schema
+
+
+@dataclasses.dataclass
+class ExternalSource:
+    """Stands in for an HDFS/S3 table: schema + a loader that yields raw
+    column arrays.  Loading into the memory store == CREATE TABLE ...
+    TBLPROPERTIES ('shark.cache'='true') AS SELECT ..."""
+    name: str
+    schema: Schema
+    loader: Callable[[], Dict[str, np.ndarray]]
+    num_partitions: int = 8
+
+
+class Catalog:
+    def __init__(self):
+        self._tables: Dict[str, Table] = {}
+        self._external: Dict[str, ExternalSource] = {}
+        self._lock = threading.RLock()
+
+    def register_table(self, table: Table) -> None:
+        with self._lock:
+            self._tables[table.name] = table
+
+    def register_external(self, src: ExternalSource) -> None:
+        with self._lock:
+            self._external[src.name] = src
+
+    def get(self, name: str) -> Table:
+        with self._lock:
+            if name in self._tables:
+                return self._tables[name]
+            if name in self._external:
+                src = self._external[name]
+                # schema-on-read load path: materialize as columnar partitions
+                table = from_arrays(name, src.schema, src.loader(),
+                                    src.num_partitions)
+                self._tables[name] = table
+                return table
+        raise KeyError(f"unknown table {name!r}")
+
+    def schema(self, name: str) -> Schema:
+        with self._lock:
+            if name in self._tables:
+                return self._tables[name].schema
+            if name in self._external:
+                return self._external[name].schema
+        raise KeyError(f"unknown table {name!r}")
+
+    def exists(self, name: str) -> bool:
+        with self._lock:
+            return name in self._tables or name in self._external
+
+    def drop(self, name: str) -> None:
+        with self._lock:
+            self._tables.pop(name, None)
+            self._external.pop(name, None)
+
+    def tables(self):
+        with self._lock:
+            return dict(self._tables)

@@ -1,0 +1,260 @@
+"""Columnar memory store (paper §3.2, §3.3, §3.5).
+
+A cached table is a list of `Partition`s; each partition stores one
+`ColumnBlock` per column: a single contiguous array per column (the paper's
+"each column creates only one JVM object"), compressed per-partition, plus
+piggybacked statistics collected during the load task:
+
+  * min / max range of each column,
+  * the distinct-value set when small (enum columns),
+  * row count and encoded byte size.
+
+These stats flow back to the master and drive *map pruning*: the master never
+launches scan tasks for partitions whose stats refute the query predicate.
+
+String columns are dictionary-encoded at load; the engine computes on int32
+codes and only materializes strings at the result boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from .compression import Encoded, Encoding, decode_np, encode
+from .types import DType, Field, Schema
+
+ENUM_DISTINCT_LIMIT = 64  # paper: keep distinct values "if the number is small"
+
+
+@dataclasses.dataclass
+class ColumnStats:
+    """Per-partition, per-column statistics piggybacked on data loading."""
+    min: Optional[float] = None
+    max: Optional[float] = None
+    distinct: Optional[frozenset] = None   # only when |distinct| small
+    count: int = 0
+    nbytes: int = 0
+    null_count: int = 0
+
+    def may_satisfy_range(self, lo: Optional[float], hi: Optional[float]) -> bool:
+        """Could any row of this partition fall inside [lo, hi]?"""
+        if self.count == 0:
+            return False
+        if lo is not None and self.max is not None and self.max < lo:
+            return False
+        if hi is not None and self.min is not None and self.min > hi:
+            return False
+        return True
+
+    def may_contain(self, value) -> bool:
+        if self.distinct is not None:
+            return value in self.distinct
+        return self.may_satisfy_range(value, value)
+
+
+@dataclasses.dataclass
+class ColumnBlock:
+    field: Field
+    enc: Encoded
+    stats: ColumnStats
+    # For STRING columns: the partition-local string dictionary; values()
+    # returns int32 codes into it.
+    str_dict: Optional[np.ndarray] = None
+
+    def values(self) -> np.ndarray:
+        """Raw stored values (int32 dictionary codes for STRING columns)."""
+        return decode_np(self.enc)
+
+    def decoded(self) -> np.ndarray:
+        """Logical values: maps codes through the partition-local string
+        dictionary.  Used at shuffle/join/result boundaries where values must
+        compare consistently across partitions."""
+        v = decode_np(self.enc)
+        if self.str_dict is not None:
+            return self.str_dict[v]
+        return v
+
+    @property
+    def n(self) -> int:
+        return self.enc.n
+
+    @property
+    def nbytes(self) -> int:
+        base = self.enc.nbytes
+        if self.str_dict is not None:
+            base += self.str_dict.nbytes
+        return base
+
+
+def _make_stats(values: np.ndarray, nbytes: int,
+                logical: Optional[np.ndarray] = None) -> ColumnStats:
+    n = len(values)
+    if n == 0:
+        return ColumnStats(count=0, nbytes=nbytes)
+    src = logical if logical is not None else values
+    uniq = np.unique(src[: 65536])
+    distinct = frozenset(uniq.tolist()) if len(uniq) <= ENUM_DISTINCT_LIMIT else None
+    if src.dtype.kind in ("U", "S", "O"):
+        # string column: range stats are lexicographic on the logical values
+        return ColumnStats(min=None, max=None, distinct=distinct, count=n,
+                           nbytes=nbytes)
+    return ColumnStats(
+        min=float(src.min()), max=float(src.max()),
+        distinct=distinct, count=n, nbytes=nbytes)
+
+
+def make_block(field: Field, values: np.ndarray,
+               encoding: Optional[Encoding] = None) -> ColumnBlock:
+    """One data-loading task's work for one column: marshal to columnar form,
+    pick a compression scheme locally, collect stats (paper §3.3, §3.5)."""
+    str_dict = None
+    logical = None
+    if field.dtype == DType.STRING and values.dtype.kind in ("U", "S", "O"):
+        logical = np.asarray(values, dtype=np.str_)
+        str_dict, codes = np.unique(logical, return_inverse=True)
+        values = codes.astype(np.int32)
+    values = np.asarray(values, dtype=field.dtype.np_dtype)
+    enc = encode(values, encoding)
+    return ColumnBlock(field, enc, _make_stats(values, enc.nbytes, logical),
+                       str_dict)
+
+
+@dataclasses.dataclass
+class Partition:
+    """One horizontal slice of a table, held in the memory store."""
+    index: int
+    columns: Dict[str, ColumnBlock]
+
+    @property
+    def num_rows(self) -> int:
+        if not self.columns:
+            return 0
+        return next(iter(self.columns.values())).n
+
+    @property
+    def nbytes(self) -> int:
+        return sum(b.nbytes for b in self.columns.values())
+
+    def column(self, name: str) -> ColumnBlock:
+        return self.columns[name]
+
+    def arrays(self, names: Optional[Sequence[str]] = None) -> Dict[str, np.ndarray]:
+        names = names if names is not None else list(self.columns)
+        return {n: self.columns[n].values() for n in names}
+
+    def decoded_arrays(self, names: Optional[Sequence[str]] = None
+                       ) -> Dict[str, np.ndarray]:
+        names = names if names is not None else list(self.columns)
+        return {n: self.columns[n].decoded() for n in names}
+
+    def stats(self) -> Dict[str, ColumnStats]:
+        return {n: b.stats for n, b in self.columns.items()}
+
+
+def build_partition(index: int, schema: Schema,
+                    data: Dict[str, np.ndarray]) -> Partition:
+    cols = {f.name: make_block(f, data[f.name]) for f in schema.fields}
+    ns = {b.n for b in cols.values()}
+    assert len(ns) <= 1, f"ragged partition: {ns}"
+    return Partition(index, cols)
+
+
+@dataclasses.dataclass
+class Table:
+    """A cached, partitioned, columnar table (shark.cache=true semantics)."""
+    name: str
+    schema: Schema
+    partitions: List[Partition]
+    # Co-partitioning metadata (§3.4): set when the table was DISTRIBUTE'd BY
+    # a key; two tables sharing (key-column, num_partitions) join shuffle-free.
+    distribute_key: Optional[str] = None
+
+    @property
+    def num_rows(self) -> int:
+        return sum(p.num_rows for p in self.partitions)
+
+    @property
+    def num_partitions(self) -> int:
+        return len(self.partitions)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.nbytes for p in self.partitions)
+
+    def column_np(self, name: str) -> np.ndarray:
+        """Materialize a full column, logically decoded (testing / results)."""
+        parts = [p.columns[name].decoded() for p in self.partitions]
+        return np.concatenate(parts) if parts else np.zeros(0)
+
+    def to_dict(self) -> Dict[str, np.ndarray]:
+        return {n: self.column_np(n) for n in self.schema.names}
+
+    def co_partitioned_with(self, other: "Table", key_self: str,
+                            key_other: str) -> bool:
+        return (self.distribute_key == key_self
+                and other.distribute_key == key_other
+                and self.num_partitions == other.num_partitions
+                and self.num_partitions > 0)
+
+
+def hash_key_values(values: np.ndarray) -> np.ndarray:
+    """Deterministic int64 hash of key values, identical across the whole
+    engine so DISTRIBUTE BY tables and shuffle buckets align (§3.4).
+    Strings hash via crc32 of each *distinct* value (vectorized through the
+    dictionary); numerics hash by value."""
+    import zlib
+    v = np.asarray(values)
+    if v.dtype.kind in ("U", "S", "O"):
+        uniq, inv = np.unique(v.astype(np.str_), return_inverse=True)
+        hd = np.array([zlib.crc32(s.encode()) for s in uniq.tolist()],
+                      dtype=np.int64)
+        return hd[inv]
+    if v.dtype.kind == "f":
+        return v.astype(np.int64)
+    return v.astype(np.int64)
+
+
+def hash_partition_arrays(key: np.ndarray, num_partitions: int) -> np.ndarray:
+    """Deterministic hash partitioning used by DISTRIBUTE BY and shuffles.
+
+    Must be identical everywhere so co-partitioned tables align (§3.4)."""
+    k = hash_key_values(key)
+    h = k.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+    h ^= h >> np.uint64(29)
+    return (h % np.uint64(num_partitions)).astype(np.int32)
+
+
+def from_arrays(name: str, schema: Schema, data: Dict[str, np.ndarray],
+                num_partitions: int = 8,
+                distribute_by: Optional[str] = None) -> Table:
+    """Distributed data loading (§3.3): split rows into partitions, each
+    'load task' builds its columnar blocks independently."""
+    n = len(next(iter(data.values()))) if data else 0
+    # STRING columns: encode to global codes first so DISTRIBUTE BY and joins
+    # on strings hash consistently across partitions.
+    norm: Dict[str, np.ndarray] = {}
+    for f in schema.fields:
+        v = np.asarray(data[f.name])
+        norm[f.name] = v
+    if distribute_by is not None:
+        keyv = norm[distribute_by]
+        pids = hash_partition_arrays(np.asarray(keyv), num_partitions)
+        order = np.argsort(pids, kind="stable")
+        bounds = np.searchsorted(pids[order], np.arange(num_partitions + 1))
+        parts = []
+        for i in range(num_partitions):
+            sel = order[bounds[i]: bounds[i + 1]]
+            parts.append(build_partition(
+                i, schema, {k: v[sel] for k, v in norm.items()}))
+        return Table(name, schema, parts, distribute_key=distribute_by)
+    # round-robin contiguous split
+    edges = np.linspace(0, n, num_partitions + 1, dtype=np.int64)
+    parts = []
+    for i in range(num_partitions):
+        lo, hi = int(edges[i]), int(edges[i + 1])
+        parts.append(build_partition(
+            i, schema, {k: v[lo:hi] for k, v in norm.items()}))
+    return Table(name, schema, parts)

@@ -1,0 +1,130 @@
+"""Partial DAG Execution (paper §3.1) — the paper's central contribution.
+
+The query plan DAG is *altered while the query runs*, based on statistics
+gathered at shuffle boundaries:
+
+  §3.1.1 Join optimization — run the pre-shuffle map stages, observe the
+  materialized sizes, then choose: map (broadcast) join if one side is small,
+  else shuffle join.  With a prior that one side will be small (e.g. a
+  filtered dimension table), pre-shuffle ONLY that side first and skip the
+  big table's map stage entirely when the broadcast decision lands (the 3x
+  win of §6.3.2).
+
+  §3.1.2 Degree of parallelism & skew — coalesce many fine-grained map
+  buckets into fewer reduce partitions by greedy bin-packing on observed
+  bucket sizes, equalizing reducer load.
+
+Decisions are pure functions of StageStats, so they are unit-testable and
+the dry-run can replay them.  On the TPU SPMD side the same decision logic
+selects the collective pattern (all-gather of small side vs all-to-all of
+both), which is exactly the collective roofline term the §Perf loop
+minimizes — see repro/parallel and EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+import numpy as np
+
+from .stats import StageStats, choose_num_reducers, greedy_bin_pack
+
+
+class JoinChoice(enum.Enum):
+    SHUFFLE = "shuffle"
+    BROADCAST_LEFT = "broadcast_left"    # left side is small -> broadcast it
+    BROADCAST_RIGHT = "broadcast_right"
+
+
+@dataclasses.dataclass
+class PDEConfig:
+    # broadcast threshold: map-join if one side's observed materialized size
+    # is below this (Hive's default autoconvert threshold era: tens of MB).
+    broadcast_threshold_bytes: float = 32 << 20
+    # target bytes per reduce task when coalescing
+    target_reduce_bytes: float = 64 << 20
+    min_reducers: int = 1
+    max_reducers: int = 4096
+    # skew: a bucket this many times the mean is "skewed"
+    skew_factor: float = 4.0
+
+
+@dataclasses.dataclass
+class JoinDecision:
+    choice: JoinChoice
+    left_bytes: float
+    right_bytes: float
+    reason: str
+
+
+def decide_join(left_stats: Optional[StageStats],
+                right_stats: Optional[StageStats],
+                cfg: PDEConfig = PDEConfig()) -> JoinDecision:
+    """§3.1.1: pick join strategy from observed (or partially observed)
+    map-output sizes.  Either side's stats may be missing when the optimizer
+    scheduled only the likely-small side first."""
+    lb = left_stats.total_output_bytes() if left_stats else float("inf")
+    rb = right_stats.total_output_bytes() if right_stats else float("inf")
+    if lb <= cfg.broadcast_threshold_bytes and lb <= rb:
+        return JoinDecision(JoinChoice.BROADCAST_LEFT, lb, rb,
+                            f"left observed {lb:.0f}B <= "
+                            f"{cfg.broadcast_threshold_bytes:.0f}B threshold")
+    if rb <= cfg.broadcast_threshold_bytes:
+        return JoinDecision(JoinChoice.BROADCAST_RIGHT, lb, rb,
+                            f"right observed {rb:.0f}B <= "
+                            f"{cfg.broadcast_threshold_bytes:.0f}B threshold")
+    return JoinDecision(JoinChoice.SHUFFLE, lb, rb,
+                        "both sides above broadcast threshold")
+
+
+@dataclasses.dataclass
+class ParallelismDecision:
+    num_reducers: int
+    bucket_groups: List[List[int]]
+    skewed_buckets: List[int]
+    reason: str
+
+
+def decide_parallelism(stats: StageStats, num_buckets: int,
+                       cfg: PDEConfig = PDEConfig()) -> ParallelismDecision:
+    """§3.1.2: choose the reduce degree of parallelism at run time by
+    coalescing fine-grained buckets with greedy bin-packing, equalizing
+    coalesced partition sizes."""
+    sizes = stats.output_bytes_per_bucket(num_buckets)
+    n = choose_num_reducers(sizes, cfg.target_reduce_bytes,
+                            cfg.min_reducers,
+                            min(cfg.max_reducers, num_buckets))
+    groups = greedy_bin_pack(sizes.tolist(), n)
+    groups = [g for g in groups if g]  # drop empty bins
+    mean = float(sizes.mean()) if len(sizes) else 0.0
+    skewed = [i for i, s in enumerate(sizes.tolist())
+              if mean > 0 and s > cfg.skew_factor * mean]
+    return ParallelismDecision(
+        len(groups), groups, skewed,
+        f"total {sizes.sum():.0f}B -> {len(groups)} reducers "
+        f"(target {cfg.target_reduce_bytes:.0f}B each), "
+        f"{len(skewed)} skewed buckets bin-packed")
+
+
+def likely_small_side(left_hint_bytes: Optional[float],
+                      right_hint_bytes: Optional[float],
+                      left_filtered: bool, right_filtered: bool) -> Optional[str]:
+    """Static prior used to order pre-shuffle stages (§6.3.2): a side that is
+    initially smaller AND carries a filter predicate is likely to come out
+    small, so schedule its map stage first and hope to skip the other side's
+    pre-shuffle entirely."""
+    def score(hint, filtered):
+        s = 0.0
+        if filtered:
+            s += 1.0
+        if hint is not None:
+            s += 1.0 / (1.0 + hint / (64 << 20))
+        return s
+    ls, rs = score(left_hint_bytes, left_filtered), score(right_hint_bytes, right_filtered)
+    if ls == rs:
+        if left_hint_bytes is not None and right_hint_bytes is not None:
+            return "left" if left_hint_bytes <= right_hint_bytes else "right"
+        return None
+    return "left" if ls > rs else "right"

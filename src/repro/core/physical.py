@@ -1,0 +1,457 @@
+"""Physical plan compilation and PDE-driven execution (paper §2.4, §3).
+
+The logical plan compiles into RDD transformations (not MapReduce jobs).
+Narrow chains (scan -> filter -> project -> partial aggregate -> local limit)
+pipeline inside one task; blocking shuffle boundaries become explicit stages
+the scheduler runs one at a time, which is where Partial DAG Execution
+re-plans:
+
+  * AGGREGATE: map stage materializes partial aggregates per hash bucket
+    while gathering size stats; PDE coalesces buckets into the right number
+    of reducers by greedy bin-packing (§3.1.2).
+  * JOIN (AUTO): the optimizer orders pre-shuffle stages by the static
+    "likely small" prior (§6.3.2), observes materialized sizes, and either
+    broadcasts the small side (map join — the large table is never
+    pre-shuffled) or falls back to a shuffle join with aligned buckets.
+  * Map pruning (§3.5) removes partitions refuted by per-partition stats
+    before ANY task launches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .aggregate import merge_aggregate, partial_aggregate
+from .batch import PartitionBatch
+from .catalog import Catalog
+from .columnar import Table
+from .expr import ColumnVal, Expr, evaluate
+from .joins import broadcast_join, join_local
+from .pde import (JoinChoice, PDEConfig, decide_join, decide_parallelism,
+                  likely_small_side)
+from .plan import (AggFunc, AggregateNode, AggSpec, FilterNode, JoinNode,
+                   JoinStrategy, LimitNode, Node, ProjectNode, ScanNode,
+                   SortNode, optimize, required_columns)
+from .pruning import may_match
+from .rdd import (RDD, MapPartitionsRDD, ShuffleDependency, ShuffledRDD,
+                  TaskContext, ZipPartitionsRDD)
+from .runtime import SharkContext
+from .shuffle import bucket_by_composite, bucket_by_hash, single_bucket
+from .stats import (HeavyHitterAccumulator, SizeAccumulator, StageStats)
+
+
+@dataclasses.dataclass
+class ExecResult:
+    batches: List[PartitionBatch]
+    schema_names: List[str]
+
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        merged = PartitionBatch.concat(self.batches)
+        return merged.decoded()
+
+    @property
+    def num_rows(self) -> int:
+        return sum(b.num_rows for b in self.batches)
+
+
+@dataclasses.dataclass
+class ExecMetrics:
+    """Observable decisions, for tests and EXPERIMENTS.md."""
+    pruned_partitions: int = 0
+    scanned_partitions: int = 0
+    join_decisions: List[str] = dataclasses.field(default_factory=list)
+    reducer_decisions: List[str] = dataclasses.field(default_factory=list)
+    shuffled_bytes: float = 0.0
+    broadcast_bytes: float = 0.0
+
+
+class JoinShuffledRDD(RDD):
+    """Reduce side of a shuffle join: split b fetches bucket-group b from
+    BOTH parents' map outputs and joins locally (reducer-local algorithm
+    choice inside `join_local`)."""
+
+    def __init__(self, ldep: ShuffleDependency, rdep: ShuffleDependency,
+                 bucket_groups: List[List[int]], lkey: str, rkey: str,
+                 how: str = "inner"):
+        self.ldep, self.rdep = ldep, rdep
+        self.bucket_groups = bucket_groups
+        self.lkey, self.rkey, self.how = lkey, rkey, how
+        super().__init__(ldep.parent.ctx, len(bucket_groups), [ldep, rdep])
+
+    def compute(self, split: int, tc: TaskContext) -> PartitionBatch:
+        buckets = self.bucket_groups[split]
+        bm = self.ctx.block_manager
+        lpieces = bm.fetch_shuffle(self.ldep.shuffle_id,
+                                   self.ldep.parent.num_partitions, buckets)
+        rpieces = bm.fetch_shuffle(self.rdep.shuffle_id,
+                                   self.rdep.parent.num_partitions, buckets)
+        l = PartitionBatch.concat(lpieces)
+        r = PartitionBatch.concat(rpieces)
+        return join_local(l, r, self.lkey, self.rkey, self.how)
+
+
+@dataclasses.dataclass
+class Compiled:
+    rdd: RDD
+    names: List[str]
+    table: Optional[Table] = None            # set when rdd is a bare scan
+    scan_filtered: bool = False              # a filter applies at/below scan
+    size_hint: Optional[float] = None        # bytes prior (for join ordering)
+
+
+class Executor:
+    def __init__(self, ctx: SharkContext, catalog: Catalog,
+                 pde: PDEConfig = PDEConfig(), enable_pde: bool = True,
+                 enable_map_pruning: bool = True,
+                 default_shuffle_buckets: int = 64):
+        self.ctx = ctx
+        self.catalog = catalog
+        self.pde = pde
+        self.enable_pde = enable_pde
+        self.enable_map_pruning = enable_map_pruning
+        self.default_shuffle_buckets = default_shuffle_buckets
+        self.metrics = ExecMetrics()
+
+    # ---------------------------------------------------------------- public
+
+    def execute(self, plan: Node) -> ExecResult:
+        self.metrics = ExecMetrics()
+        plan = optimize(plan, self.catalog)
+        compiled = self._compile(plan)
+        batches = self.ctx.scheduler.run_result_stage(compiled.rdd)
+        return ExecResult(batches, compiled.names)
+
+    # ------------------------------------------------------------- internals
+
+    def _compile(self, node: Node) -> Compiled:
+        if isinstance(node, ScanNode):
+            return self._compile_scan(node, pred=None)
+        if isinstance(node, FilterNode):
+            return self._compile_filter(node)
+        if isinstance(node, ProjectNode):
+            return self._compile_project(node)
+        if isinstance(node, AggregateNode):
+            return self._compile_aggregate(node)
+        if isinstance(node, JoinNode):
+            return self._compile_join(node)
+        if isinstance(node, SortNode):
+            return self._compile_sort(node, limit=None)
+        if isinstance(node, LimitNode):
+            return self._compile_limit(node)
+        raise NotImplementedError(type(node))
+
+    def _compile_scan(self, node: ScanNode, pred: Optional[Expr],
+                      columns: Optional[Sequence[str]] = None) -> Compiled:
+        table = self.catalog.get(node.table)
+        selected = list(range(table.num_partitions))
+        if pred is not None and self.enable_map_pruning:
+            kept = []
+            for i in selected:
+                if may_match(pred, table.partitions[i].stats()):
+                    kept.append(i)
+            self.metrics.pruned_partitions += len(selected) - len(kept)
+            selected = kept
+        self.metrics.scanned_partitions += len(selected)
+        cols = list(columns) if columns is not None else list(table.schema.names)
+        rdd = self.ctx.scan(table, cols, selected)
+        return Compiled(rdd, cols, table=table,
+                        scan_filtered=pred is not None,
+                        size_hint=float(table.nbytes))
+
+    def _compile_filter(self, node: FilterNode) -> Compiled:
+        pred = node.pred
+        if isinstance(node.child, ScanNode):
+            child = self._compile_scan(node.child, pred)
+        else:
+            child = self._compile(node.child)
+            child = Compiled(child.rdd, child.names, child.table, True,
+                             child.size_hint)
+
+        def apply_filter(split: int, batch: PartitionBatch) -> PartitionBatch:
+            ctx = {n: batch.col(n) for n in batch.names()}
+            mask = np.asarray(evaluate(pred, ctx).arr)
+            return batch.mask(mask)
+
+        rdd = child.rdd.map_partitions(apply_filter)
+        return Compiled(rdd, child.names, None, True, child.size_hint)
+
+    def _compile_project(self, node: ProjectNode) -> Compiled:
+        child = self._compile(node.child)
+        exprs = node.exprs
+
+        def apply_project(split: int, batch: PartitionBatch) -> PartitionBatch:
+            ctx = {n: batch.col(n) for n in batch.names()}
+            out = {}
+            for name, e in exprs:
+                v = evaluate(e, ctx)
+                arr = v.arr
+                if np.isscalar(arr) or (hasattr(arr, "shape") and arr.shape == ()):
+                    arr = np.full(batch.num_rows, arr)
+                    v = ColumnVal(arr, v.sdict, v.sorted_dict)
+                out[name] = v
+            return PartitionBatch(out)
+
+        rdd = child.rdd.map_partitions(apply_project)
+        return Compiled(rdd, [n for n, _ in exprs], None, child.scan_filtered,
+                        child.size_hint)
+
+    # -- aggregation ---------------------------------------------------------
+
+    def _compile_aggregate(self, node: AggregateNode) -> Compiled:
+        child = self._compile(node.child)
+        group_cols = node.group_by
+        aggs = node.aggs
+        names = group_cols + [a.out_name for a in aggs]
+
+        def map_side(split: int, batch: PartitionBatch) -> PartitionBatch:
+            return partial_aggregate(batch, group_cols, aggs)
+
+        map_rdd = child.rdd.map_partitions(map_side).map_partitions(
+            lambda s, b: b.decode_strings())
+
+        if not group_cols:
+            partitioner = single_bucket()
+            num_buckets = 1
+        else:
+            num_buckets = max(self.default_shuffle_buckets,
+                              map_rdd.num_partitions)
+            partitioner = bucket_by_composite(group_cols, num_buckets)
+
+        dep = ShuffleDependency(
+            map_rdd, num_buckets, partitioner,
+            accumulators=lambda: [SizeAccumulator(num_buckets)] + (
+                [HeavyHitterAccumulator(group_cols[0])] if group_cols else []))
+
+        stats = self.ctx.scheduler.run_map_stage(dep)
+        self.metrics.shuffled_bytes += stats.total_output_bytes()
+
+        if self.enable_pde and group_cols:
+            decision = decide_parallelism(stats, num_buckets, self.pde)
+            self.metrics.reducer_decisions.append(decision.reason)
+            groups = decision.bucket_groups
+        else:
+            groups = [[b] for b in range(num_buckets)]
+
+        reduce_fn = lambda split, b: merge_aggregate(b, group_cols, aggs)
+        rdd = ShuffledRDD(dep, groups, reduce_fn)
+        return Compiled(rdd, names)
+
+    # -- joins ----------------------------------------------------------------
+
+    def _compile_join(self, node: JoinNode) -> Compiled:
+        left = self._compile(node.left)
+        right = self._compile(node.right)
+        lkey, rkey = node.left_key, node.right_key
+        names = left.names + [n if n not in left.names else n + "_r"
+                              for n in right.names]
+
+        # §3.4 co-partitioned tables: zip corresponding partitions, no shuffle
+        if (node.strategy in (JoinStrategy.AUTO, JoinStrategy.COPARTITION)
+                and left.table is not None and right.table is not None
+                and left.table.co_partitioned_with(right.table, lkey, rkey)):
+            self.metrics.join_decisions.append("copartition: zip, no shuffle")
+            rdd = ZipPartitionsRDD(
+                left.rdd, right.rdd,
+                lambda s, l, r: join_local(l, r, lkey, rkey, node.how))
+            return Compiled(rdd, names)
+
+        if node.strategy == JoinStrategy.BROADCAST:
+            return self._broadcast(left, right, lkey, rkey, node.how,
+                                   "planner-forced broadcast", names,
+                                   broadcast_side="right")
+        if node.strategy == JoinStrategy.SHUFFLE or not self.enable_pde:
+            return self._shuffle_join(left, right, lkey, rkey, node.how,
+                                      names, note="planner-forced shuffle")
+
+        # ---- AUTO: Partial DAG Execution (§3.1.1 + §6.3.2) ----
+        num_buckets = max(self.default_shuffle_buckets,
+                          left.rdd.num_partitions,
+                          right.rdd.num_partitions)
+        first = likely_small_side(left.size_hint, right.size_hint,
+                                  left.scan_filtered, right.scan_filtered)
+        first = first or "right"
+        a, b = (left, right) if first == "left" else (right, left)
+        akey, bkey = (lkey, rkey) if first == "left" else (rkey, lkey)
+
+        adep = ShuffleDependency(
+            a.rdd.map_partitions(lambda s, x: x.decode_strings()),
+            num_buckets, bucket_by_hash(akey, num_buckets),
+            accumulators=lambda: [SizeAccumulator(num_buckets),
+                                  HeavyHitterAccumulator(akey)])
+        astats = self.ctx.scheduler.run_map_stage(adep)
+        decision = decide_join(astats, None, self.pde)
+        # broadcasting the non-preserved side of an outer join is invalid
+        broadcast_ok = node.how == "inner" or (node.how == "left"
+                                               and first == "right")
+        if decision.choice == JoinChoice.BROADCAST_LEFT and broadcast_ok:
+            # observed small: broadcast `a`, never pre-shuffle `b` (the 3x
+            # win — the large table sees exactly one wave of map tasks).
+            self.metrics.join_decisions.append(
+                f"PDE map-join: broadcast {'left' if first == 'left' else 'right'} "
+                f"({decision.left_bytes:.0f}B observed); large side not shuffled")
+            small = PartitionBatch.concat(
+                self.ctx.block_manager.fetch_shuffle(
+                    adep.shuffle_id, adep.parent.num_partitions,
+                    list(range(num_buckets))))
+            self.metrics.broadcast_bytes += small.nbytes
+            if first == "left":
+                # inner join is symmetric; emit left-major column order
+                rdd = b.rdd.map_partitions(
+                    lambda s, big: _reorder(join_local(
+                        small, big, akey, bkey, node.how), names))
+            else:
+                rdd = b.rdd.map_partitions(
+                    lambda s, big: _reorder(join_local(
+                        big, small, bkey, akey, node.how), names))
+            return Compiled(rdd, names)
+
+        # not small: pre-shuffle the other side too, aligned buckets
+        self.metrics.join_decisions.append(
+            f"PDE shuffle-join: first side observed {decision.left_bytes:.0f}B "
+            f"> threshold; shuffling both")
+        self.metrics.shuffled_bytes += astats.total_output_bytes()
+        bdep = ShuffleDependency(
+            b.rdd.map_partitions(lambda s, x: x.decode_strings()),
+            num_buckets, bucket_by_hash(bkey, num_buckets),
+            accumulators=lambda: [SizeAccumulator(num_buckets)])
+        bstats = self.ctx.scheduler.run_map_stage(bdep)
+        self.metrics.shuffled_bytes += bstats.total_output_bytes()
+
+        sizes = (astats.output_bytes_per_bucket(num_buckets)
+                 + bstats.output_bytes_per_bucket(num_buckets))
+        pdecision = decide_parallelism(
+            _stats_from_sizes(sizes), num_buckets, self.pde)
+        self.metrics.reducer_decisions.append(pdecision.reason)
+        groups = pdecision.bucket_groups
+
+        ldep, rdep = (adep, bdep) if first == "left" else (bdep, adep)
+        rdd = JoinShuffledRDD(ldep, rdep, groups, lkey, rkey, node.how)
+        return Compiled(rdd, names)
+
+    def _broadcast(self, left: Compiled, right: Compiled, lkey: str,
+                   rkey: str, how: str, note: str, names: List[str],
+                   broadcast_side: str) -> Compiled:
+        small, big = (right, left) if broadcast_side == "right" else (left, right)
+        skey, bkey = (rkey, lkey) if broadcast_side == "right" else (lkey, rkey)
+        self.metrics.join_decisions.append(note)
+        collected = PartitionBatch.concat(
+            self.ctx.scheduler.run_result_stage(
+                small.rdd.map_partitions(lambda s, x: x.decode_strings())))
+        self.metrics.broadcast_bytes += collected.nbytes
+        if broadcast_side == "right":
+            rdd = big.rdd.map_partitions(
+                lambda s, part: _reorder(
+                    broadcast_join(part, collected, bkey, skey, how), names))
+        else:
+            rdd = big.rdd.map_partitions(
+                lambda s, part: _reorder(
+                    join_local(collected, part, skey, bkey, how), names))
+        return Compiled(rdd, names)
+
+    def _shuffle_join(self, left: Compiled, right: Compiled, lkey: str,
+                      rkey: str, how: str, names: List[str],
+                      note: str) -> Compiled:
+        num_buckets = max(self.default_shuffle_buckets,
+                          left.rdd.num_partitions, right.rdd.num_partitions)
+        self.metrics.join_decisions.append(note)
+        ldep = ShuffleDependency(
+            left.rdd.map_partitions(lambda s, x: x.decode_strings()),
+            num_buckets, bucket_by_hash(lkey, num_buckets),
+            accumulators=lambda: [SizeAccumulator(num_buckets)])
+        rdep = ShuffleDependency(
+            right.rdd.map_partitions(lambda s, x: x.decode_strings()),
+            num_buckets, bucket_by_hash(rkey, num_buckets),
+            accumulators=lambda: [SizeAccumulator(num_buckets)])
+        ls = self.ctx.scheduler.run_map_stage(ldep)
+        rs = self.ctx.scheduler.run_map_stage(rdep)
+        self.metrics.shuffled_bytes += (ls.total_output_bytes()
+                                        + rs.total_output_bytes())
+        groups = [[b] for b in range(num_buckets)]
+        rdd = JoinShuffledRDD(ldep, rdep, groups, lkey, rkey, how)
+        return Compiled(rdd, names)
+
+    # -- sort / limit ----------------------------------------------------------
+
+    def _compile_sort(self, node: SortNode, limit: Optional[int]) -> Compiled:
+        child = self._compile(node.child)
+        keys = node.keys
+
+        def local_sort(split: int, batch: PartitionBatch) -> PartitionBatch:
+            idx = _sort_indices(batch, keys)
+            if limit is not None:
+                idx = idx[:limit]
+            return batch.take(idx)
+
+        # per-partition top-k, then single merge task (ORDER BY ... LIMIT)
+        map_rdd = child.rdd.map_partitions(local_sort).map_partitions(
+            lambda s, b: b.decode_strings())
+        dep = ShuffleDependency(map_rdd, 1, single_bucket(),
+                                accumulators=lambda: [SizeAccumulator(1)])
+        self.ctx.scheduler.run_map_stage(dep)
+
+        def final(split: int, batch: PartitionBatch) -> PartitionBatch:
+            idx = _sort_indices(batch, keys)
+            if limit is not None:
+                idx = idx[:limit]
+            return batch.take(idx)
+
+        rdd = ShuffledRDD(dep, [[0]], final)
+        return Compiled(rdd, child.names)
+
+    def _compile_limit(self, node: LimitNode) -> Compiled:
+        if isinstance(node.child, SortNode):
+            return self._compile_sort(node.child, node.n)
+        child = self._compile(node.child)
+        n = node.n
+
+        # §2.4: LIMIT pushed to individual partitions, final limit at collect
+        head_rdd = child.rdd.map_partitions(lambda s, b: b.head(n))
+
+        # wrap as a one-partition RDD via shuffle to a single bucket
+        dep = ShuffleDependency(
+            head_rdd.map_partitions(lambda s, b: b.decode_strings()), 1,
+            single_bucket())
+        self.ctx.scheduler.run_map_stage(dep)
+        rdd = ShuffledRDD(dep, [[0]], lambda s, b: b.head(n))
+        return Compiled(rdd, child.names)
+
+
+def _reorder(batch: PartitionBatch, names: List[str]) -> PartitionBatch:
+    cols = {}
+    for n in names:
+        if n in batch.cols:
+            cols[n] = batch.cols[n]
+    for n, v in batch.cols.items():
+        if n not in cols:
+            cols[n] = v
+    return PartitionBatch(cols)
+
+
+def _sort_indices(batch: PartitionBatch, keys: List[Tuple[str, bool]]
+                  ) -> np.ndarray:
+    arrays = []
+    for name, desc in reversed(keys):
+        v = batch.col(name)
+        a = v.decoded() if v.is_string else np.asarray(v.arr)
+        if desc:
+            if a.dtype.kind in ("U", "S"):
+                # lexsort has no descending: sort by negated rank
+                _, inv = np.unique(a, return_inverse=True)
+                a = -inv
+            else:
+                a = -a
+        arrays.append(a)
+    return np.lexsort(arrays) if arrays else np.arange(batch.num_rows)
+
+
+def _stats_from_sizes(sizes: np.ndarray) -> StageStats:
+    from .stats import TaskStats, encode_size
+    st = StageStats(-1)
+    st.add(TaskStats(0, -1, {
+        "sizes": {"codes": np.array([encode_size(int(s)) for s in sizes],
+                                    np.uint8),
+                  "records": np.zeros(len(sizes), np.int64)}}))
+    return st

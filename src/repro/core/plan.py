@@ -1,0 +1,338 @@
+"""Logical query plans and rule-based optimization (paper §2.4).
+
+Shark parses HiveQL into an AST, builds a logical plan, applies basic logical
+optimization (predicate pushdown), then — unlike Hive, which emits MapReduce
+stages — applies additional rule-based optimizations (e.g. pushing LIMIT down
+to individual partitions) and emits a physical plan of RDD transformations.
+
+We reproduce that pipeline: `optimize()` runs predicate pushdown, filter
+merging, column pruning, and limit pushdown; `physical.compile_plan` then
+turns the tree into an RDD lineage graph whose shuffle boundaries are the PDE
+re-optimization points.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .expr import (And, Col, Expr, Func, Lit, conjoin, infer_dtype,
+                   split_conjuncts)
+from .types import DType, Field, Schema
+
+
+class AggFunc(enum.Enum):
+    SUM = "sum"
+    COUNT = "count"
+    AVG = "avg"
+    MIN = "min"
+    MAX = "max"
+    COUNT_DISTINCT = "count_distinct"
+
+
+@dataclasses.dataclass(eq=False)
+class AggSpec:
+    out_name: str
+    func: AggFunc
+    arg: Optional[Expr]  # None for COUNT(*)
+
+    def __repr__(self):
+        a = "*" if self.arg is None else repr(self.arg)
+        return f"{self.func.value}({a}) AS {self.out_name}"
+
+
+class Node:
+    def children(self) -> Sequence["Node"]:
+        return ()
+
+    def schema(self, catalog) -> Schema:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(eq=False)
+class ScanNode(Node):
+    table: str
+
+    def schema(self, catalog) -> Schema:
+        return catalog.get(self.table).schema
+
+    def __repr__(self): return f"Scan({self.table})"
+
+
+@dataclasses.dataclass(eq=False)
+class FilterNode(Node):
+    child: Node
+    pred: Expr
+
+    def children(self): return (self.child,)
+    def schema(self, catalog): return self.child.schema(catalog)
+    def __repr__(self): return f"Filter({self.pred})"
+
+
+@dataclasses.dataclass(eq=False)
+class ProjectNode(Node):
+    child: Node
+    exprs: List[Tuple[str, Expr]]  # (output name, expression)
+
+    def children(self): return (self.child,)
+
+    def schema(self, catalog) -> Schema:
+        base = self.child.schema(catalog)
+        return Schema(tuple(Field(n, infer_dtype(e, base)) for n, e in self.exprs))
+
+    def __repr__(self):
+        return "Project(" + ", ".join(f"{e} AS {n}" for n, e in self.exprs) + ")"
+
+
+@dataclasses.dataclass(eq=False)
+class AggregateNode(Node):
+    child: Node
+    group_by: List[str]          # column names (pre-projected if exprs)
+    aggs: List[AggSpec]
+
+    def children(self): return (self.child,)
+
+    def schema(self, catalog) -> Schema:
+        base = self.child.schema(catalog)
+        fields = [base.field(g) for g in self.group_by]
+        for a in self.aggs:
+            if a.func == AggFunc.COUNT or a.func == AggFunc.COUNT_DISTINCT:
+                dt = DType.INT64
+            elif a.func == AggFunc.AVG:
+                dt = DType.FLOAT64
+            elif a.arg is not None:
+                dt = infer_dtype(a.arg, base)
+                if a.func == AggFunc.SUM and dt in (DType.INT32,):
+                    dt = DType.INT64
+            else:
+                dt = DType.INT64
+            fields.append(Field(a.out_name, dt))
+        return Schema(tuple(fields))
+
+    def __repr__(self):
+        return f"Aggregate(by={self.group_by}, aggs={self.aggs})"
+
+
+class JoinStrategy(enum.Enum):
+    AUTO = "auto"            # decided at run time by PDE (§3.1.1)
+    SHUFFLE = "shuffle"
+    BROADCAST = "broadcast"  # map join
+    COPARTITION = "copartition"
+
+
+@dataclasses.dataclass(eq=False)
+class JoinNode(Node):
+    left: Node
+    right: Node
+    left_key: str
+    right_key: str
+    how: str = "inner"
+    strategy: JoinStrategy = JoinStrategy.AUTO
+
+    def children(self): return (self.left, self.right)
+
+    def schema(self, catalog) -> Schema:
+        return self.left.schema(catalog).concat(self.right.schema(catalog))
+
+    def __repr__(self):
+        return (f"Join({self.left_key}={self.right_key}, {self.how}, "
+                f"{self.strategy.value})")
+
+
+@dataclasses.dataclass(eq=False)
+class SortNode(Node):
+    child: Node
+    keys: List[Tuple[str, bool]]  # (column, descending)
+
+    def children(self): return (self.child,)
+    def schema(self, catalog): return self.child.schema(catalog)
+    def __repr__(self): return f"Sort({self.keys})"
+
+
+@dataclasses.dataclass(eq=False)
+class LimitNode(Node):
+    child: Node
+    n: int
+    # set by the optimizer: per-partition pre-limit pushed below the collect
+    pushed: bool = False
+
+    def children(self): return (self.child,)
+    def schema(self, catalog): return self.child.schema(catalog)
+    def __repr__(self): return f"Limit({self.n}, pushed={self.pushed})"
+
+
+# ---------------------------------------------------------------------------
+# Rule-based optimizer
+# ---------------------------------------------------------------------------
+
+
+def optimize(node: Node, catalog) -> Node:
+    node = push_down_filters(node)
+    node = merge_filters(node)
+    node = push_down_limits(node)
+    return node
+
+
+def _substitute(e: Expr, mapping: Dict[str, Expr]) -> Expr:
+    """Rewrite column refs through a projection (for pushdown)."""
+    if isinstance(e, Col):
+        return mapping.get(e.name, e)
+    import copy
+    clone = copy.copy(e)
+    if hasattr(clone, "left"):
+        clone.left = _substitute(clone.left, mapping)
+    if hasattr(clone, "right"):
+        clone.right = _substitute(clone.right, mapping)
+    if hasattr(clone, "child") and isinstance(getattr(clone, "child", None), Expr):
+        clone.child = _substitute(clone.child, mapping)
+    if hasattr(clone, "args"):
+        clone.args = tuple(_substitute(a, mapping) for a in clone.args)
+    return clone
+
+
+def push_down_filters(node: Node) -> Node:
+    """Predicate pushdown: move filters below projects and into join sides."""
+    if isinstance(node, FilterNode):
+        child = node.child
+        if isinstance(child, ProjectNode):
+            mapping = {n: e for n, e in child.exprs}
+            # only push if every referenced output column maps to a pure expr
+            if all(c in mapping for c in node.pred.columns()):
+                new_pred = _substitute(node.pred, mapping)
+                return push_down_filters(
+                    ProjectNode(FilterNode(child.child, new_pred), child.exprs))
+        if isinstance(child, FilterNode):
+            merged = FilterNode(child.child, And(child.pred, node.pred))
+            return push_down_filters(merged)
+        if isinstance(child, JoinNode):
+            l_schema_cols = set(_available_columns(child.left))
+            r_schema_cols = set(_available_columns(child.right))
+            keep, left_preds, right_preds = [], [], []
+            for c in split_conjuncts(node.pred):
+                cols = set(c.columns())
+                if cols <= l_schema_cols:
+                    left_preds.append(c)
+                elif cols <= r_schema_cols:
+                    right_preds.append(c)
+                else:
+                    keep.append(c)
+            new_left = child.left
+            new_right = child.right
+            if left_preds:
+                new_left = FilterNode(new_left, conjoin(left_preds))
+            if right_preds:
+                new_right = FilterNode(new_right, conjoin(right_preds))
+            new_join = JoinNode(push_down_filters(new_left),
+                                push_down_filters(new_right),
+                                child.left_key, child.right_key, child.how,
+                                child.strategy)
+            if keep:
+                return FilterNode(new_join, conjoin(keep))
+            return new_join
+        return FilterNode(push_down_filters(child), node.pred)
+    # generic recursion
+    for attr in ("child", "left", "right"):
+        if hasattr(node, attr):
+            setattr(node, attr, push_down_filters(getattr(node, attr)))
+    return node
+
+
+def _available_columns(node: Node) -> List[str]:
+    if isinstance(node, ScanNode):
+        return ["*"]  # unknown without catalog; resolved later
+    if isinstance(node, ProjectNode):
+        return [n for n, _ in node.exprs]
+    if isinstance(node, AggregateNode):
+        return node.group_by + [a.out_name for a in node.aggs]
+    cols: List[str] = []
+    for ch in node.children():
+        cols.extend(_available_columns(ch))
+    return cols
+
+
+def merge_filters(node: Node) -> Node:
+    if isinstance(node, FilterNode) and isinstance(node.child, FilterNode):
+        return merge_filters(
+            FilterNode(node.child.child, And(node.child.pred, node.pred)))
+    for attr in ("child", "left", "right"):
+        if hasattr(node, attr):
+            setattr(node, attr, merge_filters(getattr(node, attr)))
+    return node
+
+
+def push_down_limits(node: Node) -> Node:
+    """Paper §2.4: push LIMIT down to individual partitions.  Each partition
+    task emits at most n rows; the collect stage applies the final limit."""
+    if isinstance(node, LimitNode):
+        child = node.child
+        if isinstance(child, (ScanNode, FilterNode, ProjectNode)):
+            node.pushed = True
+    for attr in ("child", "left", "right"):
+        if hasattr(node, attr):
+            setattr(node, attr, push_down_limits(getattr(node, attr)))
+    return node
+
+
+def required_columns(node: Node, catalog, want: Optional[set] = None) -> Dict[str, set]:
+    """Column pruning analysis: per base table, which columns are needed.
+    The physical scan only decodes these blocks (columnar advantage)."""
+    out: Dict[str, set] = {}
+
+    def walk(n: Node, needed: Optional[set]):
+        if isinstance(n, ScanNode):
+            schema = n.schema(catalog)
+            cols = set(schema.names) if needed is None else (needed & set(schema.names))
+            out.setdefault(n.table, set()).update(cols)
+            return
+        if isinstance(n, FilterNode):
+            sub = None if needed is None else needed | set(n.pred.columns())
+            walk(n.child, sub)
+            return
+        if isinstance(n, ProjectNode):
+            sub: set = set()
+            for name, e in n.exprs:
+                if needed is None or name in needed:
+                    sub.update(e.columns())
+            walk(n.child, sub)
+            return
+        if isinstance(n, AggregateNode):
+            sub = set(n.group_by)
+            for a in n.aggs:
+                if a.arg is not None:
+                    sub.update(a.arg.columns())
+            walk(n.child, sub)
+            return
+        if isinstance(n, JoinNode):
+            lcols = set(_schema_names_safe(n.left, catalog))
+            rcols = set(_schema_names_safe(n.right, catalog))
+            need = needed
+            lneed = None if need is None else ((need & lcols) | {n.left_key})
+            rneed = None if need is None else ((need & rcols) | {n.right_key})
+            walk(n.left, lneed)
+            walk(n.right, rneed)
+            return
+        if isinstance(n, SortNode):
+            sub = None if needed is None else needed | {k for k, _ in n.keys}
+            walk(n.child, sub)
+            return
+        for ch in n.children():
+            walk(ch, needed)
+
+    walk(node, want)
+    return out
+
+
+def _schema_names_safe(node: Node, catalog) -> Tuple[str, ...]:
+    try:
+        return node.schema(catalog).names
+    except Exception:
+        return ()
+
+
+def explain(node: Node, indent: int = 0) -> str:
+    pad = "  " * indent
+    lines = [pad + repr(node)]
+    for ch in node.children():
+        lines.append(explain(ch, indent + 1))
+    return "\n".join(lines)

@@ -1,0 +1,411 @@
+"""Fault-tolerant task scheduler (paper §2.3, §2.4, §3.1, §5, §7).
+
+This is the "cluster" layer: logical workers with block stores, per-partition
+tasks, memory-based shuffle, lineage recovery, speculative execution, and the
+stage-by-stage execution hooks that Partial DAG Execution needs.
+
+Fault-tolerance guarantees reproduced (paper §2.3):
+  1. loss of any set of workers is tolerated — lost tasks re-execute and lost
+     RDD partitions / shuffle outputs recompute from lineage, mid-query;
+  2. recovery is parallelized across surviving workers;
+  3. deterministic tasks allow speculative backup copies for stragglers;
+  4. the same machinery covers SQL and ML stages (they share one lineage
+     graph).
+
+The scheduler executes *stages* delimited by shuffle boundaries.  Map stages
+materialize their output in worker memory (memory-based shuffle, §5) while
+collecting PDE statistics; the master aggregates those and may re-plan before
+launching the next stage (§3.1) — the caller drives this via
+`run_map_stage` / `run_result_stage`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .batch import PartitionBatch
+from .rdd import (RDD, ShuffleDependency, ShuffledRDD, TaskContext)
+from .stats import Accumulator, StageStats, TaskStats
+
+_stage_counter = itertools.count()
+
+
+class FetchFailed(Exception):
+    """A reduce task could not fetch some map outputs (worker lost them)."""
+
+    def __init__(self, shuffle_id: int, missing_maps: List[int]):
+        super().__init__(f"shuffle {shuffle_id} missing maps {missing_maps}")
+        self.shuffle_id = shuffle_id
+        self.missing_maps = missing_maps
+
+
+class WorkerLost(Exception):
+    pass
+
+
+class BlockManager:
+    """Cluster-wide registry of materialized blocks and which worker holds
+    them.  Killing a worker drops every block it holds — cached partitions
+    AND shuffle map outputs — exactly the failure surface of the paper."""
+
+    def __init__(self):
+        self.lock = threading.RLock()
+        # ("part", rdd_id, split) -> (worker, batch)
+        # ("shuf", shuffle_id, map_split, bucket) -> (worker, batch)
+        self.blocks: Dict[Tuple, Tuple[int, PartitionBatch]] = {}
+        self.by_worker: Dict[int, Set[Tuple]] = {}
+
+    def _put(self, key: Tuple, worker: int, batch: PartitionBatch) -> None:
+        with self.lock:
+            self.blocks[key] = (worker, batch)
+            self.by_worker.setdefault(worker, set()).add(key)
+
+    def put_partition(self, rdd_id: int, split: int, batch: PartitionBatch,
+                      worker: int) -> None:
+        self._put(("part", rdd_id, split), worker, batch)
+
+    def get_partition(self, rdd_id: int, split: int) -> Optional[PartitionBatch]:
+        with self.lock:
+            hit = self.blocks.get(("part", rdd_id, split))
+            return hit[1] if hit else None
+
+    def put_shuffle(self, shuffle_id: int, map_split: int, bucket: int,
+                    batch: PartitionBatch, worker: int) -> None:
+        self._put(("shuf", shuffle_id, map_split, bucket), worker, batch)
+
+    def has_map_output(self, shuffle_id: int, map_split: int) -> bool:
+        with self.lock:
+            return any(k[0] == "shuf" and k[1] == shuffle_id and k[2] == map_split
+                       for k in self.blocks)
+
+    def fetch_shuffle(self, shuffle_id: int, num_maps: int,
+                      buckets: Sequence[int]) -> List[PartitionBatch]:
+        """All pieces of `buckets` from every map task; FetchFailed lists the
+        missing map splits so the scheduler can recompute exactly those."""
+        pieces, missing = [], set()
+        with self.lock:
+            for m in range(num_maps):
+                for b in buckets:
+                    hit = self.blocks.get(("shuf", shuffle_id, m, b))
+                    if hit is None:
+                        missing.add(m)
+                    else:
+                        pieces.append(hit[1])
+        if missing:
+            raise FetchFailed(shuffle_id, sorted(missing))
+        return pieces
+
+    def drop_worker(self, worker: int) -> int:
+        with self.lock:
+            keys = self.by_worker.pop(worker, set())
+            for k in keys:
+                self.blocks.pop(k, None)
+            return len(keys)
+
+    def nbytes(self) -> int:
+        with self.lock:
+            return sum(b.nbytes for _, b in self.blocks.values())
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    split: int
+    attempt: int
+    worker: int
+    started: float
+    future: Optional[Future] = None
+    speculative: bool = False
+
+
+class Scheduler:
+    """Master: assigns tasks to alive workers, retries on failure, launches
+    speculative backups, and rebuilds lost shuffle output from lineage."""
+
+    def __init__(self, ctx: "SharkContext", num_workers: int = 8,
+                 max_threads: int = 8, speculation: bool = True,
+                 speculation_multiplier: float = 4.0,
+                 speculation_quantile: float = 0.5,
+                 max_stage_retries: int = 6,
+                 task_launch_overhead_s: float = 0.0):
+        self.ctx = ctx
+        self.num_workers = num_workers
+        self.alive: Set[int] = set(range(num_workers))
+        self.pool = ThreadPoolExecutor(max_workers=max_threads)
+        self.speculation = speculation
+        self.speculation_multiplier = speculation_multiplier
+        self.speculation_quantile = speculation_quantile
+        self.max_stage_retries = max_stage_retries
+        self.task_launch_overhead_s = task_launch_overhead_s
+        self.lock = threading.RLock()
+        self._rr = itertools.count()
+        # metrics
+        self.tasks_launched = 0
+        self.tasks_speculated = 0
+        self.tasks_recomputed = 0
+        self.stage_stats: Dict[int, StageStats] = {}
+
+    # -- cluster membership --------------------------------------------------
+
+    def kill_worker(self, worker: int) -> int:
+        """Simulate a node failure: the worker leaves and all its blocks
+        (cached partitions + shuffle outputs) vanish."""
+        with self.lock:
+            self.alive.discard(worker)
+        return self.ctx.block_manager.drop_worker(worker)
+
+    def add_worker(self) -> int:
+        """Elasticity (§7.2): a new worker joins and immediately receives
+        pending work."""
+        with self.lock:
+            w = self.num_workers
+            self.num_workers += 1
+            self.alive.add(w)
+            return w
+
+    def _pick_worker(self, exclude: Optional[Set[int]] = None) -> int:
+        with self.lock:
+            pool = [w for w in sorted(self.alive)
+                    if not exclude or w not in exclude]
+            if not pool:
+                pool = sorted(self.alive)
+            if not pool:
+                raise RuntimeError("no alive workers")
+            return pool[next(self._rr) % len(pool)]
+
+    # -- generic stage runner with retry + speculation ------------------------
+
+    def _run_tasks(self, stage_id: int, splits: Sequence[int],
+                   run_one: Callable[[int, TaskContext], Any]) -> Dict[int, Any]:
+        """Run one task per split with failure retry and speculation; returns
+        split -> result.  `run_one` must be deterministic and idempotent."""
+        results: Dict[int, Any] = {}
+        pending: Set[int] = set(splits)
+        durations: List[float] = []
+        attempt_counter: Dict[int, int] = {s: 0 for s in splits}
+
+        def submit(split: int, exclude: Optional[Set[int]] = None,
+                   speculative: bool = False) -> TaskRecord:
+            worker = self._pick_worker(exclude)
+            tc = TaskContext(worker, stage_id, split,
+                             attempt_counter[split])
+            attempt_counter[split] += 1
+            rec = TaskRecord(split, tc.attempt, worker, time.monotonic(),
+                             speculative=speculative)
+
+            def body():
+                if self.task_launch_overhead_s:
+                    time.sleep(self.task_launch_overhead_s)
+                with self.lock:
+                    if worker not in self.alive:
+                        raise WorkerLost(f"worker {worker} is dead")
+                out = run_one(split, tc)
+                with self.lock:
+                    if worker not in self.alive:
+                        # results computed on a dead worker are discarded
+                        raise WorkerLost(f"worker {worker} died mid-task")
+                return out
+
+            with self.lock:
+                self.tasks_launched += 1
+                if speculative:
+                    self.tasks_speculated += 1
+            rec.future = self.pool.submit(body)
+            return rec
+
+        running: Dict[int, List[TaskRecord]] = {}
+        for s in splits:
+            running[s] = [submit(s)]
+
+        while pending:
+            all_futs = {rec.future: (s, rec)
+                        for s, recs in running.items() for rec in recs
+                        if rec.future is not None and s in pending}
+            if not all_futs:
+                raise RuntimeError("scheduler deadlock: no running tasks")
+            done, _ = wait(list(all_futs), timeout=0.05,
+                           return_when=FIRST_COMPLETED)
+            now = time.monotonic()
+            for fut in done:
+                split, rec = all_futs[fut]
+                if split not in pending:
+                    continue
+                try:
+                    res = fut.result()
+                except FetchFailed:
+                    raise  # stage-level recovery (lineage) handled above us
+                except Exception:
+                    # task failed (e.g. worker death): retry elsewhere
+                    if attempt_counter[split] > 8:
+                        raise
+                    running[split].append(
+                        submit(split, exclude={rec.worker}))
+                    continue
+                results[split] = res
+                pending.discard(split)
+                durations.append(now - rec.started)
+            # speculation: if a task runs far beyond the median of completed
+            # tasks, launch a backup copy on another worker (§2.3 item 3)
+            if self.speculation and durations and pending:
+                frac_done = len(durations) / max(len(splits), 1)
+                if frac_done >= self.speculation_quantile:
+                    med = float(np.median(durations))
+                    threshold = max(self.speculation_multiplier * med, 0.05)
+                    for split in list(pending):
+                        recs = running[split]
+                        if any(r.speculative for r in recs):
+                            continue
+                        oldest = min(r.started for r in recs)
+                        if now - oldest > threshold:
+                            workers = {r.worker for r in recs}
+                            running[split].append(
+                                submit(split, exclude=workers,
+                                       speculative=True))
+        return results
+
+    # -- map stages (shuffle writes + PDE statistics) -------------------------
+
+    def run_map_stage(self, dep: ShuffleDependency) -> StageStats:
+        """Materialize the map side of a shuffle in worker memory, gathering
+        PDE statistics while doing so.  Returns the aggregated stats the
+        optimizer uses to re-plan the downstream DAG (§3.1)."""
+        stage_id = next(_stage_counter)
+        parent = dep.parent
+        stats = StageStats(stage_id)
+        stats_lock = threading.Lock()
+
+        def run_one(split: int, tc: TaskContext):
+            batch = parent.iterator(split, tc)
+            bucket_of = dep.partitioner(batch)
+            accs = dep.accumulators()
+            order = np.argsort(bucket_of, kind="stable")
+            sorted_buckets = np.asarray(bucket_of)[order]
+            bounds = np.searchsorted(sorted_buckets,
+                                     np.arange(dep.num_buckets + 1))
+            for b in range(dep.num_buckets):
+                sel = order[bounds[b]: bounds[b + 1]]
+                piece = batch.take(sel)
+                if dep.map_side_combine is not None:
+                    piece = dep.map_side_combine(piece)
+                for acc in accs:
+                    acc.update(b, piece)
+                self.ctx.block_manager.put_shuffle(
+                    dep.shuffle_id, split, b, piece, tc.worker_id)
+            ts = TaskStats(split, stage_id,
+                           {a.name: a.payload() for a in accs})
+            with stats_lock:
+                stats.add(ts)
+            return True
+
+        self._run_tasks(stage_id, range(parent.num_partitions), run_one)
+        self.stage_stats[stage_id] = stats
+        return stats
+
+    def _recover_map_outputs(self, dep: ShuffleDependency,
+                             missing: List[int]) -> None:
+        """Lineage recovery: recompute only the lost map tasks, in parallel
+        across surviving workers (§2.3 items 1–2)."""
+        stage_id = next(_stage_counter)
+        parent = dep.parent
+
+        def run_one(split: int, tc: TaskContext):
+            batch = parent.iterator(split, tc)
+            bucket_of = dep.partitioner(batch)
+            order = np.argsort(bucket_of, kind="stable")
+            sorted_buckets = np.asarray(bucket_of)[order]
+            bounds = np.searchsorted(sorted_buckets,
+                                     np.arange(dep.num_buckets + 1))
+            for b in range(dep.num_buckets):
+                sel = order[bounds[b]: bounds[b + 1]]
+                piece = batch.take(sel)
+                if dep.map_side_combine is not None:
+                    piece = dep.map_side_combine(piece)
+                self.ctx.block_manager.put_shuffle(
+                    dep.shuffle_id, split, b, piece, tc.worker_id)
+            return True
+
+        with self.lock:
+            self.tasks_recomputed += len(missing)
+        self._run_tasks(stage_id, missing, run_one)
+
+    # -- result stages --------------------------------------------------------
+
+    def run_result_stage(self, rdd: RDD) -> List[PartitionBatch]:
+        """Compute the final RDD's partitions, transparently recovering from
+        lost shuffle outputs mid-query via lineage recompute."""
+        for retry in range(self.max_stage_retries):
+            stage_id = next(_stage_counter)
+            try:
+                results = self._run_tasks(
+                    stage_id, range(rdd.num_partitions),
+                    lambda split, tc: rdd.iterator(split, tc))
+                return [results[i] for i in range(rdd.num_partitions)]
+            except FetchFailed as ff:
+                dep = _find_shuffle_dep(rdd, ff.shuffle_id)
+                if dep is None:
+                    raise
+                self._recover_map_outputs(dep, ff.missing_maps)
+        raise RuntimeError("exceeded max stage retries")
+
+    def run_job(self, rdd: RDD) -> List[PartitionBatch]:
+        """Run all ancestor map stages (in lineage order), then the result
+        stage.  This is the non-PDE path; PDE drives stages itself."""
+        for dep in _all_shuffle_deps(rdd):
+            if not self._map_outputs_complete(dep):
+                self.run_map_stage(dep)
+        return self.run_result_stage(rdd)
+
+    def _map_outputs_complete(self, dep: ShuffleDependency) -> bool:
+        return all(self.ctx.block_manager.has_map_output(dep.shuffle_id, m)
+                   for m in range(dep.parent.num_partitions))
+
+
+def _all_shuffle_deps(rdd: RDD, out: Optional[List[ShuffleDependency]] = None,
+                      seen: Optional[Set[int]] = None) -> List[ShuffleDependency]:
+    out = out if out is not None else []
+    seen = seen if seen is not None else set()
+    if rdd.id in seen:
+        return out
+    seen.add(rdd.id)
+    for d in rdd.deps:
+        _all_shuffle_deps(d.parent, out, seen)
+        if isinstance(d, ShuffleDependency):
+            out.append(d)
+    return out
+
+
+def _find_shuffle_dep(rdd: RDD, shuffle_id: int) -> Optional[ShuffleDependency]:
+    for dep in _all_shuffle_deps(rdd):
+        if dep.shuffle_id == shuffle_id:
+            return dep
+    return None
+
+
+class SharkContext:
+    """The cluster handle: block manager + scheduler + RDD constructors."""
+
+    def __init__(self, num_workers: int = 8, max_threads: int = 8,
+                 speculation: bool = True,
+                 task_launch_overhead_s: float = 0.0):
+        self.block_manager = BlockManager()
+        self.scheduler = Scheduler(
+            self, num_workers=num_workers, max_threads=max_threads,
+            speculation=speculation,
+            task_launch_overhead_s=task_launch_overhead_s)
+
+    def parallelize(self, batches: List[PartitionBatch]):
+        from .rdd import ParallelCollectionRDD
+        return ParallelCollectionRDD(self, batches)
+
+    def scan(self, table, columns=None, selected=None):
+        from .rdd import TableScanRDD
+        return TableScanRDD(self, table, columns, selected)
+
+    def shutdown(self):
+        self.scheduler.pool.shutdown(wait=False)

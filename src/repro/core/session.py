@@ -1,0 +1,151 @@
+"""SharkSession — the user-facing entry point (paper §2, §4.1).
+
+    sess = SharkSession(num_workers=8)
+    sess.create_table("logs", schema, data)          # load into memory store
+    res = sess.sql("SELECT pageURL, pageRank FROM rankings WHERE pageRank > 100")
+    rdd, names = sess.sql2rdd("SELECT * FROM users")  # feed ML directly
+
+`sql2rdd` returns the *query plan as an RDD* rather than collected rows:
+callers invoke distributed computation over it (Listing 1 of the paper), the
+whole pipeline shares one lineage graph, and recovery spans SQL and ML.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .catalog import Catalog, ExternalSource
+from .columnar import Table, from_arrays
+from .batch import PartitionBatch
+from .pde import PDEConfig
+from .physical import ExecResult, Executor
+from .plan import Node, explain, optimize
+from .rdd import RDD
+from .runtime import SharkContext
+from .sql import Binder, CreateStmt, SelectStmt, parse
+from .types import Schema
+
+
+class SharkSession:
+    def __init__(self, num_workers: int = 8, max_threads: int = 8,
+                 enable_pde: bool = True, enable_map_pruning: bool = True,
+                 default_partitions: int = 8,
+                 default_shuffle_buckets: int = 64,
+                 pde_config: Optional[PDEConfig] = None,
+                 speculation: bool = True,
+                 task_launch_overhead_s: float = 0.0):
+        self.ctx = SharkContext(num_workers=num_workers,
+                                max_threads=max_threads,
+                                speculation=speculation,
+                                task_launch_overhead_s=task_launch_overhead_s)
+        self.catalog = Catalog()
+        self.default_partitions = default_partitions
+        self.executor = Executor(
+            self.ctx, self.catalog, pde_config or PDEConfig(),
+            enable_pde=enable_pde, enable_map_pruning=enable_map_pruning,
+            default_shuffle_buckets=default_shuffle_buckets)
+
+    # -- data loading ---------------------------------------------------------
+
+    def create_table(self, name: str, schema: Schema,
+                     data: Dict[str, np.ndarray],
+                     num_partitions: Optional[int] = None,
+                     distribute_by: Optional[str] = None) -> Table:
+        """Distributed load into the columnar memory store (§3.3)."""
+        table = from_arrays(name, schema, data,
+                            num_partitions or self.default_partitions,
+                            distribute_by)
+        self.catalog.register_table(table)
+        return table
+
+    def register_external(self, src: ExternalSource) -> None:
+        self.catalog.register_external(src)
+
+    # -- query execution --------------------------------------------------------
+
+    def plan(self, sql: str) -> Node:
+        stmt = parse(sql)
+        if isinstance(stmt, CreateStmt):
+            stmt = stmt.select
+        return Binder(self.catalog).bind(stmt)
+
+    def explain(self, sql: str) -> str:
+        node = optimize(self.plan(sql), self.catalog)
+        return explain(node)
+
+    def sql(self, sql: str) -> ExecResult:
+        stmt = parse(sql)
+        if isinstance(stmt, CreateStmt):
+            return self._create_table_as(stmt)
+        node = Binder(self.catalog).bind(stmt)
+        return self.executor.execute(node)
+
+    def sql_np(self, sql: str) -> Dict[str, np.ndarray]:
+        return self.sql(sql).to_numpy()
+
+    def sql2rdd(self, sql: str) -> Tuple[RDD, List[str]]:
+        """Return the query result as a TableRDD (paper §4.1): the final
+        narrow stage is left lazy so downstream ML extends the same lineage
+        graph; upstream shuffle stages have already been PDE-planned."""
+        stmt = parse(sql)
+        assert isinstance(stmt, SelectStmt), "sql2rdd takes a SELECT"
+        node = Binder(self.catalog).bind(stmt)
+        from .plan import optimize as opt
+        node = opt(node, self.catalog)
+        compiled = self.executor._compile(node)
+        return compiled.rdd, compiled.names
+
+    # -- CTAS / caching ---------------------------------------------------------
+
+    def _create_table_as(self, stmt: CreateStmt) -> ExecResult:
+        sel = stmt.select
+        node = Binder(self.catalog).bind(sel)
+        result = self.executor.execute(node)
+        merged = PartitionBatch.concat(result.batches)
+        data = merged.decoded()
+        schema = _infer_schema(data, result.schema_names)
+        num_parts = self.default_partitions
+        distribute = sel.distribute_by
+        if "copartition" in stmt.properties:
+            other = self.catalog.get(stmt.properties["copartition"])
+            num_parts = other.num_partitions
+        if distribute is None and "copartition" in stmt.properties:
+            raise ValueError("copartition requires DISTRIBUTE BY")
+        table = from_arrays(stmt.name, schema, data, num_parts, distribute)
+        # shark.cache => keep in the memory store (all our tables are
+        # in-memory; uncached CTAS still registers but could be spilled)
+        self.catalog.register_table(table)
+        return result
+
+    def metrics(self):
+        return self.executor.metrics
+
+    def scheduler_metrics(self) -> Dict[str, int]:
+        s = self.ctx.scheduler
+        return {"tasks_launched": s.tasks_launched,
+                "tasks_speculated": s.tasks_speculated,
+                "tasks_recomputed": s.tasks_recomputed}
+
+    def shutdown(self):
+        self.ctx.shutdown()
+
+
+def _infer_schema(data: Dict[str, np.ndarray], names: List[str]) -> Schema:
+    from .types import DType, Field
+    fields = []
+    for n in names:
+        v = np.asarray(data[n])
+        if v.dtype.kind in ("U", "S", "O"):
+            dt = DType.STRING
+        elif v.dtype.kind == "b":
+            dt = DType.BOOL
+        elif v.dtype.kind == "f":
+            dt = DType.FLOAT64 if v.dtype.itemsize == 8 else DType.FLOAT32
+        elif v.dtype.itemsize <= 4:
+            dt = DType.INT32
+        else:
+            dt = DType.INT64
+        fields.append(Field(n, dt))
+    return Schema(tuple(fields))

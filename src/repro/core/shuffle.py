@@ -1,0 +1,60 @@
+"""Shuffle partitioners (paper §3.1, §5 "Memory-based Shuffle").
+
+Map output is materialized in worker memory (the BlockManager), never on
+disk; the partitioner assigns rows to reduce buckets by a deterministic key
+hash shared with DISTRIBUTE BY so co-partitioned tables align.
+
+String keys hash through the partition dictionary — one crc32 per *distinct*
+value, then an O(1) gather per row — the columnar store making the shuffle
+CPU-cheap (§3.2).
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .batch import PartitionBatch
+from .columnar import hash_key_values
+
+
+def _row_keys(batch: PartitionBatch, key: str) -> np.ndarray:
+    v = batch.col(key)
+    if v.is_string:
+        hd = np.array([zlib.crc32(s.encode()) for s in v.sdict.tolist()],
+                      dtype=np.int64)
+        return hd[np.asarray(v.arr)]
+    return hash_key_values(np.asarray(v.arr))
+
+
+def bucket_by_hash(key: str, num_buckets: int
+                   ) -> Callable[[PartitionBatch], np.ndarray]:
+    def partitioner(batch: PartitionBatch) -> np.ndarray:
+        k = _row_keys(batch, key)
+        h = k.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+        h ^= h >> np.uint64(29)
+        return (h % np.uint64(num_buckets)).astype(np.int32)
+    return partitioner
+
+
+def bucket_by_composite(keys: Sequence[str], num_buckets: int
+                        ) -> Callable[[PartitionBatch], np.ndarray]:
+    def partitioner(batch: PartitionBatch) -> np.ndarray:
+        h = np.zeros(batch.num_rows, np.int64)
+        for key in keys:
+            k = _row_keys(batch, key)
+            h = h * np.int64(1000003) + k
+        hu = h.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+        hu ^= hu >> np.uint64(29)
+        return (hu % np.uint64(num_buckets)).astype(np.int32)
+    return partitioner
+
+
+def single_bucket() -> Callable[[PartitionBatch], np.ndarray]:
+    """Degenerate partitioner: everything to reducer 0 (the MPP-style single
+    coordinator plan the paper contrasts against in §6.2.2)."""
+    def partitioner(batch: PartitionBatch) -> np.ndarray:
+        return np.zeros(batch.num_rows, np.int32)
+    return partitioner

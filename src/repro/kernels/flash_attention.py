@@ -1,0 +1,121 @@
+"""Flash attention — Pallas TPU kernel (forward).
+
+The §Perf cell-A iteration drove attention HBM traffic down to the XLA
+floor: per-KV-chunk score/prob tiles still materialize at dot boundaries
+(EXPERIMENTS.md §Perf A5).  This kernel is the final step on real TPU:
+the (block_q x block_k) score tile, its online-softmax statistics and the
+output accumulator live in VMEM scratch for the whole KV sweep — HBM
+traffic is exactly Q, K, V reads and O writes.
+
+Grid: (batch*heads, S/block_q, T/block_k), KV innermost (TPU grids are
+sequential minor-to-major, so VMEM scratch carries across the KV sweep).
+Causal blocks strictly above the diagonal are skipped via pl.when.
+
+`models/flash.py` (the custom_vjp XLA form) is the oracle; on-TPU dispatch
+would swap it for this kernel via kernels.ops.  Validated in interpret mode
+(tests/test_kernels_flash.py) over shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      block_q: int, block_k: int, causal: bool,
+                      n_kv_blocks: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        # block row range [qi*bq, qi*bq+bq); col range [ki*bk, ...): skip
+        # blocks entirely above the diagonal
+        run = ki * block_k <= qi * block_q + block_q - 1
+
+    @pl.when(run if causal else True)
+    def body():
+        q = q_ref[0].astype(jnp.float32) * scale       # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)               # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)               # (bk, hd)
+        s = q @ k.T                                    # (bq, bk)
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + p @ v
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, block_q: int = 128,
+                        block_k: int = 128,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, S, hd); k, v: (B, H, T, hd) (MHA layout; GQA callers repeat
+    or group KV heads).  Returns (B, H, S, hd)."""
+    b, h, s, hd = q.shape
+    t = k.shape[2]
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    bh = b * h
+    qf = q.reshape(bh, s, hd)
+    kf = k.reshape(bh, t, hd)
+    vf = v.reshape(bh, t, hd)
+    n_kv_blocks = t // block_k
+    scale = float(1.0 / (hd ** 0.5))
+
+    out = pl.pallas_call(
+        functools.partial(_flash_fwd_kernel, block_q=block_q,
+                          block_k=block_k, causal=causal,
+                          n_kv_blocks=n_kv_blocks, scale=scale),
+        grid=(bh, s // block_q, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bhi, qi, ki: (bhi, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bhi, qi, ki: (bhi, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bhi, qi, ki: (bhi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bhi, qi, ki: (bhi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, 1), jnp.float32),   # running max m
+            _vmem((block_q, 1), jnp.float32),   # running denom l
+            _vmem((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, hd)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

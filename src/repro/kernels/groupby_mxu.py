@@ -1,0 +1,62 @@
+"""Group-by aggregation as a one-hot matmul — Pallas TPU kernel.
+
+Hardware adaptation (DESIGN.md §2): Shark's reducers aggregate with JVM hash
+tables; per-row scatter is serial poison on a TPU's vector units.  For the
+low-cardinality keys that dominate warehouse group-bys (SHIPMODE: 7 groups,
+country: ~200 — see §6.3.1/§6.4), the TPU-native algorithm is:
+
+    one_hot(codes) @ values  -> per-group sums      (MXU, 128x128 systolic)
+    one_hot(codes) @ ones    -> per-group counts
+
+Each grid step builds the one-hot tile for BLOCK_ROWS rows in VMEM and issues
+two fused matmuls; partial (G,2) results land per-tile and the wrapper does
+the final (num_blocks, G, 2) -> (G, 2) sum.  G is padded to a multiple of 128
+so the matmul is MXU-aligned.  High-cardinality group-bys stay on the
+sort/segment-sum engine path (aggregate.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 1024
+
+
+def _groupby_kernel(codes_ref, vals_ref, out_ref, *, num_groups_padded: int):
+    codes = codes_ref[...]
+    vals = vals_ref[...].astype(jnp.float32)
+    groups = jax.lax.broadcasted_iota(jnp.int32, (1, num_groups_padded), 1)
+    onehot = (codes[:, None] == groups).astype(jnp.float32)  # (B, Gp)
+    stacked = jnp.stack([vals, jnp.ones_like(vals)], axis=0)  # (2, B)
+    out_ref[...] = (stacked @ onehot)[None]  # (1, 2, Gp) on the MXU
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "interpret",
+                                             "block_rows"))
+def groupby_sum(codes: jnp.ndarray, values: jnp.ndarray, *, num_groups: int,
+                interpret: bool = False,
+                block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """Returns (num_groups, 2): per-group [sum, count]."""
+    n = codes.shape[0]
+    gp = max(128, -(-num_groups // 128) * 128)
+    num_blocks = max(1, -(-n // block_rows))
+    padded = num_blocks * block_rows
+    # pad codes to an out-of-range group so padding contributes nothing
+    c = jnp.full((padded,), gp, jnp.int32).at[:n].set(codes.astype(jnp.int32))
+    v = jnp.zeros((padded,), jnp.float32).at[:n].set(
+        values.astype(jnp.float32))
+    partials = pl.pallas_call(
+        functools.partial(_groupby_kernel, num_groups_padded=gp),
+        grid=(num_blocks,),
+        in_specs=[pl.BlockSpec((block_rows,), lambda i: (i,)),
+                  pl.BlockSpec((block_rows,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, 2, gp), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, 2, gp), jnp.float32),
+        interpret=interpret,
+    )(c, v)
+    summed = jnp.sum(partials, axis=0)  # (2, gp)
+    return summed[:, :num_groups].T     # (G, 2) [sum, count]

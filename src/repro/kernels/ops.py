@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`interpret` defaults to True unless a real TPU backend is present: this
+container is CPU-only, so kernels execute their bodies in interpret mode
+(semantics validated against ref.py); on TPU the same calls compile to
+Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import colscan as _colscan
+from . import dictdecode as _dd
+from . import groupby_mxu as _gb
+
+
+@functools.lru_cache(maxsize=1)
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def _interp() -> bool:
+    return not on_tpu()
+
+
+def colscan(filter_col, agg_col, lo, hi):
+    """[count, sum, min, max] of agg_col where lo <= filter_col <= hi."""
+    return _colscan.colscan(jnp.asarray(filter_col), jnp.asarray(agg_col),
+                            lo, hi, interpret=_interp())
+
+
+def dict_decode(codes, dictionary):
+    return _dd.dict_decode(jnp.asarray(codes), jnp.asarray(dictionary),
+                           interpret=_interp())
+
+
+def bitpack_decode(words, bit_width: int, bias: int, n: int):
+    return _dd.bitpack_decode(jnp.asarray(words), bit_width=bit_width,
+                              bias=bias, n=n, interpret=_interp())
+
+
+def rle_decode(run_values, run_ends, n: int):
+    return _dd.rle_decode(jnp.asarray(run_values), jnp.asarray(run_ends),
+                          n=n, interpret=_interp())
+
+
+def fused_decode_scan(codes, dictionary, agg_col, lo, hi):
+    return _dd.fused_decode_scan(jnp.asarray(codes), jnp.asarray(dictionary),
+                                 jnp.asarray(agg_col), lo, hi,
+                                 interpret=_interp())
+
+
+def groupby_sum(codes, values, num_groups: int):
+    """(num_groups, 2) per-group [sum, count] via MXU one-hot matmul."""
+    return _gb.groupby_sum(jnp.asarray(codes), jnp.asarray(values),
+                           num_groups=num_groups, interpret=_interp())

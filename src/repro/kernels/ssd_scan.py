@@ -1,0 +1,114 @@
+"""Mamba2 SSD scan — Pallas TPU kernel (forward).
+
+EXPERIMENTS.md §Perf identifies the SSD chunked scan as the bounding traffic
+for the SSM-dominated archs (zamba2-7b, mamba2-370m): the XLA form
+materializes the (chunk x chunk) decay/score matrices and the per-chunk
+state contributions in HBM.  This kernel runs the whole per-(batch, head)
+scan in one grid row: the (c x c) intra-chunk tile, the decay vectors and
+the running (p x n) state all live in VMEM scratch; HBM traffic is exactly
+x/dt/B/C reads and y writes.
+
+Grid: (batch*heads, n_chunks) — chunk index innermost, so the state scratch
+carries the recurrence across the sequential sweep (same pattern as the
+flash kernel's KV sweep).  ngroups=1 layout (B/C shared across heads), the
+configuration of both assigned SSM archs.
+
+Math per chunk (c = chunk length, p = headdim, n = d_state):
+    dA       = dt * A                  (c,)  A < 0
+    cum      = cumsum(dA)              (c,)
+    L[i, j]  = exp(cum_i - cum_j) * (i >= j)
+    y_intra  = ((C B^T) ∘ L ∘ dt_j) x            -- (c,c) @ (c,p) on MXU
+    y_inter  = exp(cum) * (C . state)            -- (c,n) @ (n,p)
+    state'   = exp(cum_last) * state + B^T (exp(cum_last - cum) dt x)
+Oracle: `repro.models.mamba2.ssd_chunked` (pure jnp), itself validated
+against the sequential recurrence in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (c, p)
+    dt = dt_ref[0].astype(jnp.float32)        # (c,)
+    a = a_ref[0, 0]                           # scalar A (negative)
+    bmat = b_ref[0].astype(jnp.float32)       # (c, n)
+    cmat = c_ref[0].astype(jnp.float32)       # (c, n)
+
+    da = dt * a                               # (c,)
+    cum = jnp.cumsum(da)                      # (c,)
+    # intra-chunk: masked decay kernel
+    seg = cum[:, None] - cum[None, :]         # (c, c)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mask = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    cb = cmat @ bmat.T                        # (c, c) MXU
+    m = cb * l_mask * dt[None, :]
+    y = m @ x                                 # (c, p) MXU
+
+    # inter-chunk from carried state
+    state = state_scr[...]                    # (n, p)
+    decay_in = jnp.exp(cum)[:, None]          # (c, 1)
+    y = y + decay_in * (cmat @ state)         # (c,n)@(n,p) MXU
+
+    # state update
+    last = cum[chunk - 1]
+    w = jnp.exp(last - cum) * dt              # (c,)
+    contrib = bmat.T @ (w[:, None] * x)       # (n, p) MXU
+    state_scr[...] = jnp.exp(last) * state + contrib
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, chunk: int = 128,
+             interpret: bool = False) -> jnp.ndarray:
+    """x: (B, S, H, P); dt: (B, S, H) post-softplus; a: (H,) negative;
+    b, c: (B, S, N) (ngroups=1).  Returns y = SSD(x) WITHOUT the D skip
+    (callers add x*D).  S must divide by `chunk`."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    bh = bsz * h
+    # per-(batch, head) layout
+    xf = x.transpose(0, 2, 1, 3).reshape(bh, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(bh, s)
+    af = jnp.broadcast_to(a[None, :], (bsz, h)).reshape(bh, 1)
+    bf = jnp.broadcast_to(b[:, None], (bsz, h, s, n)).reshape(bh, s, n)
+    cf = jnp.broadcast_to(c[:, None], (bsz, h, s, n)).reshape(bh, s, n)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, k: (i, k, 0)),
+            pl.BlockSpec((1, chunk), lambda i, k: (i, k)),
+            pl.BlockSpec((1, 1), lambda i, k: (i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, k: (i, k, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, k: (i, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, k: (i, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[_vmem((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+    return y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,541 @@
+"""Whole-program HLO cost analysis with loop-trip-count multiplicities.
+
+XLA's built-in `compiled.cost_analysis()` counts each `while` body ONCE
+(verified empirically: a scanned 4-layer matmul reports 1/4 the FLOPs of the
+unrolled version).  Our models scan over layers, KV chunks, loss chunks and
+microbatches, so aggregate numbers from cost_analysis are off by orders of
+magnitude.  This module re-derives program costs from the partitioned HLO
+text itself:
+
+  1. split the module into computations (keeping each header's parameter
+     types — scheduled HLO prints operands as bare names, so every
+     computation gets a symbol table name -> shape),
+  2. build the computation call graph: while bodies/conditions weighted by
+     `known_trip_count` from backend_config, calls/fusions/to_apply weight 1,
+  3. propagate execution multiplicity from ENTRY,
+  4. per executed instruction, accumulate
+       - dot FLOPs: 2 * numel(result) * prod(lhs contracting dims)
+       - elementwise/reduce FLOPs: numel(result) (first-order)
+       - HBM traffic: operand + result bytes at fusion/op boundaries
+       - collective wire bytes (ring model; group size from replica_groups)
+     each scaled by the computation's multiplicity.
+
+All quantities are PER DEVICE: the input is the SPMD-partitioned module.
+CPU-backend HLO stands in for TPU HLO structurally (same partitioner, same
+collectives); fusion granularity differs, so traffic is a structural
+estimate, while dot FLOPs and collective bytes are exact for the partitioned
+program.  Methodology caveats are recorded in EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|"
+    r"u4|pred|c64|c128)\[([\d,]*)\]")
+
+_INSTR_RE = re.compile(r"^\s*(%[\w.\-]+)\s*=\s*")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=([%\w.\-]+),\s*body=([%\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_TARGET_RE = re.compile(
+    r"(?:calls=|to_apply=|branch_computations=\{)([%\w.\-, ]+)\}?")
+_OPNAME_RE = re.compile(r"=\s*(?:\([^=]*?\)|[\w\[\],{}\d]+)\s+([\w\-]+)\(")
+_COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_BRACE_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_SCOPE_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _scope_of(line: str) -> str:
+    m = _SCOPE_RE.search(line)
+    if not m:
+        return "other"
+    name = m.group(1)
+    for scope in ("attention", "moe", "mamba"):
+        if scope in name:
+            return scope + ("_bwd" if "transpose(jvp" in name else "")
+    if "transpose(jvp" in name:
+        return "backward_other"
+    return "other"
+_HEADER_PARAM_RE = re.compile(r"([\w.\-]+):\s+((?:\([^)]*\))|[^,()]+)")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "while", "conditional", "call", "after-all",
+             "partition-id", "replica-id", "copy-start", "copy-done",
+             "add-dependency", "domain", "opt-barrier"}
+
+# Ops whose operand/result bytes count as HBM traffic.  The TPU fusion model
+# assumed here: elementwise chains, converts, copies (aliasing), reshapes
+# and transposes fuse into neighboring ops; irreducible traffic happens at
+# dot/gather/scatter/reduce/sort/collective boundaries and at explicit
+# fusion nodes (which the CPU backend forms around elementwise regions, so
+# their boundary bytes stand in for the fused-region traffic).
+# dynamic-(update-)slice is special-cased in _line_costs: only the moved
+# slice counts, not the aliased full buffer.
+_TRAFFIC_OPS = {
+    "fusion", "dot", "custom-call", "gather", "scatter", "reduce",
+    "reduce-window", "select-and-scatter", "sort", "convolution",
+    "rng-bit-generator", "cholesky", "triangular-solve",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "multiply", "subtract", "divide", "select", "compare",
+    "exponential", "tanh", "maximum", "minimum", "rsqrt", "log", "sqrt",
+    "negate", "abs", "power", "and", "or", "xor", "clamp", "floor", "ceil",
+    "sign", "logistic", "cosine", "sine", "exponential-minus-one",
+    "log-plus-one", "fusion", "reduce", "reduce-window",
+}
+
+
+def _parse_shape(type_str: str) -> Tuple[int, int, List[List[int]]]:
+    """(numel, bytes, list of dim-lists) over every array in the type."""
+    total_n, total_b = 0, 0
+    dims_list: List[List[int]] = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        dl = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in dl:
+            n *= d
+        total_n += n
+        total_b += n * _DTYPE_BYTES[dt]
+        dims_list.append(dl)
+    return total_n, total_b, dims_list
+
+
+@dataclasses.dataclass
+class ProgramCost:
+    dot_flops: float = 0.0
+    elementwise_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    wire_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    while_trip_counts: List[int] = dataclasses.field(default_factory=list)
+    # attribution by jax.named_scope found in op metadata (attention/moe/...)
+    traffic_by_scope: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    wire_by_scope: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.elementwise_flops
+
+
+@dataclasses.dataclass
+class _Comp:
+    header: str
+    lines: List[str]
+    is_entry: bool
+    symtab: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # effective streamed bytes through pure dtype/layout movement chains:
+    # a bf16 tensor produced by converting an int8 array streams int8 bytes
+    # from HBM (the convert runs in-register on TPU after the load)
+    eff: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+def _split_computations(hlo: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    cur_name = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        if (line[:1] not in (" ", "\t") and stripped.endswith("{")
+                and not stripped.startswith("HloModule")
+                and (stripped.startswith("%") or stripped.startswith("ENTRY")
+                     or "->" in stripped)):
+            if cur_name is not None:
+                comps[cur_name] = cur
+            is_entry = stripped.startswith("ENTRY")
+            name_part = stripped[len("ENTRY "):] if is_entry else stripped
+            cur_name = name_part.split(" ")[0].split("(")[0]
+            cur = _Comp(stripped, [], is_entry)
+            continue
+        if cur is not None:
+            cur.lines.append(line)
+    if cur_name is not None:
+        comps[cur_name] = cur
+
+    # symbol tables: instruction results + header parameters
+    for comp in comps.values():
+        hdr = comp.header
+        if "(" in hdr:
+            params = hdr[hdr.index("("):]
+            for pm in _HEADER_PARAM_RE.finditer(params):
+                comp.symtab["%" + pm.group(1)] = pm.group(2)
+        for line in comp.lines:
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            rest = line[line.index("=") + 1:]
+            opm = _OPNAME_RE.search(line)
+            if opm:
+                opn = rest.find(opm.group(1) + "(")
+                type_str = rest[:opn] if opn > 0 else rest
+            else:
+                type_str = rest
+            comp.symtab[im.group(1)] = type_str.strip()
+    return comps
+
+
+def _eff_bytes(comp: _Comp, name: str) -> int:
+    if name in comp.eff:
+        return comp.eff[name]
+    t = comp.symtab.get(name, "")
+    _, b, _ = _parse_shape(t)
+    return b
+
+
+def _build_eff_maps(comps: Dict[str, _Comp], movement: set) -> None:
+    """Sequential per-computation pass: results of pure-movement ops (and
+    fusions over pure-movement bodies) inherit min(result, operand) bytes."""
+    plain_movement = {"convert", "copy", "bitcast", "transpose", "reshape"}
+    for comp in comps.values():
+        for line in comp.lines:
+            im = _INSTR_RE.match(line)
+            opm = _OPNAME_RE.search(line)
+            if not im or not opm:
+                continue
+            op = opm.group(1)
+            is_mv = op in plain_movement
+            if op == "fusion":
+                cm = _CALL_TARGET_RE.search(line)
+                is_mv = bool(cm) and cm.group(1).split(",")[0].strip() \
+                    in movement
+            if not is_mv:
+                continue
+            rname = im.group(1)
+            rb = _eff_bytes(comp, rname)  # own type bytes (eff unset yet)
+            opn = line.find(op + "(", line.find("="))
+            args = line[opn + len(op) + 1:]
+            depth, end = 1, 0
+            for i, ch in enumerate(args):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = _OPERAND_RE.findall(args[:end])
+            if operands:
+                ob = sum(_eff_bytes(comp, o) for o in operands)
+                comp.eff[rname] = min(rb, ob)
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    g = _IOTA_GROUPS_RE.search(line)
+    if g:
+        return max(int(g.group(2)), 2)
+    g2 = _BRACE_GROUPS_RE.search(line)
+    if g2:
+        return max(len([x for x in g2.group(1).split(",") if x.strip()]), 2)
+    return default
+
+
+def _line_costs(line: str, comp: _Comp, cost: ProgramCost, mult: float,
+                skip_traffic: bool) -> None:
+    opm = _OPNAME_RE.search(line)
+    if not opm:
+        return
+    op = opm.group(1)
+    if op in _SKIP_OPS:
+        return
+    base_op = op[:-6] if op.endswith("-start") else op
+
+    eq = line.find("=")
+    opn = line.find(op + "(", eq)
+    result_str = line[eq + 1: opn] if (eq >= 0 and opn > eq) else ""
+    rn, rb, _ = _parse_shape(result_str)
+
+    # operand segment: between "op(" and the matching close — approximate
+    # with the text up to "), " or end; operands are bare %names here.
+    args_start = opn + len(op) + 1
+    args_str = line[args_start:]
+    depth = 1
+    end = 0
+    for i, ch in enumerate(args_str):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args_str = args_str[:end]
+    operand_names = _OPERAND_RE.findall(args_str)
+
+    if base_op in _COLLECTIVE_OPS and "-done" not in op:
+        n = _group_size(line)
+        if base_op == "all-reduce":
+            wire = 2.0 * rb * (n - 1) / n
+        elif base_op == "all-gather":
+            wire = rb * (n - 1) / n
+        elif base_op == "reduce-scatter":
+            wire = rb * (n - 1)
+        elif base_op == "all-to-all":
+            wire = rb * (n - 1) / n
+        else:
+            wire = float(rb)
+        cost.wire_bytes += wire * mult
+        cost.wire_by_op[base_op] += wire * mult
+        cost.wire_by_scope[_scope_of(line)] += wire * mult
+        cost.collective_count[base_op] += max(int(round(mult)), 1)
+
+    if op == "dot":
+        k = 1
+        km = _CONTRACT_RE.search(line)
+        if km and km.group(1) and operand_names:
+            lhs_type = comp.symtab.get(operand_names[0], "")
+            _, _, dims_list = _parse_shape(lhs_type)
+            if dims_list:
+                lhs_dims = dims_list[0]
+                for ci in km.group(1).split(","):
+                    ci = int(ci)
+                    if ci < len(lhs_dims):
+                        k *= lhs_dims[ci]
+        cost.dot_flops += 2.0 * rn * k * mult
+    elif op == "convolution":
+        cost.dot_flops += 2.0 * rn * mult  # not used by our models
+    elif base_op in _ELEMENTWISE_FLOP_OPS:
+        cost.elementwise_flops += float(rn) * mult
+
+    if skip_traffic:
+        return
+    if op == "dynamic-update-slice":
+        # in-place on TPU: traffic = the update slice (read + write)
+        if len(operand_names) >= 2:
+            t = comp.symtab.get(operand_names[1])
+            if t:
+                _, b, _ = _parse_shape(t)
+                cost.traffic_bytes += 2.0 * b * mult
+                cost.traffic_by_scope[_scope_of(line)] += 2.0 * b * mult
+        return
+    if op == "dynamic-slice" or op == "slice":
+        cost.traffic_bytes += 2.0 * rb * mult  # read slice + write result
+        cost.traffic_by_scope[_scope_of(line)] += 2.0 * rb * mult
+        return
+    if base_op in _TRAFFIC_OPS:
+        ob = 0
+        if op == "fusion" and _MOVEMENT_FUSIONS:
+            cm0 = _CALL_TARGET_RE.search(line)
+            if cm0 and cm0.group(1).split(",")[0].strip() in _MOVEMENT_FUSIONS:
+                return  # pure dtype/layout movement: fuses away on TPU
+        if op == "fusion" and _FUSION_PARAM_BYTES is not None:
+            cm = _CALL_TARGET_RE.search(line)
+            rec = _FUSION_PARAM_BYTES.get(
+                cm.group(1).split(",")[0].strip()) if cm else None
+            if rec is not None:
+                per_param = rec.get("params", {})
+                if "root_update" in rec:
+                    rb = min(rb, 2 * int(rec["root_update"]))  # slice r+w
+                for i, name in enumerate(operand_names):
+                    full_b = _eff_bytes(comp, name)
+                    if not full_b:
+                        continue
+                    eff = per_param.get(i)
+                    ob += min(full_b, eff) if eff is not None else full_b
+                cost.traffic_bytes += (rb + ob) * mult
+                cost.traffic_by_scope[_scope_of(line)] += (rb + ob) * mult
+                return
+        for name in operand_names:
+            ob += _eff_bytes(comp, name)
+        cost.traffic_bytes += (rb + ob) * mult
+        cost.traffic_by_scope[_scope_of(line)] += (rb + ob) * mult
+
+
+_FUSION_PARAM_BYTES: Optional[Dict[str, Dict[int, int]]] = None
+_MOVEMENT_FUSIONS: set = set()
+
+_DS_PARAM_RE = re.compile(
+    r"=\s*(\S+)\s+dynamic-slice\((%[\w.\-]+)")
+_PARAM_DECL_RE = re.compile(r"^\s*(%[\w.\-]+)\s*=\s*\S+\s+parameter\((\d+)\)")
+
+
+_DUS_RE = re.compile(
+    r"=\s*\S+\s+dynamic-update-slice\(\s*(%[\w.\-]+),\s*(%[\w.\-]+)")
+
+
+_MOVEMENT_OPS = {"convert", "copy", "bitcast", "transpose", "reshape",
+                 "broadcast", "parameter", "tuple", "get-tuple-element",
+                 "slice", "concatenate", "pad"}
+
+
+def _pure_movement_fusions(comps: Dict[str, _Comp]) -> set:
+    """Fused computations whose every op is dtype-conversion / layout
+    movement.  The CPU backend materializes these as standalone fusions; on
+    TPU they fuse into their consumers (convert into the MXU dot epilogue,
+    transpose into the dot's layout assignment), so they carry no HBM
+    traffic of their own."""
+    out = set()
+    for name, comp in comps.items():
+        if "fused" not in name and "wrapped" not in name:
+            continue
+        ops = []
+        for line in comp.lines:
+            m = _OPNAME_RE.search(line)
+            if m:
+                ops.append(m.group(1))
+        if ops and all(op in _MOVEMENT_OPS for op in ops):
+            out.add(name)
+    return out
+
+
+def _fusion_param_bytes(comps: Dict[str, _Comp]
+                        ) -> Dict[str, Dict[str, object]]:
+    """Per fused computation:
+      'params': param index -> effective streamed bytes when the param is
+        consumed only via dynamic-slice (a scan body slicing one layer out
+        of stacked weights streams the slice, not the stack);
+      'root_update': if the fusion root is a dynamic-update-slice, the
+        update-slice bytes (the output buffer is aliased in place — only
+        the slice is written)."""
+    out: Dict[str, Dict[str, object]] = {}
+    for name, comp in comps.items():
+        if "fused" not in name and "wrapped" not in name:
+            continue
+        pidx: Dict[str, int] = {}
+        origin: Dict[str, str] = {}   # movement-op result -> source param
+        for line in comp.lines:
+            pm = _PARAM_DECL_RE.match(line)
+            if pm:
+                pidx[pm.group(1)] = int(pm.group(2))
+                origin[pm.group(1)] = pm.group(1)
+                continue
+            im = _INSTR_RE.match(line)
+            opm = _OPNAME_RE.search(line)
+            if im and opm and opm.group(1) in ("bitcast", "copy", "convert",
+                                               "reshape", "transpose"):
+                ops = _OPERAND_RE.findall(line[line.find(opm.group(1) + "("):])
+                if ops and ops[0] in origin:
+                    origin[im.group(1)] = origin[ops[0]]
+        sliced: Dict[int, int] = {}
+        direct_use: Dict[int, bool] = {}
+        root_update: Optional[int] = None
+        for line in comp.lines:
+            dm = _DS_PARAM_RE.search(line)
+            if dm and origin.get(dm.group(2)) in pidx:
+                _, b, _ = _parse_shape(dm.group(1))
+                i = pidx[origin[dm.group(2)]]
+                sliced[i] = sliced.get(i, 0) + b
+                continue
+            du = _DUS_RE.search(line)
+            if du:
+                # the DUS target buffer aliases the fusion output in place:
+                # only the update slice is real traffic.  The target operand
+                # may be a parameter directly or reach one through local
+                # movement ops (bitcast/copy) — treat both as aliased.
+                tgt = origin.get(du.group(1))
+                if tgt in pidx:
+                    sliced.setdefault(pidx[tgt], 0)
+                upd_t = comp.symtab.get(du.group(2), "")
+                if not upd_t and du.group(2) in pidx:
+                    upd_t = comp.symtab.get(du.group(2), "")
+                _, ub, _ = _parse_shape(upd_t)
+                if ub:
+                    root_update = (root_update or 0) + ub
+                continue
+            for pname, i in pidx.items():
+                if pname in line and "parameter(" not in line \
+                        and "bitcast" not in line and " copy(" not in line:
+                    direct_use[i] = True
+        eff = {i: b for i, b in sliced.items() if not direct_use.get(i)}
+        rec: Dict[str, object] = {}
+        if eff:
+            rec["params"] = eff
+        if root_update is not None:
+            rec["root_update"] = root_update
+        if rec:
+            out[name] = rec
+    return out
+
+
+def analyze_hlo_program(hlo: str) -> ProgramCost:
+    global _FUSION_PARAM_BYTES, _MOVEMENT_FUSIONS
+    comps = _split_computations(hlo)
+    _FUSION_PARAM_BYTES = _fusion_param_bytes(comps)
+    _MOVEMENT_FUSIONS = _pure_movement_fusions(comps)
+    _build_eff_maps(comps, _MOVEMENT_FUSIONS)
+    entry = None
+    for name, comp in comps.items():
+        if comp.is_entry:
+            entry = name
+            break
+    cost = ProgramCost()
+    if entry is None:
+        return cost
+
+    edges: Dict[str, List[Tuple[str, float, bool]]] = defaultdict(list)
+    for name, comp in comps.items():
+        for line in comp.lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                trip = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                cost.while_trip_counts.append(trip)
+                edges[name].append((wm.group(1), float(trip), False))
+                edges[name].append((wm.group(2), float(trip), False))
+                continue
+            cm = _CALL_TARGET_RE.search(line)
+            if cm:
+                via_fusion = " fusion(" in line
+                for target in cm.group(1).split(","):
+                    target = target.strip()
+                    if target in comps:
+                        edges[name].append((target, 1.0, via_fusion))
+
+    mult: Dict[str, float] = defaultdict(float)
+    fused_only: Dict[str, bool] = {entry: False}
+    mult[entry] = 1.0
+    for name in _topo_order(entry, edges):
+        for callee, w, via_fusion in edges.get(name, ()):
+            mult[callee] += mult[name] * w
+            prev = fused_only.get(callee, True)
+            fused_only[callee] = prev and (via_fusion
+                                           or fused_only.get(name, False))
+
+    for name, m in mult.items():
+        if m <= 0 or name not in comps:
+            continue
+        comp = comps[name]
+        skip_traffic = fused_only.get(name, False)
+        for line in comp.lines:
+            _line_costs(line, comp, cost, m, skip_traffic)
+    return cost
+
+
+def _topo_order(entry: str, edges) -> List[str]:
+    seen, order = set(), []
+
+    def visit(n, depth=0):
+        if n in seen or depth > 500:
+            return
+        seen.add(n)
+        for callee, _, _ in edges.get(n, ()):
+            visit(callee, depth + 1)
+        order.append(n)
+
+    visit(entry)
+    return list(reversed(order))

@@ -1,0 +1,133 @@
+"""Roofline report generator: reads experiments/dryrun/*.json, derives the
+three roofline terms per (arch x shape x mesh), computes MODEL_FLOPS and the
+usefulness ratio, and emits the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--out experiments/roofline_table.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+from ..configs import SHAPES, get_config
+from .hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic 'useful' FLOPs for the whole cell (GLOBAL, all chips):
+    train: 6*N*D; prefill: 2*N*D; decode: 2*N*B (one token per sequence).
+    N = active params for MoE."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def load_records(out_dir: str, variant: str = "baseline") -> List[Dict]:
+    recs = []
+    for f in sorted(os.listdir(out_dir)):
+        if not f.endswith(".json"):
+            continue
+        with open(os.path.join(out_dir, f)) as fh:
+            r = json.load(fh)
+        if r.get("variant", "baseline") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def enrich(r: Dict) -> Dict:
+    rl = r["roofline"]
+    mf = model_flops(r["arch"], r["shape"])
+    mf_dev = mf / r["chips"]
+    hlo = max(rl["flops"], 1.0)
+    bound = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+    # roofline fraction: useful-compute time / bound term (how close the
+    # dominant term is to pure useful compute at peak)
+    useful_s = mf_dev / PEAK_FLOPS
+    return {
+        **{k: r[k] for k in ("arch", "shape", "mesh", "chips", "variant")},
+        "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+        "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+        "model_flops_dev": mf_dev, "hlo_flops_dev": hlo,
+        "useful_ratio": mf_dev / hlo,
+        "bound_s": bound,
+        "roofline_fraction": useful_s / bound if bound > 0 else 0.0,
+        "counts": rl["counts"],
+        "memory_args_gb": r.get("memory", {}).get(
+            "argument_size_in_bytes", 0) / 1e9,
+        "compile_s": r.get("compile_s", 0.0),
+    }
+
+
+BOTTLENECK_HINT = {
+    "compute": "more useful-FLOP fraction (less remat / bigger microbatch)",
+    "memory": "fuse attention (Pallas flash) / cut fp32 intermediates",
+    "collective": "overlap or shrink collectives (bf16 grads, 1D TP->2D)",
+}
+
+
+def make_table(recs: List[Dict], mesh: str) -> str:
+    rows = [e for e in (enrich(r) for r in recs) if e["mesh"] == mesh]
+    rows.sort(key=lambda e: (e["arch"], e["shape"]))
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for e in rows:
+        out.append(
+            f"| {e['arch']} | {e['shape']} | {e['compute_s']:.3f} "
+            f"| {e['memory_s']:.3f} | {e['collective_s']:.3f} "
+            f"| **{e['dominant']}** | {e['useful_ratio']:.2f} "
+            f"| {e['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=RESULTS_DIR)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    recs = load_records(args.dir, args.variant)
+    if not recs:
+        print("no records found in", args.dir)
+        return
+    sections = []
+    for mesh in ("pod_16x16", "multipod_2x16x16"):
+        n = len([r for r in recs if r["mesh"] == mesh])
+        sections.append(f"### Mesh {mesh} ({n} cells, variant="
+                        f"{args.variant})\n\n" + make_table(recs, mesh))
+    # pick hillclimb candidates from single-pod table
+    enriched = [enrich(r) for r in recs if r["mesh"] == "pod_16x16"]
+    if enriched:
+        worst = min(enriched, key=lambda e: e["roofline_fraction"])
+        coll = max(enriched, key=lambda e: e["collective_s"]
+                   / max(e["bound_s"], 1e-12))
+        sections.append(
+            "\n### Hillclimb candidates (single-pod)\n"
+            f"- worst roofline fraction: {worst['arch']} x {worst['shape']} "
+            f"({worst['roofline_fraction']:.4f}, {worst['dominant']}-bound)\n"
+            f"- most collective-bound: {coll['arch']} x {coll['shape']} "
+            f"(collective {coll['collective_s']:.3f}s)\n"
+            f"- hints: " + json.dumps(BOTTLENECK_HINT))
+    text = "\n\n".join(sections) + "\n"
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print("wrote", args.out)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,276 @@
+"""ShapeDtypeStruct stand-ins and PartitionSpec trees for every
+(architecture x input-shape) dry-run cell.  Nothing here allocates device
+memory: params/opt/caches come from jax.eval_shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import lm
+from ..parallel.sharding import filter_spec
+from ..training import AdamWConfig, init_opt_state, zero1_specs
+
+BATCH = ("pod", "data")
+
+
+def param_shapes_and_specs(cfg: ModelConfig):
+    """Abstract param tree + PartitionSpecs, with zero allocation."""
+    captured = {}
+
+    def build(key):
+        p, s = lm.init_params(cfg, key)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, captured["specs"]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one cell's model inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        out = {"tokens": sd((b, s), jnp.int32),
+               "labels": sd((b, s), jnp.int32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": sd((b, s), jnp.int32)}
+    elif shape.kind == "decode":
+        out = {"token": sd((b, 1), jnp.int32),
+               "cur_len": sd((), jnp.int32)}
+    else:
+        raise ValueError(shape.kind)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["image_embeds"] = sd((b, cfg.n_frontend_tokens, cfg.d_model),
+                                 jnp.bfloat16)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        out["frames"] = sd((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeConfig, shard_batch: bool
+                 ) -> Dict[str, P]:
+    bax = BATCH if shard_batch else None
+    if shape.kind == "train":
+        out = {"tokens": P(bax, None), "labels": P(bax, None)}
+    elif shape.kind == "prefill":
+        out = {"tokens": P(bax, None)}
+    else:
+        out = {"token": P(bax, None), "cur_len": P()}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["image_embeds"] = P(bax, None, None)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        out["frames"] = P(bax, None, None)
+    return out
+
+
+def cache_shapes(cfg: ModelConfig, b: int, max_seq: int,
+                 prefill_len: int = 64):
+    """Abstract KV/state-cache tree via eval_shape of prefill (so the specs
+    can never drift from what prefill actually produces)."""
+    params_sh, _ = param_shapes_and_specs(cfg)
+    batch = dict(input_specs(
+        cfg, ShapeConfig("tmp", "prefill", prefill_len, b)))
+
+    def run(params, bt):
+        _, caches = lm.prefill_fn(cfg, params, bt, max_seq)
+        return caches
+
+    return jax.eval_shape(run, params_sh, batch)
+
+
+def cache_pspecs(cfg: ModelConfig, caches, shard_batch: bool,
+                 shard_time: bool, model_size: int = 16) -> Any:
+    """PartitionSpecs per cache leaf, keyed by cache name + rank.
+
+    Layout rules (perf iteration C1b, EXPERIMENTS.md §Perf): batch over
+    (pod, data) when it divides; KV heads over `model` when the head count
+    divides, else HEAD_DIM over `model` — NEVER the time axis for decode
+    caches: a dynamic-index update into a time-sharded buffer forces GSPMD
+    to rewrite the whole cache per step (measured 15x traffic blowup).
+    long_500k (batch=1) is the exception: no new-token axis fits, so time
+    shards and attention pays a partial-softmax all-reduce instead."""
+    bax = BATCH if shard_batch else None
+    tax = "model" if shard_time else None
+    fam = cfg.family
+
+    def heads_or_hd(kv: int, hd: int):
+        """(head_entry, hd_entry) for a (..., KV, hd) cache."""
+        if shard_time:
+            return None, None
+        if kv % model_size == 0:
+            return "model", None
+        if hd % model_size == 0:
+            return None, "model"
+        return None, None
+
+    def spec_for(name: str, leaf) -> P:
+        nd = leaf.ndim
+        if name in ("k", "v"):
+            he, de = heads_or_hd(leaf.shape[-2], leaf.shape[-1])
+            if fam == "vlm":      # (G, n_self, B, T, KV, hd)
+                return P(None, None, bax, tax, he, de)
+            # (L, B, T, KV, hd)
+            return P(None, bax, tax, he, de)
+        if name in ("attn_k", "attn_v"):   # (G, B, T, KV, hd)
+            he, de = heads_or_hd(leaf.shape[-2], leaf.shape[-1])
+            return P(None, bax, tax, he, de)
+        if name in ("k_scale", "v_scale"):  # (L, B, T, KV)
+            he = "model" if (not shard_time
+                             and leaf.shape[-1] % model_size == 0) else None
+            return P(None, bax, tax, he)
+        if name in ("ckv", "kr"):          # (L, B, T, lora|rope)
+            return P(None, bax, tax, None)
+        if name in ("k0", "v0"):           # (B, T, lora|rope) or (B,T,KV,hd)
+            if nd == 3:
+                return P(bax, tax, None)
+            return P(bax, tax, None if shard_time else "model", None)
+        if name in ("xk", "xv"):           # (L|G, B, T_src, KV, hd)
+            return P(None, bax, None, "model", None)
+        if name == "ssm":                  # (L, B, H, P, N)
+            return P(None, bax, "model", None, None)
+        if name == "conv":                 # (L, B, K-1, conv_dim)
+            return P(None, bax, None, "model")
+        if name == "group_ssm":            # (G, per, B, H, P, N)
+            return P(None, None, bax, "model", None, None)
+        if name == "group_conv":           # (G, per, B, K-1, conv)
+            return P(None, None, bax, None, "model")
+        if name == "tail_ssm":             # (T, B, H, P, N)
+            return P(None, bax, "model", None, None)
+        if name == "tail_conv":
+            return P(None, bax, None, "model")
+        raise KeyError(f"no cache spec rule for {name!r} (rank {nd})")
+
+    return {name: spec_for(name, leaf) for name, leaf in caches.items()}
+
+
+# ---------------------------------------------------------------------------
+# Assembled per-cell lowering inputs
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, entry) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(entry, 1)
+
+
+def sanitize_spec(mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Explicit in/out shardings must divide exactly (GSPMD pads only for
+    constraints).  Entries that don't divide are RELOCATED to the largest
+    other unsharded dim that does divide, else dropped.  E.g. a (V, D)
+    embedding with V=50280 on a model=16 mesh moves 'model' to D."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, e in enumerate(entries):
+        if e is None:
+            continue
+        n = _axis_size(mesh, e)
+        if n <= 1 or shape[i] % n == 0:
+            continue
+        entries[i] = None
+        candidates = [j for j, e2 in enumerate(entries)
+                      if e2 is None and shape[j] % n == 0 and shape[j] >= n]
+        if candidates:
+            j = max(candidates, key=lambda j_: shape[j_])
+            entries[j] = e
+    return P(*entries)
+
+
+def shardings(mesh, spec_tree, shape_tree=None):
+    axes = tuple(mesh.axis_names)
+
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda sp: NamedSharding(mesh, filter_spec(sp, axes)),
+            spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+    def one(sp, leaf):
+        sp = filter_spec(sp, axes)
+        sp = sanitize_spec(mesh, sp, tuple(leaf.shape))
+        return NamedSharding(mesh, sp)
+
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               opt: Optional[AdamWConfig] = None, microbatches: int = 1):
+    """Returns (fn, arg_shapes, in_shardings, out_shardings) ready to lower.
+
+    train  -> train_step(params, opt_state, batch)
+    prefill-> prefill(params, batch)             (max_seq == seq_len)
+    decode -> decode(params, token, caches, cur_len) with cache len seq_len
+    """
+    from ..training import make_train_step
+
+    n_data = 1
+    for ax, size in zip(mesh.axis_names, mesh.devices.shape):
+        if ax in BATCH:
+            n_data *= size
+    shard_batch = shape.global_batch % n_data == 0 and shape.global_batch >= n_data
+    shard_time = (not shard_batch) and shape.kind == "decode"
+
+    params_sh, params_specs = param_shapes_and_specs(cfg)
+    p_shard = shardings(mesh, params_specs, params_sh)
+    batch_sh = input_specs(cfg, shape)
+    batch_spec = input_pspecs(cfg, shape, shard_batch)
+    b_shard = shardings(mesh, batch_spec, batch_sh)
+
+    if shape.kind == "train":
+        opt = opt or AdamWConfig()
+        opt_sh = jax.eval_shape(init_opt_state, params_sh)
+        opt_specs = zero1_specs(params_specs, params_sh)
+        o_shard = shardings(mesh, opt_specs, opt_sh)
+        fn = make_train_step(cfg, opt, microbatches)
+        metrics_shard = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), {"loss": 0, "grad_norm": 0,
+                                                 "lr_scale": 0})
+        return (fn, (params_sh, opt_sh, batch_sh),
+                (p_shard, o_shard, b_shard),
+                (p_shard, o_shard, metrics_shard))
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return lm.prefill_fn(cfg, params, batch, shape.seq_len)
+        logits_sh, caches_sh = jax.eval_shape(fn, params_sh, batch_sh)
+        msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        c_specs = cache_pspecs(cfg, caches_sh, shard_batch, False, msize)
+        c_shard = shardings(mesh, c_specs, caches_sh)
+        logits_shard = shardings(
+            mesh, P(BATCH if shard_batch else None, None, "model"),
+            logits_sh)
+        return (fn, (params_sh, batch_sh), (p_shard, b_shard),
+                (logits_shard, c_shard))
+
+    # decode
+    caches_sh = cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    c_specs = cache_pspecs(cfg, caches_sh, shard_batch, shard_time, msize)
+    c_shard = shardings(mesh, c_specs, caches_sh)
+
+    def fn(params, token, caches, cur_len):
+        return lm.decode_fn(cfg, params, token, caches, cur_len)
+
+    logits_sh = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1, cfg.vocab), jnp.float32)
+    logits_shard = shardings(
+        mesh, P(BATCH if shard_batch else None, None, "model"), logits_sh)
+    return (fn,
+            (params_sh, batch_sh["token"], caches_sh, batch_sh["cur_len"]),
+            (p_shard, b_shard["token"], c_shard, b_shard["cur_len"]),
+            (logits_shard, c_shard))

@@ -1,0 +1,17 @@
+"""Machine learning as a first-class citizen (paper §4).
+
+SQL query results become TableRDDs; feature extraction and iterative
+algorithms run over the same partitions, on the same workers, under the same
+lineage graph — no data export, end-to-end fault tolerance.
+
+The numeric kernels (gradients, distances, centroid updates) are jit-compiled
+JAX: on TPU they hit the MXU; on this CPU container they validate semantics.
+"""
+
+from .featurize import table_rdd_to_features
+from .logreg import LogisticRegression
+from .linreg import LinearRegression
+from .kmeans import KMeans
+
+__all__ = ["table_rdd_to_features", "LogisticRegression", "LinearRegression",
+           "KMeans"]

@@ -1,0 +1,45 @@
+"""Feature extraction over TableRDDs (paper §4.1, Listing 1's mapRows).
+
+`table_rdd_to_features` turns a SQL result RDD into an RDD of dense feature
+matrices (one jnp array per partition), applying an optional user mapRows
+function — the paper's ML pipeline step (2).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.batch import PartitionBatch
+from ..core.expr import ColumnVal
+from ..core.rdd import RDD
+
+
+def table_rdd_to_features(rdd: RDD, feature_cols: Sequence[str],
+                          label_col: Optional[str] = None,
+                          map_rows: Optional[Callable[[np.ndarray], np.ndarray]] = None
+                          ) -> RDD:
+    """Each partition becomes a batch with a dense float32 'features' matrix
+    (rows x len(feature_cols)) and optional 'label' vector.  Runs as a narrow
+    map, extending the SQL lineage graph."""
+
+    cols = list(feature_cols)
+
+    def extract(split: int, batch: PartitionBatch) -> PartitionBatch:
+        mats = []
+        for c in cols:
+            v = batch.col(c)
+            arr = np.asarray(v.arr, dtype=np.float32)
+            mats.append(arr)
+        x = np.stack(mats, axis=1) if mats else np.zeros((batch.num_rows, 0),
+                                                         np.float32)
+        if map_rows is not None:
+            x = np.asarray(map_rows(x), dtype=np.float32)
+        out = {"features": ColumnVal(x)}
+        if label_col is not None:
+            out["label"] = ColumnVal(
+                np.asarray(batch.col(label_col).arr, dtype=np.float32))
+        return PartitionBatch(out)
+
+    return rdd.map_partitions(extract)

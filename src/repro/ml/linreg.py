@@ -1,0 +1,57 @@
+"""Distributed linear regression (paper §4.1: "We have implemented ... linear
+regression, logistic regression, and k-means").
+
+Gradient-descent least squares over cached feature partitions, same
+map-gradient / reduce-sum structure as logistic regression.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.batch import PartitionBatch
+from ..core.expr import ColumnVal
+from ..core.rdd import RDD
+
+
+@jax.jit
+def _grad_kernel(w: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    r = x @ w - y
+    return x.T @ r
+
+
+class LinearRegression:
+    def __init__(self, dims: int, lr: float = 0.05, iterations: int = 20,
+                 seed: int = 0):
+        self.dims = dims
+        self.lr = lr
+        self.iterations = iterations
+        self.w = np.zeros(dims, np.float32)
+
+    def fit(self, features_rdd: RDD) -> "LinearRegression":
+        features_rdd.cache()
+        sched = features_rdd.ctx.scheduler
+        for _ in range(self.iterations):
+            w = jnp.asarray(self.w)
+
+            def map_grad(split: int, batch: PartitionBatch) -> PartitionBatch:
+                x = jnp.asarray(np.asarray(batch.col("features").arr))
+                y = jnp.asarray(np.asarray(batch.col("label").arr))
+                g = _grad_kernel(w, x, y)
+                return PartitionBatch({
+                    "grad": ColumnVal(np.asarray(g)[None, :]),
+                    "count": ColumnVal(np.array([x.shape[0]], np.int64))})
+
+            parts = sched.run_result_stage(
+                features_rdd.map_partitions(map_grad))
+            g = np.sum([np.asarray(b.col("grad").arr)[0] for b in parts], axis=0)
+            n = sum(int(np.asarray(b.col("count").arr)[0]) for b in parts)
+            self.w = self.w - self.lr * (g / max(n, 1)).astype(np.float32)
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(jnp.asarray(x) @ jnp.asarray(self.w))

@@ -1,0 +1,5 @@
+"""Model zoo: composable layers + the 10 assigned architectures.
+
+Import submodules directly (repro.models.lm etc.); this package init stays
+empty to avoid import cycles with repro.configs.
+"""

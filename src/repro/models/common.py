@@ -1,0 +1,198 @@
+"""Shared model components: norms, RoPE, MLPs, embeddings, chunked loss.
+
+Everything is pure-JAX pytrees (no flax): params are nested dicts, and each
+init function returns (params, specs) where specs mirrors params with
+PartitionSpecs (logical sharding rules resolved in repro.parallel).
+Layer stacks carry a leading L axis and run under jax.lax.scan to keep HLO
+size and compile time bounded at 40-80 layer depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.bfloat16,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    scale = scale if scale is not None else (1.0 / np.sqrt(in_dim))
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def stacked_dense_init(key, n: int, in_dim: int, out_dim: int,
+                       dtype=jnp.bfloat16,
+                       scale: Optional[float] = None) -> jnp.ndarray:
+    scale = scale if scale is not None else (1.0 / np.sqrt(in_dim))
+    return (jax.random.normal(key, (n, in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5
+            ) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(kind: str, x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    if kind == "rms":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+def norm_init(kind: str, dim: int, n: Optional[int] = None,
+              dtype=jnp.float32) -> Tuple[Params, Specs]:
+    shape = (dim,) if n is None else (n, dim)
+    spec = P(None) if n is None else P(None, None)
+    p = {"w": jnp.ones(shape, dtype)}
+    s = {"w": spec}
+    if kind == "ln":
+        p["b"] = jnp.zeros(shape, dtype)
+        s["b"] = spec
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # hd/2
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, kind: str, d_model: int, d_ff: int, n: Optional[int] = None,
+             dtype=jnp.bfloat16) -> Tuple[Params, Specs]:
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def mk(k, i, o):
+        if n is None:
+            return dense_init(k, i, o, dtype)
+        return stacked_dense_init(k, n, i, o, dtype)
+
+    lead = () if n is None else (None,)
+    if kind == "swiglu":
+        p = {"gate": mk(k1, d_model, d_ff), "up": mk(k2, d_model, d_ff),
+             "down": mk(k3, d_ff, d_model)}
+        s = {"gate": P(*lead, None, "model"), "up": P(*lead, None, "model"),
+             "down": P(*lead, "model", None)}
+        return p, s
+    # gelu MLP
+    p = {"fc": mk(k1, d_model, d_ff), "proj": mk(k2, d_ff, d_model),
+         "fc_b": (jnp.zeros((d_ff,) if n is None else (n, d_ff), dtype)),
+         "proj_b": (jnp.zeros((d_model,) if n is None else (n, d_model),
+                              dtype))}
+    s = {"fc": P(*lead, None, "model"), "proj": P(*lead, "model", None),
+         "fc_b": P(*lead, "model"), "proj_b": P(*lead, None)}
+    return p, s
+
+
+def mlp_apply(kind: str, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if kind == "swiglu":
+        g = x @ p["gate"]
+        u = x @ p["up"]
+        return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) \
+            @ p["down"]
+    h = x @ p["fc"] + p["fc_b"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return h @ p["proj"] + p["proj_b"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.bfloat16
+               ) -> Tuple[Params, Specs]:
+    p = {"tok": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                 * 0.02).astype(dtype)}
+    return p, {"tok": P("model", None)}
+
+
+def embed_lookup(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy: never materializes (B, S, V) logits.
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(h: jnp.ndarray, unembed: jnp.ndarray,
+                         labels: jnp.ndarray, num_chunks: int = 8
+                         ) -> jnp.ndarray:
+    """Mean next-token CE.  h: (B, S, D) final hidden states, unembed
+    (D, V), labels (B, S).  Scans over sequence chunks so peak logits memory
+    is (B, S/num_chunks, V); XLA rematerializes chunk logits in backward."""
+    b, s, d = h.shape
+    assert s % num_chunks == 0, (s, num_chunks)
+    # (scoped for HLO traffic attribution)
+    cs = s // num_chunks
+    h_chunks = h.reshape(b, num_chunks, cs, d).transpose(1, 0, 2, 3)
+    l_chunks = labels.reshape(b, num_chunks, cs).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        hc, lc = xs
+        logits = (hc @ unembed).astype(jnp.float32)        # (B, cs, V)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None],
+                                   axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (h_chunks, l_chunks))
+    return total / (b * s)
+
+
+def full_softmax_xent(h: jnp.ndarray, unembed: jnp.ndarray,
+                      labels: jnp.ndarray) -> jnp.ndarray:
+    logits = (h @ unembed).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,738 @@
+"""Architecture assembly: every assigned arch builds from ModelConfig.
+
+Families:
+  dense  — scanned stack of [norm->GQA->res, norm->MLP->res] blocks
+  moe    — MLP replaced by routed experts (optionally MLA attention,
+           optional dense layer 0 — DeepSeek-V2-Lite)
+  ssm    — scanned Mamba2 (SSD) blocks
+  hybrid — groups of [1 SHARED attention slot + k Mamba2 blocks] (Zamba2)
+  vlm    — groups of [self layers + 1 gated cross-attn layer] over stub
+           image embeddings (Llama-3.2-Vision)
+  encdec — bidirectional encoder over stub frames + causal decoder with
+           cross-attention (Whisper)
+
+All layer stacks run under jax.lax.scan (stacked params, leading L axis) so
+compile time stays bounded; bodies are jax.checkpoint'd when cfg.remat.
+Three entry points per arch: loss_fn (train), prefill_fn, decode_fn, plus
+cache_specs/input_specs used by the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import MLAConfig, ModelConfig, ShapeConfig
+from ..parallel.sharding import BATCH_AXES, act_shard, maybe_shard
+from . import attention as att
+from . import mamba2 as m2
+from . import moe as moe_mod
+from .common import (Params, Specs, chunked_softmax_xent, embed_init,
+                     embed_lookup, mlp_apply, mlp_init, norm_apply,
+                     norm_init)
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ===========================================================================
+# Parameter init
+# ===========================================================================
+
+def _decoder_layer_init(key, cfg: ModelConfig, n: int,
+                        use_moe: bool) -> Tuple[Params, Specs]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = norm_init(cfg.norm, cfg.d_model, n)
+    p["ln2"], s["ln2"] = norm_init(cfg.norm, cfg.d_model, n)
+    if cfg.mla is not None:
+        p["attn"], s["attn"] = att.mla_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.mla.kv_lora, cfg.mla.nope_dim,
+            cfg.mla.rope_dim, cfg.mla.v_dim, n)
+    else:
+        p["attn"], s["attn"] = att.gqa_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, n,
+            cfg.qkv_bias)
+    if use_moe:
+        p["moe"], s["moe"] = moe_mod.moe_init(k2, cfg.d_model, cfg.moe, n)
+    else:
+        p["mlp"], s["mlp"] = mlp_init(k2, cfg.mlp, cfg.d_model, cfg.d_ff, n)
+    return p, s
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Params, Specs]:
+    keys = jax.random.split(key, 16)
+    p: Params = {}
+    s: Specs = {}
+    p["embed"], s["embed"] = embed_init(keys[0], cfg.vocab, cfg.d_model)
+    p["final_norm"], s["final_norm"] = norm_init(cfg.norm, cfg.d_model)
+    if not cfg.tie_embeddings:
+        from .common import dense_init
+        p["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab)
+        s["lm_head"] = P(None, "model")
+
+    fam = cfg.family
+    if fam in ("dense",):
+        p["layers"], s["layers"] = _decoder_layer_init(
+            keys[2], cfg, cfg.n_layers, use_moe=False)
+    elif fam == "moe":
+        n_moe = cfg.n_layers - (1 if cfg.moe.first_dense else 0)
+        p["layers"], s["layers"] = _decoder_layer_init(
+            keys[2], cfg, n_moe, use_moe=True)
+        if cfg.moe.first_dense:
+            dense_cfg = dataclasses.replace(cfg, d_ff=cfg.moe.dense_d_ff)
+            p["layer0"], s["layer0"] = _decoder_layer_init(
+                keys[3], dense_cfg, None, use_moe=False)
+    elif fam == "ssm":
+        p["layers"], s["layers"] = {}, {}
+        p["layers"]["ln"], s["layers"]["ln"] = norm_init(
+            cfg.norm, cfg.d_model, cfg.n_layers)
+        p["layers"]["mamba"], s["layers"]["mamba"] = m2.mamba2_init(
+            keys[2], cfg.d_model, cfg.ssm, cfg.n_layers)
+    elif fam == "hybrid":
+        per = cfg.attn_every  # group = 1 shared-attn slot + (per-1) mamba
+        n_groups = cfg.n_layers // per
+        n_group_mamba = per - 1
+        n_tail = cfg.n_layers - n_groups * per
+        gp, gs = {}, {}
+        gp["ln"], gs["ln"] = norm_init(cfg.norm, cfg.d_model,
+                                       n_groups * n_group_mamba)
+        gp["mamba"], gs["mamba"] = m2.mamba2_init(
+            keys[2], cfg.d_model, cfg.ssm, n_groups * n_group_mamba)
+        p["group_mamba"] = jax.tree.map(
+            lambda a: a.reshape((n_groups, n_group_mamba) + a.shape[1:]), gp)
+        s["group_mamba"] = jax.tree.map(
+            lambda sp: P(None, *sp), gs,
+            is_leaf=lambda x: isinstance(x, P))
+        if n_tail:
+            tp, ts = {}, {}
+            tp["ln"], ts["ln"] = norm_init(cfg.norm, cfg.d_model, n_tail)
+            tp["mamba"], ts["mamba"] = m2.mamba2_init(
+                keys[3], cfg.d_model, cfg.ssm, n_tail)
+            p["tail_mamba"], s["tail_mamba"] = tp, ts
+        ap, asx = {}, {}
+        ap["ln"], asx["ln"] = norm_init(cfg.norm, cfg.d_model)
+        ap["attn"], asx["attn"] = att.gqa_init(
+            keys[4], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+        ap["ln2"], asx["ln2"] = norm_init(cfg.norm, cfg.d_model)
+        ap["mlp"], asx["mlp"] = mlp_init(keys[5], cfg.mlp, cfg.d_model,
+                                         cfg.d_ff)
+        p["shared_attn"], s["shared_attn"] = ap, asx
+    elif fam == "vlm":
+        per = cfg.cross_every
+        n_groups = cfg.n_layers // per
+        n_self = per - 1
+        sp_, ss_ = _decoder_layer_init(keys[2], cfg, n_groups * n_self,
+                                       use_moe=False)
+        p["self_layers"] = jax.tree.map(
+            lambda a: a.reshape((n_groups, n_self) + a.shape[1:]), sp_)
+        s["self_layers"] = jax.tree.map(
+            lambda sp: P(None, *sp), ss_, is_leaf=lambda x: isinstance(x, P))
+        cp, cs = {}, {}
+        cp["ln"], cs["ln"] = norm_init(cfg.norm, cfg.d_model, n_groups)
+        cp["attn"], cs["attn"] = att.gqa_init(
+            keys[3], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            n_groups)
+        cp["gate"] = jnp.zeros((n_groups,), jnp.float32)
+        cs["gate"] = P(None)
+        cp["ln_mlp"], cs["ln_mlp"] = norm_init(cfg.norm, cfg.d_model,
+                                               n_groups)
+        cp["mlp"], cs["mlp"] = mlp_init(keys[4], cfg.mlp, cfg.d_model,
+                                        cfg.d_ff, n_groups)
+        cp["mlp_gate"] = jnp.zeros((n_groups,), jnp.float32)
+        cs["mlp_gate"] = P(None)
+        p["cross_layers"], s["cross_layers"] = cp, cs
+    elif fam == "encdec":
+        ep, es = {}, {}
+        ep["ln1"], es["ln1"] = norm_init(cfg.norm, cfg.d_model,
+                                         cfg.enc_layers)
+        ep["attn"], es["attn"] = att.gqa_init(
+            keys[2], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            cfg.enc_layers)
+        ep["ln2"], es["ln2"] = norm_init(cfg.norm, cfg.d_model,
+                                         cfg.enc_layers)
+        ep["mlp"], es["mlp"] = mlp_init(keys[3], cfg.mlp, cfg.d_model,
+                                        cfg.d_ff, cfg.enc_layers)
+        p["encoder"], s["encoder"] = ep, es
+        p["enc_final_norm"], s["enc_final_norm"] = norm_init(cfg.norm,
+                                                             cfg.d_model)
+        dp, ds = _decoder_layer_init(keys[4], cfg, cfg.n_layers,
+                                     use_moe=False)
+        dp["ln_cross"], ds["ln_cross"] = norm_init(cfg.norm, cfg.d_model,
+                                                   cfg.n_layers)
+        dp["cross"], ds["cross"] = att.gqa_init(
+            keys[5], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            cfg.n_layers)
+        p["layers"], s["layers"] = dp, ds
+    else:
+        raise ValueError(fam)
+    return p, s
+
+
+# ===========================================================================
+# Block applications (full sequence)
+# ===========================================================================
+
+def _attn_full(cfg: ModelConfig, lp: Params, x, positions, return_kv=False):
+    if cfg.mla is not None:
+        m = cfg.mla
+        return att.mla_attention(lp, x, positions, cfg.n_heads, m.nope_dim,
+                                 m.rope_dim, m.v_dim, cfg.kv_chunk,
+                                 return_kv=return_kv,
+                                 seq_shard=cfg.attn_seq_shard)
+    return att.self_attention(lp, x, positions, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.hd, cfg.rope_theta, cfg.kv_chunk,
+                              return_kv=return_kv,
+                              scores_dtype=cfg.attn_scores_dtype,
+                              chunk_remat=cfg.attn_chunk_remat,
+                              impl=cfg.attn_impl,
+                              seq_shard=cfg.attn_seq_shard)
+
+
+def _decoder_block_full(cfg: ModelConfig, lp: Params, x, positions,
+                        use_moe: bool, return_kv=False):
+    h = norm_apply(cfg.norm, x, lp["ln1"])
+    if return_kv:
+        a, kv = _attn_full(cfg, lp["attn"], h, positions, True)
+    else:
+        a = _attn_full(cfg, lp["attn"], h, positions, False)
+        kv = None
+    x = x + a
+    h = norm_apply(cfg.norm, x, lp["ln2"])
+    aux = jnp.zeros((), jnp.float32)
+    if use_moe:
+        apply = (moe_mod.moe_apply_ep if cfg.moe_impl == "ep_shardmap"
+                 else moe_mod.moe_apply)
+        y, stats = apply(lp["moe"], h, cfg.moe, return_stats=True)
+        # aux: penalize load imbalance via the dropped-assignment fraction
+        # (the expert_load vector is also the PDE heavy-hitter statistic)
+        aux = stats["frac_dropped"]
+    else:
+        y = mlp_apply(cfg.mlp, lp["mlp"], h)
+    x = x + y
+    x = act_shard(x, "hidden_seq" if cfg.seq_parallel_residual else "hidden")
+    return x, kv, aux
+
+
+def _scan_blocks(cfg: ModelConfig, layers: Params, x, positions,
+                 use_moe: bool, collect_kv: bool):
+    def body(carry, lp):
+        xx, aux_sum = carry
+        xx, kv, aux = _decoder_block_full(cfg, lp, xx, positions, use_moe,
+                                          collect_kv)
+        return (xx, aux_sum + aux), kv
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), kvs = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                 layers)
+    return x, kvs, aux
+
+
+# ===========================================================================
+# Full-sequence forward (shared by train and prefill)
+# ===========================================================================
+
+def _backbone_full(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                   extra: Dict[str, jnp.ndarray], collect_kv: bool):
+    """Returns (final hidden states, caches-if-collecting, aux loss)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed_lookup(params["embed"], tokens)
+    x = act_shard(x, "hidden_seq" if cfg.seq_parallel_residual else "hidden")
+    caches: Dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam == "dense":
+        x, kvs, aux = _scan_blocks(cfg, params["layers"], x, positions,
+                                   False, collect_kv)
+        if collect_kv:
+            caches["k"], caches["v"] = kvs
+    elif fam == "moe":
+        if cfg.moe.first_dense:
+            dense_cfg = dataclasses.replace(cfg, d_ff=cfg.moe.dense_d_ff)
+            x, kv0, _ = _decoder_block_full(dense_cfg, params["layer0"], x,
+                                            positions, False, collect_kv)
+            if collect_kv:
+                caches["kv0"] = kv0
+        x, kvs, aux = _scan_blocks(cfg, params["layers"], x, positions,
+                                   True, collect_kv)
+        if collect_kv:
+            if cfg.mla is not None:
+                caches["ckv"], caches["kr"] = kvs
+            else:
+                caches["k"], caches["v"] = kvs
+    elif fam == "ssm":
+        def body(carry, lp):
+            xx = carry
+            h = norm_apply(cfg.norm, xx, lp["ln"])
+            if collect_kv:
+                y, st, cst = m2.mamba2_forward(lp["mamba"], h, cfg.d_model,
+                                               cfg.ssm, return_state=True)
+                return xx + y, (st, cst)
+            y = m2.mamba2_forward(lp["mamba"], h, cfg.d_model, cfg.ssm)
+            return xx + y, None
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, sts = jax.lax.scan(body_fn, x, params["layers"])
+        if collect_kv:
+            caches["ssm"], caches["conv"] = sts
+    elif fam == "hybrid":
+        x, caches, aux = _hybrid_full(cfg, params, x, positions, collect_kv)
+    elif fam == "vlm":
+        x, caches, aux = _vlm_full(cfg, params, x, positions,
+                                   extra["image_embeds"], collect_kv)
+    elif fam == "encdec":
+        enc = _encoder_full(cfg, params, extra["frames"])
+        x, caches, aux = _encdec_decoder_full(cfg, params, x, positions, enc,
+                                              collect_kv)
+    else:
+        raise ValueError(fam)
+
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    return x, caches, aux
+
+
+def _hybrid_full(cfg: ModelConfig, params, x, positions, collect_kv):
+    per = cfg.attn_every
+    n_groups = cfg.n_layers // per
+    caches: Dict[str, Any] = {}
+    ap = params["shared_attn"]
+
+    def group_body(carry, gp):
+        xx = carry
+        # shared attention slot (params closed over — shared across groups)
+        h = norm_apply(cfg.norm, xx, ap["ln"])
+        if collect_kv:
+            a, kv = att.self_attention(
+                ap["attn"], h, positions, cfg.n_heads, cfg.n_kv_heads,
+                cfg.hd, cfg.rope_theta, cfg.kv_chunk, return_kv=True)
+        else:
+            a = att.self_attention(
+                ap["attn"], h, positions, cfg.n_heads, cfg.n_kv_heads,
+                cfg.hd, cfg.rope_theta, cfg.kv_chunk)
+            kv = None
+        xx = xx + a
+        h = norm_apply(cfg.norm, xx, ap["ln2"])
+        xx = xx + mlp_apply(cfg.mlp, ap["mlp"], h)
+
+        def mamba_body(c2, lp):
+            h2 = norm_apply(cfg.norm, c2, lp["ln"])
+            if collect_kv:
+                y, st, cst = m2.mamba2_forward(lp["mamba"], h2, cfg.d_model,
+                                               cfg.ssm, return_state=True)
+                return c2 + y, (st, cst)
+            y = m2.mamba2_forward(lp["mamba"], h2, cfg.d_model, cfg.ssm)
+            return c2 + y, None
+
+        xx, sts = jax.lax.scan(mamba_body, xx, gp)
+        xx = act_shard(xx, "hidden")
+        return xx, (kv, sts)
+
+    body_fn = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, ys = jax.lax.scan(body_fn, x, params["group_mamba"])
+    if collect_kv:
+        kvs, sts = ys
+        caches["attn_k"], caches["attn_v"] = kvs
+        caches["group_ssm"], caches["group_conv"] = sts
+
+    if "tail_mamba" in params:
+        def tail_body(carry, lp):
+            h2 = norm_apply(cfg.norm, carry, lp["ln"])
+            if collect_kv:
+                y, st, cst = m2.mamba2_forward(lp["mamba"], h2, cfg.d_model,
+                                               cfg.ssm, return_state=True)
+                return carry + y, (st, cst)
+            y = m2.mamba2_forward(lp["mamba"], h2, cfg.d_model, cfg.ssm)
+            return carry + y, None
+        tail_fn = jax.checkpoint(tail_body) if cfg.remat else tail_body
+        x, tst = jax.lax.scan(tail_fn, x, params["tail_mamba"])
+        if collect_kv:
+            caches["tail_ssm"], caches["tail_conv"] = tst
+    return x, caches, jnp.zeros((), jnp.float32)
+
+
+def _vlm_full(cfg: ModelConfig, params, x, positions, image_embeds,
+              collect_kv):
+    caches: Dict[str, Any] = {}
+
+    def group_body(carry, gp):
+        xx = carry
+        sp, cp = gp
+
+        def self_body(c2, lp):
+            y, kv, _ = _decoder_block_full(cfg, lp, c2, positions, False,
+                                           collect_kv)
+            return y, kv
+
+        xx, kvs = jax.lax.scan(self_body, xx, sp)
+        # gated cross-attention layer
+        h = norm_apply(cfg.norm, xx, cp["ln"])
+        ca = att.cross_attention(cp["attn"], h, image_embeds, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.hd)
+        xx = xx + jnp.tanh(cp["gate"]).astype(xx.dtype) * ca
+        h = norm_apply(cfg.norm, xx, cp["ln_mlp"])
+        y = mlp_apply(cfg.mlp, cp["mlp"], h)
+        xx = xx + jnp.tanh(cp["mlp_gate"]).astype(xx.dtype) * y
+        xx = act_shard(xx, "hidden")
+        ckv = att.cross_kv(cp["attn"], image_embeds, cfg.n_kv_heads,
+                           cfg.hd) if collect_kv else None
+        return xx, (kvs, ckv)
+
+    body_fn = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, ys = jax.lax.scan(body_fn, x,
+                         (params["self_layers"], params["cross_layers"]))
+    if collect_kv:
+        kvs, ckv = ys
+        caches["k"], caches["v"] = kvs          # (G, S_len, B, ...)? no: see scan
+        caches["xk"], caches["xv"] = ckv
+    return x, caches, jnp.zeros((), jnp.float32)
+
+
+def _encoder_full(cfg: ModelConfig, params, frames):
+    b, t, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    x = frames.astype(jnp.bfloat16)
+
+    def body(carry, lp):
+        xx = carry
+        h = norm_apply(cfg.norm, xx, lp["ln1"])
+        a = att.self_attention(lp["attn"], h, positions, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.hd, cfg.rope_theta,
+                               cfg.kv_chunk, causal=False)
+        xx = xx + a
+        h = norm_apply(cfg.norm, xx, lp["ln2"])
+        xx = xx + mlp_apply(cfg.mlp, lp["mlp"], h)
+        return xx, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    return norm_apply(cfg.norm, x, params["enc_final_norm"])
+
+
+def _encdec_decoder_full(cfg: ModelConfig, params, x, positions, enc,
+                         collect_kv):
+    caches: Dict[str, Any] = {}
+
+    def body(carry, lp):
+        xx = carry
+        h = norm_apply(cfg.norm, xx, lp["ln1"])
+        if collect_kv:
+            a, kv = att.self_attention(lp["attn"], h, positions, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.hd, cfg.rope_theta,
+                                       cfg.kv_chunk, return_kv=True)
+        else:
+            a = att.self_attention(lp["attn"], h, positions, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd, cfg.rope_theta,
+                                   cfg.kv_chunk)
+            kv = None
+        xx = xx + a
+        h = norm_apply(cfg.norm, xx, lp["ln_cross"])
+        xx = xx + att.cross_attention(lp["cross"], h, enc, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.hd)
+        h = norm_apply(cfg.norm, xx, lp["ln2"])
+        xx = xx + mlp_apply(cfg.mlp, lp["mlp"], h)
+        ckv = att.cross_kv(lp["cross"], enc, cfg.n_kv_heads, cfg.hd) \
+            if collect_kv else None
+        return xx, (kv, ckv)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, ys = jax.lax.scan(body_fn, x, params["layers"])
+    if collect_kv:
+        kvs, ckv = ys
+        caches["k"], caches["v"] = kvs
+        caches["xk"], caches["xv"] = ckv
+    return x, caches, jnp.zeros((), jnp.float32)
+
+
+# ===========================================================================
+# Public: train loss
+# ===========================================================================
+
+def _unembed(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"]["tok"].T
+    return params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    h, _, aux = _backbone_full(cfg, params, batch["tokens"],
+                               batch, collect_kv=False)
+    loss = chunked_softmax_xent(h, _unembed(cfg, params), batch["labels"],
+                                cfg.loss_chunks)
+    return loss + AUX_LOSS_WEIGHT * aux
+
+
+# ===========================================================================
+# Public: prefill — full-seq forward that also materializes caches
+# ===========================================================================
+
+def prefill_fn(cfg: ModelConfig, params: Params,
+               batch: Dict[str, jnp.ndarray], max_seq: int):
+    """Returns (last-position logits, caches sized to max_seq)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h, kv, _ = _backbone_full(cfg, params, tokens, batch, collect_kv=True)
+    logits = (h[:, -1:, :] @ _unembed(cfg, params)).astype(jnp.float32)
+    caches = _grow_caches(cfg, kv, b, s, max_seq)
+    return logits, caches
+
+
+def _pad_time(a: jnp.ndarray, time_axis: int, max_seq: int) -> jnp.ndarray:
+    pad = [(0, 0)] * a.ndim
+    pad[time_axis] = (0, max_seq - a.shape[time_axis])
+    return jnp.pad(a, pad)
+
+
+def _grow_caches(cfg: ModelConfig, kv: Dict[str, Any], b, s, max_seq):
+    """Prefill emits tight (seq=s) caches; pad the time axis to max_seq so
+    decode can write new entries in place."""
+    out = dict(kv)
+    fam = cfg.family
+    # scanned kv stacks have shape (L, B, S, heads, hd); time axis = 2.
+    # vlm stacks are (G, n_self, B, S, heads, hd); time axis = 3.
+    t_axis = 3 if fam == "vlm" else 2
+    if cfg.kv_cache_quant and "k" in out and fam in ("dense", "moe"):
+        # int8 KV cache (perf variant kv_int8): quantize the prefill cache
+        kq, ks = att.quantize_kv(out.pop("k"))
+        vq, vs = att.quantize_kv(out.pop("v"))
+        out["k"] = _pad_time(kq, t_axis, max_seq)
+        out["v"] = _pad_time(vq, t_axis, max_seq)
+        out["k_scale"] = _pad_time(ks, t_axis, max_seq)
+        out["v_scale"] = _pad_time(vs, t_axis, max_seq)
+        return out
+    for name in ("k", "v"):
+        if name in out:
+            out[name] = _pad_time(out[name], t_axis, max_seq)
+    if "ckv" in out:   # MLA: (L, B, S, lora) / (L, B, S, rope)
+        out["ckv"] = _pad_time(out["ckv"], 2, max_seq)
+        out["kr"] = _pad_time(out["kr"], 2, max_seq)
+    if "kv0" in out and out["kv0"] is not None:  # unscanned layer0 (B,S,..)
+        a0, b0 = out.pop("kv0")   # (k, v) for GQA; (c_kv, k_rope) for MLA
+        out["k0"] = _pad_time(a0, 1, max_seq)
+        out["v0"] = _pad_time(b0, 1, max_seq)
+    if "attn_k" in out:  # hybrid shared attention (G, B, S, kv, hd)
+        out["attn_k"] = _pad_time(out["attn_k"], 2, max_seq)
+        out["attn_v"] = _pad_time(out["attn_v"], 2, max_seq)
+    return out
+
+
+# ===========================================================================
+# Public: decode — one token against caches
+# ===========================================================================
+
+def decode_fn(cfg: ModelConfig, params: Params, token: jnp.ndarray,
+              caches: Dict[str, Any], cur_len: jnp.ndarray):
+    """token: (B, 1) int32; cur_len: scalar count of valid cache entries.
+    Returns (logits (B,1,V) fp32, updated caches)."""
+    b = token.shape[0]
+    x = embed_lookup(params["embed"], token)
+    fam = cfg.family
+    new_caches = dict(caches)
+
+    if fam in ("dense", "moe"):
+        use_moe = fam == "moe"
+        if fam == "moe" and cfg.moe.first_dense:
+            dense_cfg = dataclasses.replace(cfg, d_ff=cfg.moe.dense_d_ff)
+            if cfg.mla is not None:
+                x, (new_caches["k0"], new_caches["v0"]) = \
+                    _decoder_block_decode(
+                        dense_cfg, params["layer0"], x, None, None,
+                        caches["k0"], caches["v0"], cur_len, False)
+            else:
+                x, (new_caches["k0"], new_caches["v0"]) = \
+                    _decoder_block_decode(
+                        dense_cfg, params["layer0"], x, caches["k0"],
+                        caches["v0"], None, None, cur_len, False)
+        if cfg.mla is not None:
+            def body(carry, inp):
+                xx = carry
+                lp, ckv, kr = inp
+                y, (ckv2, kr2) = _decoder_block_decode(
+                    cfg, lp, xx, None, None, ckv, kr, cur_len, use_moe)
+                return y, (ckv2, kr2)
+            x, (ckv_new, kr_new) = jax.lax.scan(
+                body, x, (params["layers"], caches["ckv"], caches["kr"]))
+            new_caches["ckv"], new_caches["kr"] = ckv_new, kr_new
+        elif cfg.kv_cache_quant:
+            def body(carry, inp):
+                xx = carry
+                lp, ck, cks, cv, cvs = inp
+                h = norm_apply(cfg.norm, xx, lp["ln1"])
+                a, (ck2, cks2, cv2, cvs2) = att.decode_attention_q8(
+                    lp["attn"], h, ck, cks, cv, cvs, cur_len, cfg.n_heads,
+                    cfg.n_kv_heads, cfg.hd, cfg.rope_theta)
+                xx = xx + a
+                h = norm_apply(cfg.norm, xx, lp["ln2"])
+                if use_moe:
+                    y = moe_mod.moe_apply(lp["moe"], h, cfg.moe,
+                                          dropless=True)
+                else:
+                    y = mlp_apply(cfg.mlp, lp["mlp"], h)
+                return xx + y, (ck2, cks2, cv2, cvs2)
+            x, (k_new, ks_new, v_new, vs_new) = jax.lax.scan(
+                body, x, (params["layers"], caches["k"], caches["k_scale"],
+                          caches["v"], caches["v_scale"]))
+            new_caches["k"], new_caches["k_scale"] = k_new, ks_new
+            new_caches["v"], new_caches["v_scale"] = v_new, vs_new
+        else:
+            def body(carry, inp):
+                xx = carry
+                lp, ck, cv = inp
+                y, (ck2, cv2) = _decoder_block_decode(
+                    cfg, lp, xx, ck, cv, None, None, cur_len, use_moe)
+                return y, (ck2, cv2)
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["layers"], caches["k"], caches["v"]))
+            new_caches["k"], new_caches["v"] = k_new, v_new
+    elif fam == "ssm":
+        def body(carry, inp):
+            xx = carry
+            lp, st, cst = inp
+            h = norm_apply(cfg.norm, xx, lp["ln"])
+            y, st2, cst2 = m2.mamba2_decode(lp["mamba"], h, st, cst,
+                                            cfg.d_model, cfg.ssm)
+            return xx + y, (st2, cst2)
+        x, (ssm_new, conv_new) = jax.lax.scan(
+            body, x, (params["layers"], caches["ssm"], caches["conv"]))
+        new_caches["ssm"], new_caches["conv"] = ssm_new, conv_new
+    elif fam == "hybrid":
+        x, new_caches = _hybrid_decode(cfg, params, x, caches, cur_len)
+    elif fam == "vlm":
+        x, new_caches = _vlm_decode(cfg, params, x, caches, cur_len)
+    elif fam == "encdec":
+        x, new_caches = _encdec_decode(cfg, params, x, caches, cur_len)
+    else:
+        raise ValueError(fam)
+
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    logits = (x @ _unembed(cfg, params)).astype(jnp.float32)
+    return logits, new_caches
+
+
+def _decoder_block_decode(cfg: ModelConfig, lp, x, ck, cv, ckv, kr, cur_len,
+                          use_moe: bool):
+    h = norm_apply(cfg.norm, x, lp["ln1"])
+    if cfg.mla is not None and ckv is not None:
+        m = cfg.mla
+        a, cache = att.mla_decode(lp["attn"], h, ckv, kr, cur_len,
+                                  cfg.n_heads, m.nope_dim, m.rope_dim,
+                                  m.v_dim)
+    else:
+        a, cache = att.decode_attention(lp["attn"], h, ck, cv, cur_len,
+                                        cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                        cfg.rope_theta)
+    x = x + a
+    h = norm_apply(cfg.norm, x, lp["ln2"])
+    if use_moe:
+        y = moe_mod.moe_apply(lp["moe"], h, cfg.moe, dropless=True)
+    else:
+        y = mlp_apply(cfg.mlp, lp["mlp"], h)
+    return x + y, cache
+
+
+def _hybrid_decode(cfg: ModelConfig, params, x, caches, cur_len):
+    ap = params["shared_attn"]
+    new = dict(caches)
+
+    def group_body(carry, inp):
+        xx = carry
+        gp, ck, cv, sts, csts = inp
+        h = norm_apply(cfg.norm, xx, ap["ln"])
+        a, (ck2, cv2) = att.decode_attention(
+            ap["attn"], h, ck, cv, cur_len, cfg.n_heads, cfg.n_kv_heads,
+            cfg.hd, cfg.rope_theta)
+        xx = xx + a
+        h = norm_apply(cfg.norm, xx, ap["ln2"])
+        xx = xx + mlp_apply(cfg.mlp, ap["mlp"], h)
+
+        def mamba_body(c2, minp):
+            lp, st, cst = minp
+            h2 = norm_apply(cfg.norm, c2, lp["ln"])
+            y, st2, cst2 = m2.mamba2_decode(lp["mamba"], h2, st, cst,
+                                            cfg.d_model, cfg.ssm)
+            return c2 + y, (st2, cst2)
+
+        xx, (st2, cst2) = jax.lax.scan(mamba_body, xx, (gp, sts, csts))
+        return xx, (ck2, cv2, st2, cst2)
+
+    x, (k2, v2, s2, c2) = jax.lax.scan(
+        group_body, x,
+        (params["group_mamba"], caches["attn_k"], caches["attn_v"],
+         caches["group_ssm"], caches["group_conv"]))
+    new["attn_k"], new["attn_v"] = k2, v2
+    new["group_ssm"], new["group_conv"] = s2, c2
+
+    if "tail_mamba" in params:
+        def tail_body(carry, inp):
+            lp, st, cst = inp
+            h2 = norm_apply(cfg.norm, carry, lp["ln"])
+            y, st2, cst2 = m2.mamba2_decode(lp["mamba"], h2, st, cst,
+                                            cfg.d_model, cfg.ssm)
+            return carry + y, (st2, cst2)
+        x, (ts2, tc2) = jax.lax.scan(
+            tail_body, x, (params["tail_mamba"], caches["tail_ssm"],
+                           caches["tail_conv"]))
+        new["tail_ssm"], new["tail_conv"] = ts2, tc2
+    return x, new
+
+
+def _vlm_decode(cfg: ModelConfig, params, x, caches, cur_len):
+    new = dict(caches)
+
+    def group_body(carry, inp):
+        xx = carry
+        sp, cp, ck, cv, xk, xv = inp
+
+        def self_body(c2, sinp):
+            lp, ck1, cv1 = sinp
+            y, (ck2, cv2) = _decoder_block_decode(cfg, lp, c2, ck1, cv1,
+                                                  None, None, cur_len, False)
+            return y, (ck2, cv2)
+
+        xx, (ck2, cv2) = jax.lax.scan(self_body, xx, (sp, ck, cv))
+        h = norm_apply(cfg.norm, xx, cp["ln"])
+        ca = att.cross_attention_cached(cp["attn"], h, xk, xv, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.hd)
+        xx = xx + jnp.tanh(cp["gate"]).astype(xx.dtype) * ca
+        h = norm_apply(cfg.norm, xx, cp["ln_mlp"])
+        y = mlp_apply(cfg.mlp, cp["mlp"], h)
+        xx = xx + jnp.tanh(cp["mlp_gate"]).astype(xx.dtype) * y
+        return xx, (ck2, cv2)
+
+    x, (k2, v2) = jax.lax.scan(
+        group_body, x,
+        (params["self_layers"], params["cross_layers"], caches["k"],
+         caches["v"], caches["xk"], caches["xv"]))
+    new["k"], new["v"] = k2, v2
+    return x, new
+
+
+def _encdec_decode(cfg: ModelConfig, params, x, caches, cur_len):
+    new = dict(caches)
+
+    def body(carry, inp):
+        xx = carry
+        lp, ck, cv, xk, xv = inp
+        h = norm_apply(cfg.norm, xx, lp["ln1"])
+        a, (ck2, cv2) = att.decode_attention(
+            lp["attn"], h, ck, cv, cur_len, cfg.n_heads, cfg.n_kv_heads,
+            cfg.hd, cfg.rope_theta)
+        xx = xx + a
+        h = norm_apply(cfg.norm, xx, lp["ln_cross"])
+        xx = xx + att.cross_attention_cached(lp["cross"], h, xk, xv,
+                                             cfg.n_heads, cfg.n_kv_heads,
+                                             cfg.hd)
+        h = norm_apply(cfg.norm, xx, lp["ln2"])
+        xx = xx + mlp_apply(cfg.mlp, lp["mlp"], h)
+        return xx, (ck2, cv2)
+
+    x, (k2, v2) = jax.lax.scan(
+        body, x, (params["layers"], caches["k"], caches["v"], caches["xk"],
+                  caches["xv"]))
+    new["k"], new["v"] = k2, v2
+    return x, new

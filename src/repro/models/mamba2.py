@@ -1,0 +1,246 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Training/prefill uses the chunked SSD algorithm: the sequence splits into
+chunks; within a chunk the computation is a masked (attention-like) matmul —
+MXU-friendly — and a lax.scan carries the (H, P, N) state across chunks,
+giving O(S) work with matmul-dominated inner loops.  Decode is the linear
+recurrence  state' = da * state + dt * (B outer x);  y = C . state'.
+
+Layer = [in_proj -> short causal conv (cached at decode) -> SSD -> gated
+RMSNorm -> out_proj], matching the Mamba2 block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import Params, Specs, rmsnorm, stacked_dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    headdim: int = 64
+    ngroups: int = 1
+    d_conv: int = 4
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+def mamba2_init(key, d_model: int, cfg: SSMConfig,
+                n_layers: Optional[int] = None, dtype=jnp.bfloat16
+                ) -> Tuple[Params, Specs]:
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    g, n = cfg.ngroups, cfg.d_state
+    # in_proj emits [z (di), x (di), B (g*n), C (g*n), dt (nh)]
+    proj_out = 2 * di + 2 * g * n + nh
+    ks = jax.random.split(key, 4)
+    mk = (lambda k, i, o: stacked_dense_init(k, n_layers, i, o, dtype)
+          if n_layers is not None else
+          stacked_dense_init(k, 1, i, o, dtype)[0])
+    lead = () if n_layers is None else (None,)
+
+    def vec(shape_tail, val=0.0):
+        shape = shape_tail if n_layers is None else (n_layers,) + shape_tail
+        return jnp.full(shape, val, jnp.float32)
+
+    conv_dim = di + 2 * g * n
+    p = {
+        "in_proj": mk(ks[0], d_model, proj_out),
+        "conv_w": (jax.random.normal(ks[1], ((n_layers or 1), conv_dim,
+                                             cfg.d_conv), jnp.float32) * 0.1
+                   ).astype(dtype) if n_layers is not None else
+                  (jax.random.normal(ks[1], (conv_dim, cfg.d_conv),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": vec((conv_dim,)),
+        "A_log": vec((nh,), 0.0),     # A = -exp(A_log)
+        "D": vec((nh,), 1.0),
+        "dt_bias": vec((nh,), 0.0),
+        "norm_w": vec((di,), 1.0),
+        "out_proj": mk(ks[3], di, d_model),
+    }
+    s = {
+        "in_proj": P(*lead, None, "model"),
+        "conv_w": P(*lead, "model", None),
+        "conv_b": P(*lead, "model"),
+        "A_log": P(*lead, None), "D": P(*lead, None),
+        "dt_bias": P(*lead, None),
+        "norm_w": P(*lead, "model"),
+        "out_proj": P(*lead, "model", None),
+    }
+    return p, s
+
+
+def _split_proj(zxbcdt: jnp.ndarray, d_inner: int, g: int, n: int, nh: int):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    B = zxbcdt[..., 2 * d_inner:2 * d_inner + g * n]
+    C = zxbcdt[..., 2 * d_inner + g * n:2 * d_inner + 2 * g * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * g * n:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv over sequence.  xbc: (B,S,C); w: (C,K)."""
+    k = w.shape[-1]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):  # K=4: unrolled taps, fuses into one VPU expression
+        out = out + pad[:, i:i + xbc.shape[1], :].astype(jnp.float32) \
+            * w[:, i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+                chunk: int, init_state: Optional[jnp.ndarray] = None):
+    """SSD scan.  x: (b,s,h,p); dt: (b,s,h) (post-softplus); A: (h) (<0);
+    B, C: (b,s,g,n).  Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p_ = x.shape
+    g, n = B.shape[2], B.shape[3]
+    s_orig = s
+    if s % chunk != 0:
+        # pad with dt=0 rows: state passes through unchanged, outputs dropped
+        pad = chunk - s % chunk
+        pz = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = pz(x), pz(dt), pz(B), pz(C)
+        s = s + pad
+    nc = s // chunk
+    hg = h // g  # heads per B/C group
+
+    xc = x.reshape(b, nc, chunk, h, p_)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    dA = dtc * A[None, None, None, :]                  # (b,nc,c,h) negative
+    dA_cum = jnp.cumsum(dA, axis=2)                    # within-chunk cumsum
+
+    # intra-chunk (quadratic within chunk, matmul form)
+    # L[i,j] = exp(dA_cum[i] - dA_cum[j]) for i >= j
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # (b,nc,c,c,h)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+    # scores: C_i . B_j
+    CB = jnp.einsum("bzcgn,bzdgn->bzcdg", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))            # (b,nc,c,c,g)
+    CB = jnp.repeat(CB, hg, axis=-1)                   # (b,nc,c,c,h)
+    M = CB * L * dtc[:, :, None, :, :]                 # weight by dt_j
+    y_intra = jnp.einsum("bzcdh,bzdhp->bzchp", M, xc.astype(jnp.float32))
+
+    # chunk summary states: S_z = sum_j exp(dA_cum[last]-dA_cum[j]) dt_j B_j x_j
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)      # (b,nc,c,h)
+    B_h = jnp.repeat(Bc.astype(jnp.float32), hg, axis=3) \
+        .reshape(b, nc, chunk, h, n)                    # per-head B
+    contrib = jnp.einsum("bzch,bzchn,bzchp->bzhpn",
+                         (decay_to_end * dtc), B_h,
+                         xc.astype(jnp.float32))        # (b,nc,h,p,n)
+
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))         # (b,nc,h)
+
+    def scan_body(state, inp):
+        contrib_z, decay_z, Cz, dAc_z = inp
+        # inter-chunk contribution: y_j += C_j . (decay_into_chunk * state)
+        state_in = state                                # (b,h,p,n)
+        decay_from_start = jnp.exp(dAc_z)               # (b,c,h)
+        Cz_h = jnp.repeat(Cz, hg, axis=2).reshape(
+            Cz.shape[0], Cz.shape[1], h, n)
+        y_inter = jnp.einsum("bchn,bhpn,bch->bchp",
+                             Cz_h.astype(jnp.float32), state_in,
+                             decay_from_start)
+        state_out = state_in * decay_z[:, :, None, None] + contrib_z
+        return state_out, y_inter
+
+    state0 = init_state if init_state is not None \
+        else jnp.zeros((b, h, p_, n), jnp.float32)
+    contrib_t = contrib.transpose(1, 0, 2, 3, 4)
+    decay_t = chunk_decay.transpose(1, 0, 2)
+    C_t = Cc.transpose(1, 0, 2, 3, 4)
+    dAcum_t = dA_cum.transpose(1, 0, 2, 3)
+    final_state, y_inter = jax.lax.scan(
+        scan_body, state0, (contrib_t, decay_t, C_t, dAcum_t))
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)          # (b,nc,c,h,p)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p_)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y[:, :s_orig].astype(x.dtype), final_state
+
+
+def mamba2_forward(p: Params, x: jnp.ndarray, d_model: int, cfg: SSMConfig,
+                   return_state: bool = False):
+    """Full-sequence Mamba2 block (train / prefill).  x: (B,S,D)."""
+    b, s, _ = x.shape
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    g, n = cfg.ngroups, cfg.d_state
+    zxbcdt = x @ p["in_proj"]
+    z, xs, B, C, dt = _split_proj(zxbcdt, di, g, n, nh)
+    xbc_raw = jnp.concatenate([xs, B, C], axis=-1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, B, C = (xbc[..., :di], xbc[..., di:di + g * n],
+                xbc[..., di + g * n:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(
+        xs.reshape(b, s, nh, cfg.headdim), dt, A,
+        B.reshape(b, s, g, n), C.reshape(b, s, g, n), p["D"],
+        min(cfg.chunk, s))
+    y = y.reshape(b, s, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_w"])
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_state = xbc_raw[:, -(cfg.d_conv - 1):, :]  # last K-1 raw inputs
+        return out, state, conv_state
+    return out
+
+
+def mamba2_decode(p: Params, x: jnp.ndarray, ssm_state: jnp.ndarray,
+                  conv_state: jnp.ndarray, d_model: int, cfg: SSMConfig):
+    """Single-token step.  x: (B,1,D); ssm_state: (B,H,P,N) fp32;
+    conv_state: (B, d_conv-1, conv_dim)."""
+    b = x.shape[0]
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    g, n = cfg.ngroups, cfg.d_state
+    zxbcdt = x @ p["in_proj"]
+    z, xs, B, C, dt = _split_proj(zxbcdt, di, g, n, nh)
+    xbc_new = jnp.concatenate([xs, B, C], axis=-1)      # (B,1,conv_dim)
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)  # (B,K,conv)
+    w = p["conv_w"]                                     # (conv_dim, K)
+    conv_out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                          w.astype(jnp.float32)) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    new_conv_state = window[:, 1:, :]
+    xs, B, C = (xbc[..., :di], xbc[..., di:di + g * n],
+                xbc[..., di + g * n:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A[None, :])                        # (B,H)
+    xh = xs.reshape(b, nh, cfg.headdim).astype(jnp.float32)
+    Bh = jnp.repeat(B.reshape(b, g, n), nh // g, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(C.reshape(b, g, n), nh // g, axis=1)
+    state = ssm_state * da[:, :, None, None] \
+        + dt[:, :, None, None] * xh[..., :, None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_w"])
+    return y @ p["out_proj"], state, new_conv_state

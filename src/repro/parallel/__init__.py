@@ -1,0 +1,5 @@
+from .sharding import (act_shard, current_mesh_axes, maybe_shard,
+                       filter_spec, batch_spec)
+
+__all__ = ["act_shard", "current_mesh_axes", "maybe_shard", "filter_spec",
+           "batch_spec"]

@@ -1,0 +1,59 @@
+"""Batched serving engine: jitted prefill + decode with a static-shape KV
+cache.  serve_step (one decode step) is what the decode_* dry-run shapes
+lower; the engine adds the host-side request loop, greedy/temperature
+sampling, and continuous batch slots.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import lm
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_seq: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            functools.partial(lm.prefill_fn, cfg),
+            static_argnames=("max_seq",))
+        self._decode = jax.jit(functools.partial(lm.decode_fn, cfg))
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits[:, -1] / self.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompt_tokens: np.ndarray, max_new_tokens: int,
+                 extra: Optional[Dict[str, np.ndarray]] = None
+                 ) -> np.ndarray:
+        """prompt_tokens: (B, S) int32 (right-aligned, no padding support in
+        this minimal loop).  Returns (B, max_new_tokens)."""
+        b, s = prompt_tokens.shape
+        assert s + max_new_tokens <= self.max_seq
+        batch = {"tokens": jnp.asarray(prompt_tokens)}
+        if extra:
+            batch.update({k: jnp.asarray(v) for k, v in extra.items()})
+        logits, caches = self._prefill(self.params, batch,
+                                       max_seq=self.max_seq)
+        out = []
+        tok = self._sample(logits)
+        for i in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            logits, caches = self._decode(self.params, tok[:, None], caches,
+                                          jnp.int32(s + i))
+            tok = self._sample(logits)
+        return np.stack(out, axis=1)

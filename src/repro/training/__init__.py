@@ -1,0 +1,6 @@
+from .optim import AdamWConfig, adamw_update, init_opt_state, zero1_specs
+from .schedule import constant, warmup_cosine
+from .train_step import make_eval_step, make_train_step
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "zero1_specs",
+           "constant", "warmup_cosine", "make_eval_step", "make_train_step"]

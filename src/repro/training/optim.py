@@ -1,0 +1,106 @@
+"""AdamW from scratch with mixed precision and ZeRO-1 sharding.
+
+Parameters live in bf16 (compute dtype).  The optimizer state holds fp32
+master weights plus fp32 first/second moments; every moment/master tensor is
+additionally sharded across the `data` axis (ZeRO-1): with data=16, the
+40 GB of fp32 Adam state for a 14B model drops to 2.5 GB per device group.
+GSPMD materializes the reduce-scatter/all-gather pattern from the output
+shardings alone — the update math below is ordinary jnp.
+
+Gradient clipping is global-norm; weight decay is decoupled (AdamW).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    zero1: bool = True
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"step": jnp.zeros((), jnp.int32), "master": master,
+            "mu": zeros, "nu": jax.tree.map(jnp.copy, zeros)}
+
+
+def zero1_specs(param_specs, params) -> Dict[str, Any]:
+    """Build optimizer-state PartitionSpecs: param spec + `data` sharding on
+    the largest still-unsharded dimension of each tensor."""
+
+    def shard_one(spec: P, leaf) -> P:
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        # pick the largest dim whose spec entry is None
+        best, best_size = None, 0
+        for i, (e, size) in enumerate(zip(entries, leaf.shape)):
+            if e is None and size > best_size:
+                best, best_size = i, size
+        if best is None:
+            return P(*entries)
+        entries[best] = "data"
+        return P(*entries)
+
+    moment_specs = jax.tree.map(
+        shard_one, param_specs, params,
+        is_leaf=lambda x: isinstance(x, P))
+    return {"step": P(), "master": moment_specs,
+            "mu": moment_specs, "nu": jax.tree.map(lambda s: s, moment_specs,
+                                                   is_leaf=lambda x:
+                                                   isinstance(x, P))}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, params, opt_state,
+                 lr_scale: jnp.ndarray = 1.0):
+    """One AdamW step.  Returns (new_params bf16, new_opt_state)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bias1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bias2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu2 = b1 * mu + (1.0 - b1) * g
+        nu2 = b2 * nu + (1.0 - b2) * g * g
+        mhat = mu2 / bias1
+        nhat = nu2 / bias2
+        m2 = m - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                       + cfg.weight_decay * m)
+        return m2, mu2, nu2
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["master"])
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(g, m, mu, nu) for g, m, mu, nu
+           in zip(flat_g, flat_m, flat_mu, flat_nu)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda m, p: m.astype(p.dtype), new_master, params)
+    return new_params, {"step": step, "master": new_master, "mu": new_mu,
+                        "nu": new_nu}, gnorm

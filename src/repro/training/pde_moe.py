@@ -1,0 +1,94 @@
+"""Partial DAG Execution applied to MoE training (DESIGN.md §4).
+
+Shark's PDE collects per-task statistics while map output materializes and
+re-plans the downstream DAG (join strategy, reducer count) between stages.
+The exact analogue inside this framework: the MoE router's per-expert load
+vector IS the paper's "heavy hitters" statistic, the capacity factor IS the
+degree-of-parallelism knob, and the step boundary IS the stage boundary —
+training steps are deterministic re-executable tasks, so the plan can change
+between steps without correctness risk (the paper's argument §2.3/§3.1).
+
+`MoEReplanner` consumes the expert-load stats that `moe_apply(...,
+return_stats=True)` already emits (surfaced through train-step metrics),
+maintains a lossy log-encoded history (the paper's 1-byte size encoding),
+and re-selects:
+
+  * capacity_factor — sized so the observed p99 expert load fits without
+    drops (§3.1.2's "choose reducer count from observed partition sizes");
+  * dispatch strategy — below `broadcast_threshold` active experts it
+    recommends dense compute of the hot experts (the map-join analogue:
+    replicate the small side instead of shuffling).
+
+Changing the capacity factor changes the jitted step's shapes, so the
+replanner exposes `bucketed_capacity()` — capacities snap to a small set of
+buckets and the runtime keeps one compiled executable per bucket (the same
+"select among pre-lowered stage-2 variants" pattern the SQL engine uses for
+PDE join selection).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from ..core.stats import decode_size, encode_size
+
+CAPACITY_BUCKETS = (1.0, 1.25, 1.5, 2.0, 3.0)
+
+
+@dataclasses.dataclass
+class MoEPlan:
+    capacity_factor: float
+    hot_experts: List[int]
+    dense_hot: bool
+    reason: str
+
+
+class MoEReplanner:
+    def __init__(self, num_experts: int, top_k: int,
+                 target_drop_rate: float = 0.0,
+                 dense_hot_threshold: float = 0.5,
+                 history: int = 16):
+        self.num_experts = num_experts
+        self.top_k = top_k
+        self.dense_hot_threshold = dense_hot_threshold
+        self.history = history
+        # lossy history: one byte per expert per step (paper §3.1)
+        self._codes: List[np.ndarray] = []
+
+    def observe(self, expert_load: np.ndarray) -> None:
+        codes = np.array([encode_size(int(x)) for x in expert_load],
+                         np.uint8)
+        self._codes.append(codes)
+        if len(self._codes) > self.history:
+            self._codes.pop(0)
+
+    def plan(self, tokens_per_step: int) -> MoEPlan:
+        if not self._codes:
+            return MoEPlan(1.25, [], False, "no statistics yet: default")
+        loads = np.stack([[decode_size(int(c)) for c in row]
+                          for row in self._codes])          # (steps, E)
+        mean_load = loads.mean(axis=0)
+        expected = tokens_per_step * self.top_k / self.num_experts
+        peak = float(np.percentile(loads.max(axis=0), 99))
+        cf_needed = peak / max(expected, 1.0)
+        cf = next((b for b in CAPACITY_BUCKETS if b >= cf_needed),
+                  CAPACITY_BUCKETS[-1])
+        total = mean_load.sum()
+        frac = mean_load / max(total, 1.0)
+        hot = [int(i) for i in np.argsort(-frac)
+               if frac[i] > self.dense_hot_threshold / self.num_experts * 4]
+        dense_hot = bool(hot) and float(frac[hot].sum()) \
+            > self.dense_hot_threshold
+        return MoEPlan(
+            cf, hot[:4], dense_hot,
+            f"p99 load {peak:.0f} vs expected {expected:.0f} -> "
+            f"cf {cf} (needed {cf_needed:.2f}); "
+            f"{len(hot)} heavy-hitter experts carry "
+            f"{float(frac[hot].sum()) if hot else 0:.0%}")
+
+    def bucketed_capacity(self, tokens_per_step: int) -> float:
+        """Snap to a compile-cache-friendly bucket (one executable each)."""
+        return self.plan(tokens_per_step).capacity_factor

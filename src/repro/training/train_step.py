@@ -1,0 +1,74 @@
+"""The jitted training step: loss -> grad -> AdamW, with optional gradient
+accumulation (microbatching) via lax.scan.
+
+This is the function the multi-pod dry-run lowers and compiles; its
+in/out shardings come from the param/opt specs plus batch_spec on inputs.
+Gradient all-reduce across (pod, data) and the ZeRO-1 reduce-scatter are
+GSPMD-inserted from the sharding constraints — the collective roofline term
+in EXPERIMENTS.md measures exactly these.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import lm
+from .optim import AdamWConfig, adamw_update, init_opt_state
+from .schedule import warmup_cosine
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  With microbatches > 1, the global batch splits along axis 0
+    and gradients accumulate in fp32 across a lax.scan (grad accumulation)."""
+
+    def loss_for(params, batch):
+        return lm.loss_fn(cfg, params, batch)
+
+    grad_fn = jax.value_and_grad(loss_for)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                acc_loss, acc_g = acc
+                l, g = grad_fn(params, mb)
+                g32 = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                                   acc_g, g)
+                return (acc_loss + l, g32), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        lr_scale = warmup_cosine(opt_state["step"] + 1)
+        new_params, new_opt, gnorm = adamw_update(opt, grads, params,
+                                                  opt_state, lr_scale)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr_scale": lr_scale}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        return lm.loss_fn(cfg, params, batch)
+    return eval_step

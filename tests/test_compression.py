@@ -1,0 +1,86 @@
+"""Columnar compression: roundtrips, scheme selection, property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (Encoding, choose_encoding,
+                                    compression_ratio, decode_jnp, decode_np,
+                                    encode)
+
+
+@pytest.mark.parametrize("encoding", list(Encoding))
+@pytest.mark.parametrize("dtype", [np.int32, np.int64])
+def test_roundtrip_int(encoding, dtype):
+    rng = np.random.default_rng(0)
+    v = rng.integers(-100, 100, 1000).astype(dtype)
+    if encoding == Encoding.RLE:
+        v = np.repeat(rng.integers(-5, 5, 100).astype(dtype), 10)
+    enc = encode(v, encoding)
+    np.testing.assert_array_equal(decode_np(enc), v)
+    np.testing.assert_array_equal(np.asarray(decode_jnp(enc)), v)
+
+
+@pytest.mark.parametrize("encoding", [Encoding.PLAIN, Encoding.DICT,
+                                      Encoding.RLE])
+def test_roundtrip_float(encoding):
+    rng = np.random.default_rng(1)
+    v = np.round(rng.normal(size=500), 2).astype(np.float32)
+    enc = encode(v, encoding)
+    np.testing.assert_array_equal(decode_np(enc), v)
+
+
+def test_rle_compresses_runs():
+    v = np.repeat(np.arange(50, dtype=np.int64), 100)
+    enc = encode(v)
+    assert enc.encoding == Encoding.RLE
+    assert compression_ratio(enc) > 50
+
+
+def test_bitpack_small_range():
+    rng = np.random.default_rng(2)
+    v = rng.permutation(np.arange(3000) % 1000).astype(np.int64)
+    enc = encode(v, Encoding.BITPACK)
+    assert enc.bit_width == 10
+    np.testing.assert_array_equal(decode_np(enc), v)
+    assert compression_ratio(enc) > 2.5
+
+
+def test_dict_low_cardinality():
+    v = np.array(["a", "b", "c"] * 1000)
+    uniq, codes = np.unique(v, return_inverse=True)
+    enc = encode(codes.astype(np.int32))
+    np.testing.assert_array_equal(decode_np(enc), codes)
+
+
+def test_choose_encoding_heuristics():
+    assert choose_encoding(np.repeat(np.arange(10), 50)) == Encoding.RLE
+    rng = np.random.default_rng(3)
+    assert choose_encoding(rng.integers(0, 100, 5000)) == Encoding.BITPACK
+    # huge range, high cardinality, no runs -> PLAIN
+    v = rng.integers(0, 2**62, 100000)
+    assert choose_encoding(v) in (Encoding.PLAIN, Encoding.DICT)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(min_value=-2**31, max_value=2**31 - 1),
+                min_size=0, max_size=400))
+def test_property_roundtrip_any_ints(xs):
+    v = np.asarray(xs, np.int64)
+    for encoding in (Encoding.PLAIN, Encoding.DICT, Encoding.RLE):
+        enc = encode(v, encoding)
+        np.testing.assert_array_equal(decode_np(enc), v)
+    if len(v):
+        enc = encode(v - v.min() if len(v) else v, None)
+        np.testing.assert_array_equal(decode_np(enc),
+                                      v - v.min() if len(v) else v)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=2**15 - 1), min_size=1,
+                max_size=300))
+def test_property_bitpack(xs):
+    v = np.asarray(xs, np.int32)
+    enc = encode(v, Encoding.BITPACK)
+    np.testing.assert_array_equal(decode_np(enc), v)
+    np.testing.assert_array_equal(np.asarray(decode_jnp(enc)), v)

@@ -1,0 +1,89 @@
+"""The HLO whole-program analyzer: trip-count correction and collective
+accounting must agree between scanned and unrolled forms of the same
+computation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo_program
+
+
+def _cost(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo_program(compiled.as_text())
+
+
+def test_scan_flops_match_unrolled():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+
+    def scanned(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    def unrolled(x, w):
+        for i in range(8):
+            x = x @ w[i]
+        return x
+
+    cs = _cost(scanned, x, w)
+    cu = _cost(unrolled, x, w)
+    true_flops = 8 * 2 * 256 ** 3
+    assert cs.dot_flops == pytest.approx(true_flops, rel=0.01), \
+        "trip-count correction must recover unrolled FLOPs"
+    assert cu.dot_flops == pytest.approx(true_flops, rel=0.01)
+    assert cs.while_trip_counts == [8]
+
+
+def test_nested_scan_multiplicity():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((3, 4, 128, 128), jnp.float32)
+
+    def nested(x, w):
+        def outer(c, wo):
+            def inner(c2, wi):
+                return c2 @ wi, None
+            c, _ = jax.lax.scan(inner, c, wo)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y
+
+    c = _cost(nested, x, w)
+    true_flops = 12 * 2 * 128 ** 3
+    assert c.dot_flops == pytest.approx(true_flops, rel=0.01)
+
+
+def test_dot_k_dimension_parsed():
+    a = jax.ShapeDtypeStruct((64, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 32), jnp.float32)
+    c = _cost(lambda a, b: a @ b, a, b)
+    assert c.dot_flops == pytest.approx(2 * 64 * 512 * 32, rel=0.01)
+
+
+def test_collective_parse_synthetic():
+    hlo = """HloModule test
+ENTRY %main (p: f32[16,1024]) -> f32[16,1024] {
+  %p = f32[16,1024]{1,0} parameter(0)
+  ROOT %ar = f32[16,1024]{1,0} all-reduce(%p), replica_groups=[16,32]<=[512], to_apply=%add
+}
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+"""
+    cost = analyze_hlo_program(hlo)
+    bytes_ = 16 * 1024 * 4
+    assert cost.wire_bytes == pytest.approx(2 * bytes_ * 31 / 32)
+    assert cost.collective_count["all-reduce"] == 1
+
+
+def test_traffic_counts_dot_operands():
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = _cost(lambda a: a @ a, a)
+    # at least operands+result of the dot
+    assert c.traffic_bytes >= 3 * 256 * 256 * 4

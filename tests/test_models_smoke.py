@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests (required): reduced config of the same
+family, one forward/train step on CPU, output shapes + no NaNs, plus
+prefill/decode consistency against the full forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.models import lm
+
+RNG = np.random.default_rng(0)
+B, S, MAXS = 2, 32, 48
+
+
+def make_batch(cfg):
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab, (B, S))
+                              .astype(np.int32)),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab, (B, S))
+                              .astype(np.int32)),
+    }
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(RNG.normal(
+            size=(B, cfg.n_frontend_tokens, cfg.d_model))
+            .astype(np.float32)).astype(jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(RNG.normal(
+            size=(B, cfg.enc_seq, cfg.d_model))
+            .astype(np.float32)).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_decode(arch):
+    cfg = get_config(arch + "-smoke")
+    params, specs = lm.init_params(cfg, jax.random.PRNGKey(0))
+    # param/spec trees align
+    jax.tree.map(lambda p, s: None, params, specs,
+                 is_leaf=lambda x: hasattr(x, "shape") or hasattr(x, "index"))
+    batch = make_batch(cfg)
+
+    loss = float(lm.loss_fn(cfg, params, batch))
+    assert np.isfinite(loss)
+    assert abs(loss - np.log(cfg.vocab)) < 2.0  # random-init CE sanity
+
+    logits_p, caches = lm.prefill_fn(cfg, params, batch, MAXS)
+    assert logits_p.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits_p)).all()
+
+    next_tok = jnp.argmax(logits_p[:, 0], -1).astype(jnp.int32)[:, None]
+    logits_d, caches2 = lm.decode_fn(cfg, params, next_tok, caches,
+                                     jnp.int32(S))
+    assert logits_d.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits_d)).all()
+
+    # decode(tok | prefill(S)) must equal full forward over S+1 tokens
+    toks_ext = jnp.concatenate([batch["tokens"], next_tok], axis=1)
+    batch_ext = dict(batch)
+    batch_ext["tokens"] = toks_ext
+    h, _, _ = lm._backbone_full(cfg, params, toks_ext, batch_ext,
+                                collect_kv=False)
+    logits_full = (h[:, -1:, :] @ lm._unembed(cfg, params)
+                   ).astype(jnp.float32)
+    rel = (np.abs(np.asarray(logits_full) - np.asarray(logits_d)).max()
+           / (np.abs(np.asarray(logits_full)).max() + 1e-6))
+    assert rel < 0.05, (arch, rel)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_train_step(arch):
+    from repro.training import AdamWConfig, init_opt_state, make_train_step
+    cfg = get_config(arch + "-smoke")
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(1))
+    opt_state = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3)))
+    batch = make_batch(cfg)
+    p2, o2, m = step(params, opt_state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+    assert int(o2["step"]) == 1
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                              - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned hyperparameters."""
+    c = get_config("phi3-medium-14b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (40, 5120, 40, 10, 17920, 100352)
+    c = get_config("yi-9b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (48, 4096, 32, 4, 11008, 64000)
+    c = get_config("qwen2.5-3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (36, 2048, 16, 2, 11008, 151936)
+    assert c.qkv_bias
+    c = get_config("starcoder2-15b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (40, 6144, 48, 4, 24576, 49152)
+    c = get_config("phi3.5-moe-42b-a6.6b")
+    assert (c.n_layers, c.d_model, c.moe.num_experts, c.moe.top_k,
+            c.moe.d_expert) == (32, 4096, 16, 2, 6400)
+    c = get_config("deepseek-v2-lite-16b")
+    assert (c.n_layers, c.d_model, c.mla.kv_lora, c.moe.num_experts,
+            c.moe.top_k, c.moe.n_shared) == (27, 2048, 512, 64, 6, 2)
+    c = get_config("mamba2-370m")
+    assert (c.n_layers, c.d_model, c.ssm.d_state, c.vocab) == (48, 1024, 128,
+                                                               50280)
+    c = get_config("llama-3.2-vision-11b")
+    assert (c.n_layers, c.d_model, c.n_kv_heads, c.vocab) == (40, 4096, 8,
+                                                              128256)
+    c = get_config("zamba2-7b")
+    assert (c.n_layers, c.d_model, c.ssm.d_state, c.vocab) == (81, 3584, 64,
+                                                               32000)
+    c = get_config("whisper-base")
+    assert (c.n_layers, c.enc_layers, c.d_model, c.vocab) == (6, 6, 512,
+                                                              51865)
+
+
+def test_shape_cells_defined():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524288
+    # long_500k runs only for sub-quadratic archs
+    subq = [a for a in ARCH_NAMES if get_config(a).sub_quadratic]
+    assert set(subq) == {"mamba2-370m", "zamba2-7b"}

@@ -1,0 +1,67 @@
+"""PDE-style MoE replanning: observed expert-load heavy hitters drive
+capacity/dispatch re-selection (the paper's §3.1 applied to routing)."""
+
+import numpy as np
+
+from repro.training.pde_moe import CAPACITY_BUCKETS, MoEPlan, MoEReplanner
+
+
+def test_balanced_load_keeps_small_capacity():
+    rp = MoEReplanner(num_experts=16, top_k=2)
+    rng = np.random.default_rng(0)
+    tokens = 4096
+    for _ in range(8):
+        load = rng.poisson(tokens * 2 / 16, 16).astype(float)
+        rp.observe(load)
+    plan = rp.plan(tokens)
+    assert plan.capacity_factor <= 1.5
+    assert not plan.dense_hot
+
+
+def test_skewed_load_raises_capacity_and_flags_hot_experts():
+    rp = MoEReplanner(num_experts=16, top_k=2)
+    tokens = 4096
+    for _ in range(8):
+        load = np.full(16, 100.0)
+        load[3] = tokens * 1.2     # heavy hitter
+        load[7] = tokens * 0.8
+        rp.observe(load)
+    plan = rp.plan(tokens)
+    assert plan.capacity_factor >= 2.0
+    assert 3 in plan.hot_experts
+    assert plan.dense_hot  # two experts carry most of the load -> map-join analogue
+
+
+def test_capacity_buckets_bound_recompiles():
+    rp = MoEReplanner(num_experts=8, top_k=2)
+    rng = np.random.default_rng(1)
+    caps = set()
+    for step in range(30):
+        rp.observe(rng.poisson(1000, 8).astype(float) * (1 + step % 3))
+        caps.add(rp.bucketed_capacity(4000))
+    assert caps <= set(CAPACITY_BUCKETS)
+    assert len(caps) <= 3  # bucketing keeps the executable cache small
+
+
+def test_history_is_lossy_and_bounded():
+    rp = MoEReplanner(num_experts=4, top_k=1, history=4)
+    for i in range(20):
+        rp.observe(np.full(4, 10.0 * (i + 1)))
+    assert len(rp._codes) == 4
+    assert rp._codes[0].dtype == np.uint8  # 1 byte/expert, paper's encoding
+
+
+def test_integration_with_moe_stats():
+    """The load vector the model emits feeds the replanner directly."""
+    import jax, jax.numpy as jnp
+    from repro.models.moe import MoEConfig, moe_apply, moe_init
+    cfg = MoEConfig(num_experts=8, top_k=2, d_expert=16, capacity_factor=2.0)
+    p, _ = moe_init(jax.random.PRNGKey(0), 32, cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 64, 32)),
+                    jnp.bfloat16)
+    _, stats = moe_apply(p, x, cfg, return_stats=True)
+    rp = MoEReplanner(8, 2)
+    rp.observe(np.asarray(stats["expert_load"]))
+    plan = rp.plan(tokens_per_step=128)
+    assert isinstance(plan, MoEPlan)
+    assert plan.capacity_factor in CAPACITY_BUCKETS

@@ -1,0 +1,104 @@
+"""PDE statistics (paper §3.1): log-encoded sizes, heavy hitters, decisions,
+greedy bin-packing."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batch import PartitionBatch
+from repro.core.pde import (JoinChoice, PDEConfig, decide_join,
+                            decide_parallelism, likely_small_side)
+from repro.core.stats import (HeavyHitterAccumulator, SizeAccumulator,
+                              StageStats, TaskStats, decode_size, encode_size,
+                              greedy_bin_pack)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=1, max_value=32 << 30))
+def test_log_encoding_error_bound(nbytes):
+    """Paper: one byte represents up to 32 GB with at most 10% error."""
+    code = encode_size(nbytes)
+    assert 0 <= code <= 255
+    rel_err = abs(decode_size(code) - nbytes) / nbytes
+    assert rel_err <= 0.10, (nbytes, code, decode_size(code), rel_err)
+
+
+def test_stats_payload_bounded():
+    """Paper: statistics are limited to 1-2 KB per task."""
+    acc = SizeAccumulator(num_buckets=64)
+    hh = HeavyHitterAccumulator("k", k=64)
+    batch = PartitionBatch.from_numpy(
+        {"k": np.arange(1000) % 7, "v": np.ones(1000)})
+    for b in range(64):
+        acc.update(b, batch)
+        hh.update(b, batch)
+    ts = TaskStats(0, 0, {"sizes": acc.payload(),
+                          "heavy_hitters": hh.payload()})
+    assert ts.nbytes() <= 2048, ts.nbytes()
+
+
+def test_heavy_hitters_find_frequent():
+    hh = HeavyHitterAccumulator("k", k=8)
+    rng = np.random.default_rng(0)
+    skewed = np.concatenate([np.full(5000, 42), rng.integers(100, 10000, 500)])
+    batch = PartitionBatch.from_numpy({"k": skewed})
+    hh.update(0, batch)
+    top = list(hh.payload())
+    assert top[0] == 42
+
+
+def test_decide_join_broadcast_small():
+    acc = SizeAccumulator(4)
+    small = PartitionBatch.from_numpy({"k": np.arange(10)})
+    for b in range(4):
+        acc.update(b, small)
+    stats = StageStats(0)
+    stats.add(TaskStats(0, 0, {"sizes": acc.payload()}))
+    d = decide_join(stats, None, PDEConfig(broadcast_threshold_bytes=1 << 20))
+    assert d.choice == JoinChoice.BROADCAST_LEFT
+
+
+def test_decide_join_shuffle_large():
+    acc = SizeAccumulator(4)
+    big = PartitionBatch.from_numpy(
+        {"k": np.arange(3_000_000, dtype=np.int64)})
+    for b in range(4):
+        acc.update(b, big)
+    stats = StageStats(0)
+    stats.add(TaskStats(0, 0, {"sizes": acc.payload()}))
+    d = decide_join(stats, None, PDEConfig(broadcast_threshold_bytes=1 << 20))
+    assert d.choice == JoinChoice.SHUFFLE
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=0, max_value=1e9, allow_nan=False),
+                min_size=1, max_size=200),
+       st.integers(min_value=1, max_value=32))
+def test_property_binpack_balance(sizes, bins):
+    """Greedy bin-packing: max bin <= average + max item (LPT bound-ish),
+    and every item is assigned exactly once."""
+    groups = greedy_bin_pack(sizes, bins)
+    flat = sorted(i for g in groups for i in g)
+    assert flat == list(range(len(sizes)))
+    loads = [sum(sizes[i] for i in g) for g in groups if g]
+    if loads and sum(sizes) > 0:
+        assert max(loads) <= sum(sizes) / min(bins, len(sizes)) + max(sizes) + 1e-6
+
+
+def test_decide_parallelism_coalesces():
+    acc = SizeAccumulator(64)
+    tiny = PartitionBatch.from_numpy({"k": np.arange(100, dtype=np.int64)})
+    for b in range(64):
+        acc.update(b, tiny)
+    stats = StageStats(1)
+    stats.add(TaskStats(0, 1, {"sizes": acc.payload()}))
+    d = decide_parallelism(stats, 64, PDEConfig(target_reduce_bytes=1 << 20))
+    assert d.num_reducers < 64
+    covered = sorted(i for g in d.bucket_groups for i in g)
+    assert covered == list(range(64))
+
+
+def test_likely_small_side_prior():
+    # a filtered, initially-smaller side should be scheduled first (§6.3.2)
+    assert likely_small_side(1 << 20, 1 << 40, True, False) == "left"
+    assert likely_small_side(1 << 40, 1 << 20, False, True) == "right"
