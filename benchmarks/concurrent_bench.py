@@ -1,0 +1,255 @@
+"""Concurrent multi-client server benchmark (server tier, DESIGN.md §6).
+
+8 client threads fire a mixed query workload at one SharkServer whose
+cache budget is *smaller than the scan working set* — so the memory manager
+is evicting and recomputing from lineage throughout — and every result is
+checked against a single-tenant reference session (zero wrong results is
+part of the acceptance bar, not just speed).
+
+Reports aggregate QPS and p50/p95 client-observed latency, the result-cache
+hit-vs-cold speedup, and a cache-budget sweep (evictions / recomputes /
+hit counts / QPS per budget).
+
+    PYTHONPATH=src python -m benchmarks.concurrent_bench \
+        [--clients 8] [--queries-per-client 10] [--rows 200000] \
+        [--json-out BENCH_concurrent.json] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import DType, Schema, SharkSession
+from repro.server import SharkServer
+
+from .common import report
+
+
+def make_warehouse_data(rows: int):
+    rng = np.random.default_rng(7)
+    rankings = {
+        "pageURL": np.array([f"url{i}" for i in
+                             rng.integers(0, max(rows // 20, 10), rows)]),
+        "pageRank": rng.zipf(1.5, rows).clip(0, 10000).astype(np.int32),
+        "avgDuration": rng.integers(1, 300, rows).astype(np.int32),
+    }
+    m = rows // 2
+    visits = {
+        "destURL": np.array([f"url{i}" for i in
+                             rng.integers(0, max(rows // 20, 10), m)]),
+        "adRevenue": rng.uniform(0, 100, m),
+        "visitDate": rng.integers(10957, 11688, m).astype(np.int32),
+    }
+    return rankings, visits
+
+
+RANKINGS_SCHEMA = Schema.of(pageURL=DType.STRING, pageRank=DType.INT32,
+                            avgDuration=DType.INT32)
+VISITS_SCHEMA = Schema.of(destURL=DType.STRING, adRevenue=DType.FLOAT64,
+                          visitDate=DType.INT32)
+
+
+def load_warehouse(target, rankings, visits, parts: int):
+    target.create_table("rankings", RANKINGS_SCHEMA, rankings,
+                        num_partitions=parts)
+    target.create_table("uservisits", VISITS_SCHEMA, visits,
+                        num_partitions=parts)
+
+
+def query_mix(client_idx: int) -> List[str]:
+    """Per-client workload: interactive filters (result-cache friendly,
+    thresholds shared across clients), a group-by, and a join."""
+    t = 100 * (1 + client_idx % 4)
+    return [
+        f"SELECT COUNT(*) AS c FROM rankings WHERE pageRank > {t}",
+        "SELECT pageURL, SUM(pageRank) AS s FROM rankings GROUP BY pageURL",
+        f"SELECT COUNT(*) AS c FROM rankings WHERE pageRank > {t}",
+        ("SELECT r.pageURL, SUM(v.adRevenue) AS rev FROM rankings r "
+         "JOIN uservisits v ON r.pageURL = v.destURL "
+         f"WHERE r.pageRank > {t} GROUP BY r.pageURL"),
+    ]
+
+
+def canonical(res: Dict[str, np.ndarray]):
+    """Order-insensitive, float-tolerant canonical form of a result set."""
+    names = sorted(res)
+    cols = []
+    for n in names:
+        a = np.asarray(res[n])
+        if a.dtype.kind == "f":
+            a = np.round(a, 6)
+        cols.append(a.astype(str))
+    rows = sorted(tuple(c[i] for c in cols) for i in range(len(cols[0]))) \
+        if cols and len(cols[0]) else []
+    return (tuple(names), tuple(rows))
+
+
+def reference_answers(rankings, visits, queries: List[str], parts: int):
+    sess = SharkSession(num_workers=4, max_threads=4,
+                        default_partitions=parts)
+    load_warehouse(sess, rankings, visits, parts)
+    answers = {q: canonical(sess.sql_np(q)) for q in queries}
+    sess.shutdown()
+    return answers
+
+
+def run_storm(srv: SharkServer, clients: int, queries_per_client: int,
+              answers) -> Dict[str, float]:
+    latencies: List[float] = []
+    wrong = [0]
+    lock = threading.Lock()
+
+    def one_client(idx: int):
+        sess = srv.session(f"bench-{idx}",
+                           weight=4.0 if idx == 0 else 1.0)
+        mix = query_mix(idx)
+        for i in range(queries_per_client):
+            q = mix[i % len(mix)]
+            t0 = time.perf_counter()
+            got = sess.sql_np(q)
+            dt = time.perf_counter() - t0
+            ok = canonical(got) == answers[q]
+            with lock:
+                latencies.append(dt)
+                if not ok:
+                    wrong[0] += 1
+
+    threads = [threading.Thread(target=one_client, args=(i,))
+               for i in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    lat = np.array(latencies)
+    return {
+        "clients": clients,
+        "queries": len(latencies),
+        "wall_s": round(wall, 4),
+        "qps": round(len(latencies) / wall, 2),
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+        "p95_ms": round(float(np.percentile(lat, 95)) * 1e3, 3),
+        "wrong": wrong[0],
+    }
+
+
+def make_server(budget: Optional[int], parts: int, rankings, visits,
+                max_concurrent: int = 4) -> SharkServer:
+    srv = SharkServer(num_workers=4, max_threads=8,
+                      cache_budget_bytes=budget,
+                      max_concurrent_queries=max_concurrent,
+                      max_queue_depth=128,
+                      default_partitions=parts,
+                      default_shuffle_buckets=16)
+    load_warehouse(srv, rankings, visits, parts)
+    return srv
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--queries-per-client", type=int, default=10)
+    ap.add_argument("--rows", type=int, default=200_000)
+    ap.add_argument("--partitions", type=int, default=16)
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep (CI smoke)")
+    args = ap.parse_args(argv)
+    if args.clients < 1 or args.queries_per_client < 1 or args.rows < 1000:
+        ap.error("--clients/--queries-per-client must be >= 1, --rows >= 1000")
+
+    rankings, visits = make_warehouse_data(args.rows)
+    parts = args.partitions
+    all_queries = sorted({q for i in range(args.clients)
+                          for q in query_mix(i)})
+    answers = reference_answers(rankings, visits, all_queries, parts)
+
+    # working-set size = what full scans of the warehouse materialize
+    probe = make_server(None, parts, rankings, visits)
+    working_set = sum(t.nbytes for t in probe.catalog.tables().values())
+    probe.shutdown()
+
+    # ---- headline run: budget < working set, 8 concurrent clients ----
+    budget = int(working_set * 0.3)
+    srv = make_server(budget, parts, rankings, visits)
+    storm = run_storm(srv, args.clients, args.queries_per_client, answers)
+    mem = srv.stats()["memory"]
+    rc = srv.stats()["result_cache"]
+    srv.shutdown()
+    assert storm["wrong"] == 0, f"{storm['wrong']} wrong results"
+
+    report("concurrent_qps", 1.0 / max(storm["qps"], 1e-9),
+           f"qps={storm['qps']} clients={storm['clients']}")
+    report("concurrent_p50", storm["p50_ms"] / 1e3,
+           f"wrong={storm['wrong']}")
+    report("concurrent_p95", storm["p95_ms"] / 1e3,
+           f"evictions={mem['evictions']} recomputes={mem['recomputes']}")
+
+    # ---- result-cache hit vs cold execution ----
+    srv = make_server(budget, parts, rankings, visits)
+    q = ("SELECT pageURL, SUM(pageRank) AS s FROM rankings "
+         "GROUP BY pageURL")
+    t0 = time.perf_counter()
+    srv.sql(q)
+    cold_s = time.perf_counter() - t0
+    hits = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        srv.sql(q)
+        hits.append(time.perf_counter() - t0)
+    hit_s = float(np.median(hits))
+    srv.shutdown()
+    speedup = cold_s / max(hit_s, 1e-9)
+    report("result_cache_cold", cold_s, "")
+    report("result_cache_hit", hit_s, f"speedup={speedup:.1f}x")
+
+    # ---- cache-budget sweep ----
+    fracs = [0.1, 1.5] if args.quick else [0.05, 0.15, 0.3, 0.6, 1.5]
+    sweep = []
+    for frac in fracs:
+        b = int(working_set * frac)
+        srv = make_server(b, parts, rankings, visits)
+        row = run_storm(srv, max(2, args.clients // 2),
+                        max(4, args.queries_per_client // 2), answers)
+        stats = srv.stats()
+        m = stats["memory"]
+        srv.shutdown()
+        assert row["wrong"] == 0, f"budget {frac}: wrong results"
+        entry = {"budget_frac": frac, "budget_bytes": b,
+                 "qps": row["qps"], "p95_ms": row["p95_ms"],
+                 "evictions": m["evictions"],
+                 "recomputes": m["recomputes"],
+                 "result_hits": stats["result_cache"]["hits"]}
+        sweep.append(entry)
+        report(f"sweep_budget_{frac}", row["p95_ms"] / 1e3,
+               f"qps={row['qps']} evict={m['evictions']} "
+               f"recompute={m['recomputes']}")
+
+    payload = {
+        "working_set_bytes": int(working_set),
+        "budget_bytes": budget,
+        "storm": storm,
+        "memory": mem,
+        "result_cache": rc,
+        "cold_s": round(cold_s, 6),
+        "hit_s": round(hit_s, 6),
+        "cache_speedup": round(speedup, 2),
+        "sweep": sweep,
+    }
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+    print(f"# concurrent: qps={storm['qps']} p50={storm['p50_ms']}ms "
+          f"p95={storm['p95_ms']}ms wrong={storm['wrong']} "
+          f"cache_speedup={speedup:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

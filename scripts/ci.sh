@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# CI entry point: fast deterministic tier-1 tests + a 2-client smoke of the
+# concurrent server benchmark (emits BENCH_concurrent.json).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -q -m tier1
+
+echo "== concurrent server smoke (2 clients) =="
+python -m benchmarks.concurrent_bench --quick --clients 2 \
+    --queries-per-client 4 --rows 60000 --json-out BENCH_concurrent.json
+echo "wrote BENCH_concurrent.json"

@@ -4,13 +4,21 @@ Shark keeps warehouse metadata in an external transactional database (the
 Hive metastore); here the catalog is an in-process registry of cached
 columnar tables plus "external" tables (loaded lazily from generator
 functions, standing in for HDFS data the engine can also query directly).
+
+For the server tier (DESIGN.md §6) the catalog is also the *versioning*
+authority: every mutation (CREATE TABLE / load / drop) bumps a global epoch
+and stamps the mutated table with it.  Query-result cache entries record the
+versions of the tables they read; a version mismatch (or an invalidation
+callback) means the cached result may be stale and must not be served.
+Lazy materialization of an external source does NOT bump the version — the
+loader is deterministic, so the logical table content is unchanged.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -34,26 +42,73 @@ class Catalog:
         self._tables: Dict[str, Table] = {}
         self._external: Dict[str, ExternalSource] = {}
         self._lock = threading.RLock()
+        self._epoch = 0
+        self._versions: Dict[str, int] = {}
+        self._listeners: List[Callable[[str, int], None]] = []
+
+    # -- versioning (server result-cache invalidation) ----------------------
+
+    @property
+    def epoch(self) -> int:
+        with self._lock:
+            return self._epoch
+
+    def version(self, name: str) -> int:
+        """Epoch at which `name` last changed (0 = never registered)."""
+        with self._lock:
+            return self._versions.get(name, 0)
+
+    def subscribe(self, fn: Callable[[str, int], None]) -> None:
+        """`fn(table_name, new_epoch)` fires on every catalog mutation."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def _bump_locked(self, name: str):
+        # caller holds self._lock; returns the notification to fire AFTER
+        # the lock is released (listeners may take their own locks that
+        # also call back into the catalog — holding ours would AB-BA)
+        self._epoch += 1
+        self._versions[name] = self._epoch
+        return list(self._listeners), name, self._epoch
+
+    @staticmethod
+    def _fire(notification) -> None:
+        listeners, name, epoch = notification
+        for fn in listeners:
+            fn(name, epoch)
+
+    # -- registry ------------------------------------------------------------
 
     def register_table(self, table: Table) -> None:
         with self._lock:
             self._tables[table.name] = table
+            note = self._bump_locked(table.name)
+        self._fire(note)
 
     def register_external(self, src: ExternalSource) -> None:
         with self._lock:
             self._external[src.name] = src
+            note = self._bump_locked(src.name)
+        self._fire(note)
 
     def get(self, name: str) -> Table:
+        return self.get_versioned(name)[0]
+
+    def get_versioned(self, name: str):
+        """(table, version) read atomically — a concurrent mutation cannot
+        pair the old table object with the new version (the server's scan
+        cache keys blocks by version, so a torn read would poison it)."""
         with self._lock:
             if name in self._tables:
-                return self._tables[name]
+                return self._tables[name], self._versions.get(name, 0)
             if name in self._external:
                 src = self._external[name]
                 # schema-on-read load path: materialize as columnar partitions
+                # (deterministic loader -> logical content unchanged, no bump)
                 table = from_arrays(name, src.schema, src.loader(),
                                     src.num_partitions)
                 self._tables[name] = table
-                return table
+                return table, self._versions.get(name, 0)
         raise KeyError(f"unknown table {name!r}")
 
     def schema(self, name: str) -> Schema:
@@ -69,9 +124,15 @@ class Catalog:
             return name in self._tables or name in self._external
 
     def drop(self, name: str) -> None:
+        note = None
         with self._lock:
+            existed = name in self._tables or name in self._external
             self._tables.pop(name, None)
             self._external.pop(name, None)
+            if existed:
+                note = self._bump_locked(name)
+        if note is not None:
+            self._fire(note)
 
     def tables(self):
         with self._lock:

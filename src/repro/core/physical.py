@@ -20,6 +20,7 @@ re-plans:
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -102,18 +103,67 @@ class Compiled:
     size_hint: Optional[float] = None        # bytes prior (for join ordering)
 
 
+class ScanCache:
+    """Shared registry of *cached* TableScanRDDs (server tier, DESIGN.md §6).
+
+    Plain sessions build a fresh TableScanRDD per query, so its RDD id — and
+    therefore its block-manager keys — never repeat and nothing is reused.
+    The server shares one ScanCache across all per-query Executors: scans of
+    the same (table, version, columns, surviving partitions) resolve to ONE
+    RDD marked `.cache()`, so materialized scan blocks are shared across
+    queries and clients, live under the MemoryManager's budget, and are
+    recomputed from the column store on eviction miss."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._rdds: Dict[Tuple, RDD] = {}
+
+    def get_or_create(self, ctx: SharkContext, table: Table, version: int,
+                      cols: List[str], selected: List[int]) -> RDD:
+        key = (table.name, version, tuple(cols), tuple(selected))
+        with self._lock:
+            rdd = self._rdds.get(key)
+            if rdd is None:
+                # a version bump invalidates all older scans of this table;
+                # drop their RDDs and any blocks they pinned in the store
+                for k in [k for k in self._rdds
+                          if k[0] == table.name and k[1] != version]:
+                    stale = self._rdds.pop(k)
+                    stale.unpersist()
+                rdd = ctx.scan(table, cols, selected).cache()
+                self._rdds[key] = rdd
+            return rdd
+
+    def clear(self) -> None:
+        with self._lock:
+            for rdd in self._rdds.values():
+                rdd.unpersist()
+            self._rdds.clear()
+
+
 class Executor:
     def __init__(self, ctx: SharkContext, catalog: Catalog,
                  pde: PDEConfig = PDEConfig(), enable_pde: bool = True,
                  enable_map_pruning: bool = True,
-                 default_shuffle_buckets: int = 64):
+                 default_shuffle_buckets: int = 64,
+                 scan_cache: Optional[ScanCache] = None):
         self.ctx = ctx
         self.catalog = catalog
         self.pde = pde
         self.enable_pde = enable_pde
         self.enable_map_pruning = enable_map_pruning
         self.default_shuffle_buckets = default_shuffle_buckets
+        self.scan_cache = scan_cache
+        # shuffle ids this executor created: the server releases their map
+        # outputs from the block store once the query completes
+        self.created_shuffles: List[int] = []
         self.metrics = ExecMetrics()
+
+    def _new_shuffle(self, parent: RDD, num_buckets: int, partitioner,
+                     **kw) -> ShuffleDependency:
+        dep = ShuffleDependency(parent, num_buckets, partitioner, **kw)
+        self.created_shuffles.append(dep.shuffle_id)
+        return dep
 
     # ---------------------------------------------------------------- public
 
@@ -145,7 +195,7 @@ class Executor:
 
     def _compile_scan(self, node: ScanNode, pred: Optional[Expr],
                       columns: Optional[Sequence[str]] = None) -> Compiled:
-        table = self.catalog.get(node.table)
+        table, version = self.catalog.get_versioned(node.table)
         selected = list(range(table.num_partitions))
         if pred is not None and self.enable_map_pruning:
             kept = []
@@ -156,7 +206,11 @@ class Executor:
             selected = kept
         self.metrics.scanned_partitions += len(selected)
         cols = list(columns) if columns is not None else list(table.schema.names)
-        rdd = self.ctx.scan(table, cols, selected)
+        if self.scan_cache is not None:
+            rdd = self.scan_cache.get_or_create(
+                self.ctx, table, version, cols, selected)
+        else:
+            rdd = self.ctx.scan(table, cols, selected)
         return Compiled(rdd, cols, table=table,
                         scan_filtered=pred is not None,
                         size_hint=float(table.nbytes))
@@ -220,7 +274,7 @@ class Executor:
                               map_rdd.num_partitions)
             partitioner = bucket_by_composite(group_cols, num_buckets)
 
-        dep = ShuffleDependency(
+        dep = self._new_shuffle(
             map_rdd, num_buckets, partitioner,
             accumulators=lambda: [SizeAccumulator(num_buckets)] + (
                 [HeavyHitterAccumulator(group_cols[0])] if group_cols else []))
@@ -276,7 +330,7 @@ class Executor:
         a, b = (left, right) if first == "left" else (right, left)
         akey, bkey = (lkey, rkey) if first == "left" else (rkey, lkey)
 
-        adep = ShuffleDependency(
+        adep = self._new_shuffle(
             a.rdd.map_partitions(lambda s, x: x.decode_strings()),
             num_buckets, bucket_by_hash(akey, num_buckets),
             accumulators=lambda: [SizeAccumulator(num_buckets),
@@ -313,7 +367,7 @@ class Executor:
             f"PDE shuffle-join: first side observed {decision.left_bytes:.0f}B "
             f"> threshold; shuffling both")
         self.metrics.shuffled_bytes += astats.total_output_bytes()
-        bdep = ShuffleDependency(
+        bdep = self._new_shuffle(
             b.rdd.map_partitions(lambda s, x: x.decode_strings()),
             num_buckets, bucket_by_hash(bkey, num_buckets),
             accumulators=lambda: [SizeAccumulator(num_buckets)])
@@ -357,11 +411,11 @@ class Executor:
         num_buckets = max(self.default_shuffle_buckets,
                           left.rdd.num_partitions, right.rdd.num_partitions)
         self.metrics.join_decisions.append(note)
-        ldep = ShuffleDependency(
+        ldep = self._new_shuffle(
             left.rdd.map_partitions(lambda s, x: x.decode_strings()),
             num_buckets, bucket_by_hash(lkey, num_buckets),
             accumulators=lambda: [SizeAccumulator(num_buckets)])
-        rdep = ShuffleDependency(
+        rdep = self._new_shuffle(
             right.rdd.map_partitions(lambda s, x: x.decode_strings()),
             num_buckets, bucket_by_hash(rkey, num_buckets),
             accumulators=lambda: [SizeAccumulator(num_buckets)])
@@ -388,7 +442,7 @@ class Executor:
         # per-partition top-k, then single merge task (ORDER BY ... LIMIT)
         map_rdd = child.rdd.map_partitions(local_sort).map_partitions(
             lambda s, b: b.decode_strings())
-        dep = ShuffleDependency(map_rdd, 1, single_bucket(),
+        dep = self._new_shuffle(map_rdd, 1, single_bucket(),
                                 accumulators=lambda: [SizeAccumulator(1)])
         self.ctx.scheduler.run_map_stage(dep)
 
@@ -411,7 +465,7 @@ class Executor:
         head_rdd = child.rdd.map_partitions(lambda s, b: b.head(n))
 
         # wrap as a one-partition RDD via shuffle to a single bucket
-        dep = ShuffleDependency(
+        dep = self._new_shuffle(
             head_rdd.map_partitions(lambda s, b: b.decode_strings()), 1,
             single_bucket())
         self.ctx.scheduler.run_map_stage(dep)

@@ -107,7 +107,13 @@ class RDD:
 
     def iterator(self, split: int, tc: TaskContext) -> PartitionBatch:
         """Cache-aware access: reuse a materialized block if present, else
-        compute from lineage (and cache if marked)."""
+        compute from lineage (and cache if marked).
+
+        This is the paper's fallback-to-recompute path (§3.2): a cached
+        partition may have been dropped at any time — worker loss, or the
+        MemoryManager evicting under a cache budget — and the query still
+        succeeds by recomputing the partition from its lineage.  The re-put
+        below re-admits the block, subject to the same budget."""
         if self.cached:
             hit = self.ctx.block_manager.get_partition(self.id, split)
             if hit is not None:
@@ -123,6 +129,13 @@ class RDD:
 
     def cache(self) -> "RDD":
         self.cached = True
+        return self
+
+    def unpersist(self) -> "RDD":
+        """Unmark and drop any materialized blocks from the block store."""
+        self.cached = False
+        for split in range(self.num_partitions):
+            self.ctx.block_manager.drop_block(("part", self.id, split))
         return self
 
     # -- functional API (paper §2.2 operators) ------------------------------

@@ -53,7 +53,14 @@ class WorkerLost(Exception):
 class BlockManager:
     """Cluster-wide registry of materialized blocks and which worker holds
     them.  Killing a worker drops every block it holds — cached partitions
-    AND shuffle map outputs — exactly the failure surface of the paper."""
+    AND shuffle map outputs — exactly the failure surface of the paper.
+
+    Byte accounting is unified: every block's size is tracked on insert so a
+    `MemoryManager` (src/repro/server/memory.py) can enforce a cache budget
+    with partition-granular LRU eviction.  Cached-partition reads record
+    hit/miss so the recompute-from-lineage fallback (paper §3.2) is
+    observable; `memory_manager`, when attached, is notified on every put
+    (budget enforcement) and miss (recompute detection)."""
 
     def __init__(self):
         self.lock = threading.RLock()
@@ -61,24 +68,107 @@ class BlockManager:
         # ("shuf", shuffle_id, map_split, bucket) -> (worker, batch)
         self.blocks: Dict[Tuple, Tuple[int, PartitionBatch]] = {}
         self.by_worker: Dict[int, Set[Tuple]] = {}
+        self.sizes: Dict[Tuple, int] = {}
+        self.total_bytes = 0
+        self.part_bytes = 0  # cached-partition subset of total_bytes
+        # LRU order over cached-partition keys only (shuffle blocks are
+        # lifecycle-managed per query, not by recency)
+        self.part_lru: "Dict[Tuple, None]" = {}
+        self.part_hits = 0
+        self.part_misses = 0
+        # shuffles already released by drop_shuffle: straggler/speculative
+        # task attempts finishing late must not resurrect their blocks
+        self.released_shuffles: Set[int] = set()
+        self.memory_manager = None  # attached by server.MemoryManager
+
+    def _put_locked(self, key: Tuple, worker: int,
+                    batch: PartitionBatch) -> None:
+        # caller holds self.lock; must NOT call the memory manager (it takes
+        # its own lock and calls back into us — see _put for the ordering)
+        prev = self.sizes.get(key)
+        if prev is not None:
+            self.total_bytes -= prev
+        nbytes = int(batch.nbytes)
+        self.blocks[key] = (worker, batch)
+        self.by_worker.setdefault(worker, set()).add(key)
+        self.sizes[key] = nbytes
+        self.total_bytes += nbytes
+        if key[0] == "part":
+            if prev is not None:
+                self.part_bytes -= prev
+            self.part_bytes += nbytes
+            self.part_lru.pop(key, None)
+            self.part_lru[key] = None  # most-recently-used at the end
 
     def _put(self, key: Tuple, worker: int, batch: PartitionBatch) -> None:
         with self.lock:
-            self.blocks[key] = (worker, batch)
-            self.by_worker.setdefault(worker, set()).add(key)
+            self._put_locked(key, worker, batch)
+            mm = self.memory_manager
+        if mm is not None:
+            mm.on_put(key)
 
     def put_partition(self, rdd_id: int, split: int, batch: PartitionBatch,
                       worker: int) -> None:
         self._put(("part", rdd_id, split), worker, batch)
 
     def get_partition(self, rdd_id: int, split: int) -> Optional[PartitionBatch]:
+        key = ("part", rdd_id, split)
+        mm = None
         with self.lock:
-            hit = self.blocks.get(("part", rdd_id, split))
-            return hit[1] if hit else None
+            hit = self.blocks.get(key)
+            if hit is not None:
+                self.part_hits += 1
+                self.part_lru.pop(key, None)
+                self.part_lru[key] = None
+                return hit[1]
+            self.part_misses += 1
+            mm = self.memory_manager
+        if mm is not None:
+            mm.on_miss(key)
+        return None
+
+    def drop_block(self, key: Tuple) -> int:
+        """Evict one block; returns bytes freed (0 if absent)."""
+        with self.lock:
+            hit = self.blocks.pop(key, None)
+            if hit is None:
+                return 0
+            worker = hit[0]
+            self.by_worker.get(worker, set()).discard(key)
+            self.part_lru.pop(key, None)
+            nbytes = self.sizes.pop(key, 0)
+            self.total_bytes -= nbytes
+            if key[0] == "part":
+                self.part_bytes -= nbytes
+            return nbytes
+
+    def drop_shuffle(self, shuffle_id: int) -> int:
+        """Release all map output of a finished shuffle; returns bytes freed.
+        The release is sticky: later writes for this shuffle (straggler /
+        speculative attempts outliving their query) are dropped on arrival."""
+        with self.lock:
+            self.released_shuffles.add(shuffle_id)
+            keys = [k for k in self.blocks
+                    if k[0] == "shuf" and k[1] == shuffle_id]
+        return sum(self.drop_block(k) for k in keys)
+
+    def lru_partition_keys(self) -> List[Tuple]:
+        """Cached-partition keys, least-recently-used first."""
+        with self.lock:
+            return list(self.part_lru)
 
     def put_shuffle(self, shuffle_id: int, map_split: int, bucket: int,
                     batch: PartitionBatch, worker: int) -> None:
-        self._put(("shuf", shuffle_id, map_split, bucket), worker, batch)
+        with self.lock:
+            if shuffle_id in self.released_shuffles:
+                return  # late straggler write for a finished query
+            # the released-check and the insert must be one atomic step: a
+            # drop_shuffle between them would let this block leak forever
+            self._put_locked(("shuf", shuffle_id, map_split, bucket),
+                             worker, batch)
+            mm = self.memory_manager
+        if mm is not None:
+            mm.on_put(("shuf", shuffle_id, map_split, bucket))
 
     def has_map_output(self, shuffle_id: int, map_split: int) -> bool:
         with self.lock:
@@ -107,11 +197,16 @@ class BlockManager:
             keys = self.by_worker.pop(worker, set())
             for k in keys:
                 self.blocks.pop(k, None)
+                self.part_lru.pop(k, None)
+                nbytes = self.sizes.pop(k, 0)
+                self.total_bytes -= nbytes
+                if k[0] == "part":
+                    self.part_bytes -= nbytes
             return len(keys)
 
     def nbytes(self) -> int:
         with self.lock:
-            return sum(b.nbytes for _, b in self.blocks.values())
+            return self.total_bytes
 
 
 @dataclasses.dataclass

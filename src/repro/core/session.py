@@ -8,6 +8,19 @@
 `sql2rdd` returns the *query plan as an RDD* rather than collected rows:
 callers invoke distributed computation over it (Listing 1 of the paper), the
 whole pipeline shares one lineage graph, and recovery spans SQL and ML.
+
+A session can also *attach to a shared SharkServer* (DESIGN.md §6) instead
+of owning a private context:
+
+    srv = SharkServer(cache_budget_bytes=64 << 20)
+    sess = SharkSession(server=srv, client_id="dash", weight=4.0)
+    sess.sql("...")                 # fair-scheduled on the server pool
+    h = sess.submit("...")          # async QueryHandle
+
+Attached sessions share the server's catalog, block store, memory budget,
+and result cache; `sql()` routes through the server's admission-controlled
+scheduler, while plan/explain/sql2rdd still work locally against the shared
+catalog (same lineage graph, same workers).
 """
 
 from __future__ import annotations
@@ -35,7 +48,21 @@ class SharkSession:
                  default_shuffle_buckets: int = 64,
                  pde_config: Optional[PDEConfig] = None,
                  speculation: bool = True,
-                 task_launch_overhead_s: float = 0.0):
+                 task_launch_overhead_s: float = 0.0,
+                 server=None, client_id: Optional[str] = None,
+                 weight: float = 1.0):
+        self.server = server
+        if server is not None:
+            # attached mode: share the server's runtime + catalog; queries
+            # route through its fair scheduler (see module docstring)
+            self.ctx = server.ctx
+            self.catalog = server.catalog
+            self.default_partitions = server.default_partitions
+            self.executor = server.make_executor()
+            self.client_id = client_id or f"session-{id(self):x}"
+            server.register_client(self.client_id, weight)
+            return
+        self.client_id = client_id or "local"
         self.ctx = SharkContext(num_workers=num_workers,
                                 max_threads=max_threads,
                                 speculation=speculation,
@@ -76,11 +103,22 @@ class SharkSession:
         return explain(node)
 
     def sql(self, sql: str) -> ExecResult:
+        if self.server is not None:
+            return self.server.submit(sql, client=self.client_id).result()
         stmt = parse(sql)
         if isinstance(stmt, CreateStmt):
             return self._create_table_as(stmt)
         node = Binder(self.catalog).bind(stmt)
         return self.executor.execute(node)
+
+    def submit(self, sql: str, block: bool = True,
+               timeout: Optional[float] = None):
+        """Async submission — attached sessions only; returns a QueryHandle."""
+        if self.server is None:
+            raise RuntimeError(
+                "submit() needs a server-attached session; use sql()")
+        return self.server.submit(sql, client=self.client_id, block=block,
+                                  timeout=timeout)
 
     def sql_np(self, sql: str) -> Dict[str, np.ndarray]:
         return self.sql(sql).to_numpy()
@@ -88,7 +126,13 @@ class SharkSession:
     def sql2rdd(self, sql: str) -> Tuple[RDD, List[str]]:
         """Return the query result as a TableRDD (paper §4.1): the final
         narrow stage is left lazy so downstream ML extends the same lineage
-        graph; upstream shuffle stages have already been PDE-planned."""
+        graph; upstream shuffle stages have already been PDE-planned.
+
+        The materialized map outputs backing the returned RDD stay in the
+        block store until they are released: a private session frees them on
+        shutdown with its context; a server-attached session holds them in
+        the SHARED store, so call `shutdown()` (or `release_shuffles()`)
+        when done with the RDD to avoid accumulating working memory."""
         stmt = parse(sql)
         assert isinstance(stmt, SelectStmt), "sql2rdd takes a SELECT"
         node = Binder(self.catalog).bind(stmt)
@@ -100,24 +144,8 @@ class SharkSession:
     # -- CTAS / caching ---------------------------------------------------------
 
     def _create_table_as(self, stmt: CreateStmt) -> ExecResult:
-        sel = stmt.select
-        node = Binder(self.catalog).bind(sel)
-        result = self.executor.execute(node)
-        merged = PartitionBatch.concat(result.batches)
-        data = merged.decoded()
-        schema = _infer_schema(data, result.schema_names)
-        num_parts = self.default_partitions
-        distribute = sel.distribute_by
-        if "copartition" in stmt.properties:
-            other = self.catalog.get(stmt.properties["copartition"])
-            num_parts = other.num_partitions
-        if distribute is None and "copartition" in stmt.properties:
-            raise ValueError("copartition requires DISTRIBUTE BY")
-        table = from_arrays(stmt.name, schema, data, num_parts, distribute)
-        # shark.cache => keep in the memory store (all our tables are
-        # in-memory; uncached CTAS still registers but could be spilled)
-        self.catalog.register_table(table)
-        return result
+        return create_table_as(self.executor, self.catalog, stmt,
+                               self.default_partitions)
 
     def metrics(self):
         return self.executor.metrics
@@ -128,8 +156,46 @@ class SharkSession:
                 "tasks_speculated": s.tasks_speculated,
                 "tasks_recomputed": s.tasks_recomputed}
 
+    def release_shuffles(self):
+        """Drop shuffle map outputs created by this session's executor
+        (sql2rdd compilations).  Any RDD previously returned by sql2rdd must
+        not be collect()ed again afterwards without re-running the query."""
+        for shuffle_id in self.executor.created_shuffles:
+            self.ctx.block_manager.drop_shuffle(shuffle_id)
+        self.executor.created_shuffles.clear()
+
     def shutdown(self):
+        if self.server is not None:
+            # the shared context belongs to the server, but this session's
+            # sql2rdd shuffle outputs must not outlive it in the shared store
+            self.release_shuffles()
+            return
         self.ctx.shutdown()
+
+
+def create_table_as(executor: Executor, catalog: Catalog, stmt: CreateStmt,
+                    default_partitions: int) -> ExecResult:
+    """CREATE TABLE ... AS SELECT: execute, re-partition, register.  The
+    catalog registration bumps the table's version (epoch), which
+    invalidates dependent result-cache entries on the server tier."""
+    sel = stmt.select
+    node = Binder(catalog).bind(sel)
+    result = executor.execute(node)
+    merged = PartitionBatch.concat(result.batches)
+    data = merged.decoded()
+    schema = _infer_schema(data, result.schema_names)
+    num_parts = default_partitions
+    distribute = sel.distribute_by
+    if "copartition" in stmt.properties:
+        other = catalog.get(stmt.properties["copartition"])
+        num_parts = other.num_partitions
+    if distribute is None and "copartition" in stmt.properties:
+        raise ValueError("copartition requires DISTRIBUTE BY")
+    table = from_arrays(stmt.name, schema, data, num_parts, distribute)
+    # shark.cache => keep in the memory store (all our tables are
+    # in-memory; uncached CTAS still registers but could be spilled)
+    catalog.register_table(table)
+    return result
 
 
 def _infer_schema(data: Dict[str, np.ndarray], names: List[str]) -> Schema:

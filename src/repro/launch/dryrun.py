@@ -79,7 +79,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     fn, arg_shapes, in_sh, out_sh = build_cell(cfg, shape, mesh,
                                                microbatches=microbatches)
     jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
-    with jax.sharding.set_mesh(mesh):
+    from ..parallel.compat import set_mesh
+    with set_mesh(mesh):
         lowered = jitted.lower(*arg_shapes)
         t_lower = time.time() - t0
         compiled = lowered.compile()

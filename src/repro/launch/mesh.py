@@ -16,6 +16,8 @@ from typing import Optional
 import jax
 import numpy as np
 
+from ..parallel.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -27,9 +29,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices but only {len(devices)} present;"
             " run under XLA_FLAGS=--xla_force_host_platform_device_count="
             f"{n} (launch/dryrun.py does this)")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-                         devices=devices[:n])
+    return make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, pod: Optional[int] = None):
@@ -39,6 +39,4 @@ def make_debug_mesh(data: int = 2, model: int = 2, pod: Optional[int] = None):
     else:
         shape, axes = (data, model), ("data", "model")
     n = int(np.prod(shape))
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-                         devices=jax.devices()[:n])
+    return make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..parallel.compat import get_abstract_mesh
 from .common import Params, Specs, stacked_dense_init
 
 
@@ -170,7 +171,7 @@ def moe_apply_ep(p: Params, x: jnp.ndarray, cfg: MoEConfig,
 
     x: (B, S, D).  Requires a mesh with a `model` axis whose size divides
     both S and num_experts; falls back to the GSPMD path otherwise."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty or "model" not in mesh.axis_names:
         return moe_apply(p, x, cfg, return_stats=return_stats)
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))

@@ -1,0 +1,102 @@
+"""JAX version-compat shims for mesh context APIs.
+
+The model/sharding code targets the modern mesh-context API
+(``jax.sharding.set_mesh`` / ``jax.sharding.get_abstract_mesh``).  Older
+installs (e.g. jax 0.4.37) expose neither publicly: the concrete mesh
+context is tracked by ``jax._src.mesh.thread_resources`` (entered via
+``with mesh:``) and the abstract-mesh context manager lives in
+``jax._src.mesh``.  Centralizing the lookup here keeps every caller
+version-agnostic — use
+
+    from repro.parallel.compat import get_abstract_mesh, set_mesh
+
+instead of touching ``jax.sharding`` directly.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+try:  # pragma: no cover - trivial import probing
+    from jax._src import mesh as _mesh_lib
+except Exception:  # pragma: no cover
+    _mesh_lib = None
+
+
+def get_abstract_mesh():
+    """Return the mesh of the innermost active mesh context, or None.
+
+    Prefers the public ``jax.sharding.get_abstract_mesh`` when it exists.
+    On older JAX, falls back to the internal abstract-mesh context and then
+    to the physical mesh entered via ``with mesh:`` (thread_resources).
+    The returned object (AbstractMesh or Mesh) always supports ``empty``,
+    ``axis_names`` and ``axis_sizes``.
+    """
+    public = getattr(jax.sharding, "get_abstract_mesh", None)
+    if public is not None:
+        return public()
+    if _mesh_lib is None:
+        return None
+    getter = getattr(_mesh_lib, "get_abstract_mesh", None)
+    if getter is not None:
+        mesh = getter()
+        if mesh is not None and getattr(mesh, "axis_names", ()):
+            return mesh
+    phys = _mesh_lib.thread_resources.env.physical_mesh
+    if phys is not None and not phys.empty:
+        return phys.abstract_mesh
+    return None
+
+
+def current_axis_sizes() -> dict:
+    """axis name -> size of the active mesh ({} when no mesh is set)."""
+    mesh = get_abstract_mesh()
+    if mesh is None or getattr(mesh, "empty", True):
+        return {}
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def make_mesh(axis_shapes, axis_names, devices=None) -> jax.sharding.Mesh:
+    """`jax.make_mesh` with explicit Auto axis types when supported.
+
+    Newer JAX takes an `axis_types` kwarg (and defaults axes to Auto);
+    jax 0.4.37's `jax.make_mesh` predates axis types entirely — every axis
+    is implicitly Auto there, so dropping the kwarg is semantically the
+    same mesh."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names, devices=devices,
+                axis_types=(axis_type.Auto,) * len(axis_names))
+        except TypeError:  # pragma: no cover - AxisType without the kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: Optional[jax.sharding.Mesh]):
+    """Context manager equivalent of ``jax.sharding.set_mesh(mesh)``.
+
+    On new JAX it delegates to the public API.  On older JAX it enters the
+    physical mesh context (so bare-PartitionSpec ``with_sharding_constraint``
+    resolves axis names) and, when available, the abstract-mesh context (so
+    `get_abstract_mesh` agrees with the physical context).
+    """
+    public = getattr(jax.sharding, "set_mesh", None)
+    if public is not None:
+        with public(mesh):
+            yield mesh
+        return
+    if mesh is None:
+        yield None
+        return
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(mesh)
+        if _mesh_lib is not None and hasattr(_mesh_lib, "set_abstract_mesh"):
+            stack.enter_context(
+                _mesh_lib.set_abstract_mesh(mesh.abstract_mesh))
+        yield mesh

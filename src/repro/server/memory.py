@@ -1,0 +1,143 @@
+"""Unified memory manager for the server tier (DESIGN.md §6.3).
+
+Shark's cached tables are a *cache*, not primary storage (paper §3.2): any
+cached partition can be dropped under memory pressure and transparently
+recomputed from RDD lineage on the next access.  The seed runtime never
+evicted, so that fallback path was dead code.  The MemoryManager makes it
+live: it does unified byte accounting over everything the BlockManager
+holds (cached partitions + in-flight shuffle output) plus the query result
+cache, and enforces a configurable budget.
+
+The budget governs *evictable cache bytes* — cached partition blocks plus
+result-cache entries.  Shuffle map outputs are working memory, not cache:
+a running reducer holds a fetch dependency on them, so evicting them here
+would only trade eviction for immediate lineage recovery churn.  They are
+accounted and reported (`working_bytes`), and the server releases them
+deterministically when their query completes (`BlockManager.drop_shuffle`);
+a worker death dropping them mid-query is already handled by the
+scheduler's lineage recovery.
+
+Eviction policy (deterministic, documented order):
+  1. cached partition blocks, least-recently-used first — cheapest to hold
+     wrong and always recomputable from lineage;
+  2. query-result-cache entries, LRU — tiny (final aggregates), so they are
+     evicted only when partition eviction alone cannot satisfy the budget.
+
+If the just-inserted partition alone exceeds what the budget can hold even
+after evicting everything else, it is itself dropped — a cache-admission
+*bypass*: the query that computed it already has the batch in hand, so
+correctness is unaffected.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Set, Tuple
+
+from ..core.runtime import BlockManager
+
+
+class MemoryManager:
+    def __init__(self, block_manager: BlockManager,
+                 budget_bytes: Optional[int] = None):
+        self.bm = block_manager
+        self.budget_bytes = budget_bytes
+        self.lock = threading.RLock()
+        self._result_cache = None  # attached by the server
+        self._evicted: Set[Tuple] = set()
+        # counters (all monotonic; exposed via stats())
+        self.evictions = 0
+        self.evicted_bytes = 0
+        self.recomputes = 0
+        self.result_evictions = 0
+        self.bypasses = 0
+        self.over_budget_events = 0
+        self.bm.memory_manager = self
+
+    def attach_result_cache(self, result_cache) -> None:
+        self._result_cache = result_cache
+
+    # -- accounting ----------------------------------------------------------
+
+    def accounted_bytes(self) -> int:
+        """Everything tracked: cache bytes + in-flight shuffle output."""
+        rc = self._result_cache
+        return self.bm.nbytes() + (rc.nbytes if rc is not None else 0)
+
+    def cache_bytes(self) -> int:
+        """Evictable bytes the budget governs (partitions + results)."""
+        rc = self._result_cache
+        return self.bm.part_bytes + (rc.nbytes if rc is not None else 0)
+
+    # -- BlockManager hooks ---------------------------------------------------
+
+    def on_put(self, key: Tuple) -> None:
+        """A block was just inserted: enforce the budget, protecting it."""
+        with self.lock:
+            self._evicted.discard(key)
+        self.enforce(protect=key)
+
+    def on_miss(self, key: Tuple) -> None:
+        """A cached-partition read missed.  If we evicted that block, this
+        miss is the paper's recompute-from-lineage fallback in action."""
+        with self.lock:
+            if key in self._evicted:
+                self._evicted.discard(key)
+                self.recomputes += 1
+
+    # -- enforcement ----------------------------------------------------------
+
+    def enforce(self, protect: Optional[Tuple] = None) -> None:
+        if self.budget_bytes is None:
+            return
+        with self.lock:
+            while self.cache_bytes() > self.budget_bytes:
+                victim = None
+                for key in self.bm.lru_partition_keys():
+                    if key != protect:
+                        victim = key
+                        break
+                if victim is not None:
+                    freed = self.bm.drop_block(victim)
+                    if freed:
+                        self.evictions += 1
+                        self.evicted_bytes += freed
+                        self._evicted.add(victim)
+                    continue
+                rc = self._result_cache
+                if rc is not None and rc.nbytes > 0:
+                    if rc.evict_lru() > 0:
+                        self.result_evictions += 1
+                        continue
+                if (protect is not None and protect[0] == "part"
+                        and protect in self.bm.sizes):
+                    # the new block alone exceeds the budget: refuse
+                    # admission rather than blow it
+                    self.bm.drop_block(protect)
+                    self.bypasses += 1
+                    self._evicted.add(protect)
+                self.over_budget_events += (
+                    self.cache_bytes() > self.budget_bytes)
+                break
+
+    # -- reporting -------------------------------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        rc = self._result_cache
+        part_bytes = self.bm.part_bytes
+        return {
+            "budget_bytes": self.budget_bytes or 0,
+            "partition_bytes": part_bytes,
+            "working_bytes": self.bm.nbytes() - part_bytes,  # shuffle
+            "result_cache_bytes": rc.nbytes if rc is not None else 0,
+            "cache_bytes": self.cache_bytes(),
+            "accounted_bytes": self.accounted_bytes(),
+            "partition_hits": self.bm.part_hits,
+            "partition_misses": self.bm.part_misses,
+            "evictions": self.evictions,
+            "evicted_bytes": self.evicted_bytes,
+            "recomputes": self.recomputes,
+            "result_evictions": self.result_evictions,
+            "bypasses": self.bypasses,
+            "over_budget_events": self.over_budget_events,
+        }

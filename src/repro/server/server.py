@@ -1,0 +1,189 @@
+"""SharkServer — concurrent multi-session query service (DESIGN.md §6).
+
+One server owns ONE shared SharkContext (workers + block store), ONE
+catalog, and the unified MemoryManager; many client sessions submit queries
+concurrently:
+
+    srv = SharkServer(cache_budget_bytes=64 << 20)
+    srv.create_table("rankings", schema, data)
+    etl = srv.session("etl", weight=1.0)        # scan-heavy tenant
+    dash = srv.session("dash", weight=4.0)      # interactive tenant
+    h = etl.submit("SELECT ... GROUP BY ...")   # async QueryHandle
+    res = dash.sql("SELECT COUNT(*) FROM rankings")  # sync, fair-scheduled
+
+Execution path per query (worker-pool thread):
+  parse -> bind -> optimize -> fingerprint -> result-cache probe
+        -> compile/execute on the shared runtime (cached scans under the
+           memory budget; evicted partitions recompute from lineage)
+        -> release the query's shuffle map outputs -> result-cache fill.
+
+Each query gets a fresh Executor (per-query metrics, no cross-query state)
+but all executors share the context, catalog, scan cache, and therefore
+the block store — that sharing is the whole point of the server tier.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.catalog import Catalog, ExternalSource
+from ..core.columnar import Table, from_arrays
+from ..core.pde import PDEConfig
+from ..core.physical import ExecResult, Executor, ScanCache
+from ..core.runtime import SharkContext
+from ..core.sql import Binder, CreateStmt, parse
+from ..core.plan import optimize
+from ..core.types import Schema
+from .memory import MemoryManager
+from .result_cache import ResultCache, plan_fingerprint
+from .scheduler import AdmissionError, FairScheduler, QueryHandle
+
+__all__ = ["SharkServer", "AdmissionError", "QueryHandle"]
+
+
+class SharkServer:
+    def __init__(self, num_workers: int = 8, max_threads: int = 8, *,
+                 cache_budget_bytes: Optional[int] = None,
+                 max_concurrent_queries: int = 4,
+                 max_queue_depth: int = 32,
+                 enable_result_cache: bool = True,
+                 result_cache_entries: int = 256,
+                 enable_pde: bool = True, enable_map_pruning: bool = True,
+                 default_partitions: int = 8,
+                 default_shuffle_buckets: int = 64,
+                 pde_config: Optional[PDEConfig] = None,
+                 speculation: bool = True,
+                 task_launch_overhead_s: float = 0.0):
+        self.ctx = SharkContext(num_workers=num_workers,
+                                max_threads=max_threads,
+                                speculation=speculation,
+                                task_launch_overhead_s=task_launch_overhead_s)
+        self.catalog = Catalog()
+        self.memory = MemoryManager(self.ctx.block_manager,
+                                    budget_bytes=cache_budget_bytes)
+        self.scan_cache = ScanCache()
+        self.result_cache = (ResultCache(result_cache_entries)
+                             if enable_result_cache else None)
+        if self.result_cache is not None:
+            self.memory.attach_result_cache(self.result_cache)
+        self.catalog.subscribe(self._on_catalog_change)
+        self.default_partitions = default_partitions
+        self._exec_kw = dict(
+            pde=pde_config or PDEConfig(), enable_pde=enable_pde,
+            enable_map_pruning=enable_map_pruning,
+            default_shuffle_buckets=default_shuffle_buckets)
+        self.scheduler = FairScheduler(
+            self._run_query, max_concurrent=max_concurrent_queries,
+            max_queue_depth=max_queue_depth)
+        self._session_counter = 0
+        self._lock = threading.Lock()
+
+    def _on_catalog_change(self, name: str, epoch: int) -> None:
+        """Catalog epoch bump: eagerly drop result-cache entries reading the
+        mutated table (stale scan RDDs are retired lazily by version key)."""
+        if self.result_cache is not None:
+            self.result_cache.invalidate_table(name)
+
+    # -- sessions -------------------------------------------------------------
+
+    def session(self, client_id: Optional[str] = None, weight: float = 1.0):
+        """A SharkSession attached to this server (shared warehouse, fair-
+        scheduled execution)."""
+        from ..core.session import SharkSession
+        with self._lock:
+            if client_id is None:
+                client_id = f"client-{self._session_counter}"
+            self._session_counter += 1
+        return SharkSession(server=self, client_id=client_id, weight=weight)
+
+    def register_client(self, client_id: str, weight: float = 1.0) -> None:
+        self.scheduler.register_client(client_id, weight)
+
+    # -- warehouse ------------------------------------------------------------
+
+    def create_table(self, name: str, schema: Schema,
+                     data: Dict[str, np.ndarray],
+                     num_partitions: Optional[int] = None,
+                     distribute_by: Optional[str] = None) -> Table:
+        table = from_arrays(name, schema, data,
+                            num_partitions or self.default_partitions,
+                            distribute_by)
+        self.catalog.register_table(table)
+        return table
+
+    def register_external(self, src: ExternalSource) -> None:
+        self.catalog.register_external(src)
+
+    # -- query submission -----------------------------------------------------
+
+    def submit(self, sql: str, client: str = "default", block: bool = True,
+               timeout: Optional[float] = None) -> QueryHandle:
+        """Enqueue `sql` for async execution; blocks (or raises
+        AdmissionError) when the admission queue is full."""
+        return self.scheduler.submit(QueryHandle(sql, client),
+                                     block=block, timeout=timeout)
+
+    def sql(self, sql: str, client: str = "default") -> ExecResult:
+        return self.submit(sql, client=client).result()
+
+    def sql_np(self, sql: str, client: str = "default"):
+        return self.sql(sql, client=client).to_numpy()
+
+    # -- execution (runs on scheduler worker threads) --------------------------
+
+    def make_executor(self) -> Executor:
+        return Executor(self.ctx, self.catalog,
+                        scan_cache=self.scan_cache, **self._exec_kw)
+
+    def _run_query(self, handle: QueryHandle):
+        stmt = parse(handle.sql)
+        if isinstance(stmt, CreateStmt):
+            from ..core.session import create_table_as
+            executor = self.make_executor()
+            try:
+                result = create_table_as(executor, self.catalog, stmt,
+                                         self.default_partitions)
+            finally:
+                self._release_shuffles(executor)
+            return result, False
+
+        node = optimize(Binder(self.catalog).bind(stmt), self.catalog)
+        fingerprint = deps = None
+        if self.result_cache is not None:
+            fingerprint, deps = plan_fingerprint(node, self.catalog)
+            hit = self.result_cache.get(fingerprint, self.catalog)
+            if hit is not None:
+                return hit, True
+
+        executor = self.make_executor()
+        try:
+            result = executor.execute(node)
+        finally:
+            self._release_shuffles(executor)
+        if self.result_cache is not None:
+            self.result_cache.put(fingerprint, result, deps)
+            self.memory.enforce()
+        return result, False
+
+    def _release_shuffles(self, executor: Executor) -> None:
+        """Shuffle map outputs are query-scoped: the result stage has fully
+        consumed them once execute returns, so release their memory."""
+        for shuffle_id in executor.created_shuffles:
+            self.ctx.block_manager.drop_shuffle(shuffle_id)
+
+    # -- reporting / lifecycle --------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        out = {"memory": self.memory.stats(),
+               "scheduler": self.scheduler.stats()}
+        if self.result_cache is not None:
+            out["result_cache"] = self.result_cache.stats()
+        return out
+
+    def shutdown(self) -> None:
+        self.scheduler.shutdown()
+        self.scan_cache.clear()
+        self.ctx.shutdown()

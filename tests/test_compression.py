@@ -2,6 +2,10 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
+
+pytestmark = pytest.mark.tier1
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compression import (Encoding, choose_encoding,

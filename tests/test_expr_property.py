@@ -3,6 +3,11 @@ compiler must match direct numpy evaluation (the §5 bytecode-compilation
 analogue cannot change semantics)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+pytestmark = pytest.mark.tier1
 from hypothesis import given, settings, strategies as st
 
 from repro.core.expr import (And, Between, BinOp, Cmp, Col, ColumnVal, Func,

@@ -4,6 +4,10 @@ import time
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
+
+pytestmark = pytest.mark.tier1
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Col, DType, Schema, SharkSession

@@ -1,0 +1,264 @@
+"""Server tier: concurrent sessions, unified memory budget with LRU
+eviction + lineage recompute, plan-fingerprint result cache with epoch
+invalidation, weighted fair scheduling, admission control."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DType, Schema, SharkSession
+from repro.server import AdmissionError, SharkServer
+
+pytestmark = pytest.mark.tier1
+
+N = 60_000
+QUERY = "SELECT a, SUM(b) AS s, COUNT(*) AS c FROM t GROUP BY a"
+
+
+def make_data(n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": rng.integers(0, 40, n).astype(np.int64),
+            "b": rng.uniform(0, 1, n)}
+
+
+def make_server(**kw):
+    kw.setdefault("num_workers", 4)
+    kw.setdefault("max_threads", 4)
+    kw.setdefault("default_partitions", 8)
+    kw.setdefault("default_shuffle_buckets", 8)
+    srv = SharkServer(**kw)
+    srv.create_table("t", Schema.of(a=DType.INT64, b=DType.FLOAT64),
+                     make_data())
+    return srv
+
+
+def groupby_ref(data):
+    out = {}
+    for a, b in zip(data["a"].tolist(), data["b"].tolist()):
+        s, c = out.get(a, (0.0, 0))
+        out[a] = (s + b, c + 1)
+    return out
+
+
+def check_result(res, ref):
+    got = res.to_numpy()
+    assert len(got["a"]) == len(ref)
+    for a, s, c in zip(got["a"].tolist(), got["s"].tolist(),
+                       got["c"].tolist()):
+        assert c == ref[a][1]
+        assert abs(s - ref[a][0]) < 1e-6
+
+
+# -- eviction + lineage recompute ------------------------------------------
+
+
+def test_eviction_and_lineage_recompute():
+    # budget holds ~2 of 8 scan partitions (each ~120KB): the working set
+    # does not fit, so caching churns and re-runs recompute from lineage
+    srv = make_server(cache_budget_bytes=300_000, enable_result_cache=False)
+    try:
+        ref = groupby_ref(make_data())
+        check_result(srv.sql(QUERY), ref)
+        stats1 = srv.stats()["memory"]
+        assert stats1["evictions"] > 0, "budget < working set must evict"
+        assert stats1["cache_bytes"] <= 300_000
+
+        check_result(srv.sql(QUERY), ref)  # identical result after eviction
+        stats2 = srv.stats()["memory"]
+        # the second run found evicted blocks gone and recomputed them from
+        # lineage — the recompute path, not the cache, served the query
+        assert stats2["recomputes"] > 0
+        assert stats2["partition_misses"] > stats1["partition_misses"]
+    finally:
+        srv.shutdown()
+
+
+def test_unlimited_budget_caches_scans():
+    srv = make_server(enable_result_cache=False)
+    try:
+        ref = groupby_ref(make_data())
+        check_result(srv.sql(QUERY), ref)
+        check_result(srv.sql(QUERY), ref)
+        mem = srv.stats()["memory"]
+        assert mem["evictions"] == 0 and mem["recomputes"] == 0
+        assert mem["partition_hits"] > 0, "second run must hit cached scans"
+    finally:
+        srv.shutdown()
+
+
+def test_bypass_when_partition_exceeds_budget():
+    srv = make_server(cache_budget_bytes=10_000,  # < one partition
+                      enable_result_cache=False)
+    try:
+        ref = groupby_ref(make_data())
+        check_result(srv.sql(QUERY), ref)
+        mem = srv.stats()["memory"]
+        assert mem["bypasses"] > 0
+        assert mem["cache_bytes"] <= 10_000
+    finally:
+        srv.shutdown()
+
+
+# -- result cache -----------------------------------------------------------
+
+
+def test_result_cache_hit():
+    srv = make_server()
+    try:
+        ref = groupby_ref(make_data())
+        h1 = srv.submit(QUERY)
+        check_result(h1.result(), ref)
+        assert not h1.cached
+        h2 = srv.submit(QUERY)
+        check_result(h2.result(), ref)
+        assert h2.cached, "identical plan over same table versions must hit"
+        # different SQL text, same plan -> same fingerprint
+        h3 = srv.submit("SELECT a, SUM(b) AS s, COUNT(*) AS c "
+                        "FROM t GROUP BY a")
+        assert h3.result() is not None and h3.cached
+        assert srv.stats()["result_cache"]["hits"] == 2
+    finally:
+        srv.shutdown()
+
+
+def test_result_cache_invalidated_by_create_table():
+    srv = make_server()
+    try:
+        ref = groupby_ref(make_data())
+        check_result(srv.sql(QUERY), ref)
+        assert srv.submit(QUERY).result() is not None
+
+        # mutate the input table: epoch bumps, entries must not be served
+        data2 = make_data(n=30_000, seed=7)
+        srv.create_table("t", Schema.of(a=DType.INT64, b=DType.FLOAT64),
+                         data2)
+        h = srv.submit(QUERY)
+        check_result(h.result(), groupby_ref(data2))
+        assert not h.cached, "stale result served after catalog mutation"
+        assert srv.stats()["result_cache"]["invalidations"] > 0
+    finally:
+        srv.shutdown()
+
+
+def test_result_cache_invalidated_by_ctas():
+    srv = make_server()
+    try:
+        srv.sql("CREATE TABLE big AS SELECT a, b FROM t WHERE a < 20")
+        r1 = srv.sql_np("SELECT COUNT(*) AS c FROM big")
+        srv.sql("CREATE TABLE big AS SELECT a, b FROM t WHERE a < 10")
+        r2 = srv.sql_np("SELECT COUNT(*) AS c FROM big")
+        assert r2["c"][0] < r1["c"][0]
+    finally:
+        srv.shutdown()
+
+
+# -- concurrency, fairness, admission ---------------------------------------
+
+
+def test_concurrent_clients_zero_wrong_results():
+    srv = make_server(max_concurrent_queries=4)
+    try:
+        ref = groupby_ref(make_data())
+        count_ref = int((make_data()["a"] < 20).sum())
+        errors = []
+
+        def client(name, reps):
+            sess = srv.session(name)
+            for i in range(reps):
+                try:
+                    if i % 2 == 0:
+                        check_result(sess.sql(QUERY), ref)
+                    else:
+                        r = sess.sql_np(
+                            "SELECT COUNT(*) AS c FROM t WHERE a < 20")
+                        assert r["c"][0] == count_ref
+                except Exception as e:  # surface across threads
+                    errors.append((name, e))
+
+        threads = [threading.Thread(target=client, args=(f"c{i}", 6))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors
+    finally:
+        srv.shutdown()
+
+
+def test_weighted_fair_share():
+    # a heavy tenant floods the queue; the high-weight interactive tenant
+    # must still get service proportional to its weight (its queries do not
+    # all wait behind the flood)
+    srv = make_server(max_concurrent_queries=1, max_queue_depth=64)
+    try:
+        heavy = srv.session("heavy", weight=1.0)
+        inter = srv.session("inter", weight=8.0)
+        flood = [heavy.submit(QUERY + f" LIMIT {40 - i}") for i in range(12)]
+        time.sleep(0.01)
+        quick = [inter.submit(f"SELECT COUNT(*) AS c FROM t WHERE a < {k}")
+                 for k in (5, 10, 15)]
+        for h in quick:
+            h.result(timeout=120)
+        done_heavy = sum(h.done() for h in flood)
+        assert done_heavy < len(flood), \
+            "fair share should interleave, not drain the flood first"
+        for h in flood:
+            h.result(timeout=120)
+        clients = srv.stats()["scheduler"]["clients"]
+        assert clients["inter"]["served"] == 3
+        assert clients["heavy"]["served"] == 12
+    finally:
+        srv.shutdown()
+
+
+def test_admission_control_backpressure():
+    srv = make_server(max_concurrent_queries=1, max_queue_depth=2)
+    try:
+        handles = []
+        with pytest.raises(AdmissionError):
+            for _ in range(40):  # far beyond queue depth
+                handles.append(srv.submit(QUERY + " LIMIT 40", block=False))
+        assert srv.stats()["scheduler"]["rejected"] >= 1
+        for h in handles:
+            h.result(timeout=120)
+        # space freed: a blocking submit now succeeds
+        assert srv.submit(QUERY).result(timeout=120) is not None
+    finally:
+        srv.shutdown()
+
+
+def test_shuffle_blocks_released_after_query():
+    srv = make_server(enable_result_cache=False)
+    try:
+        srv.sql(QUERY)
+        bm = srv.ctx.block_manager
+        with bm.lock:
+            shuf = [k for k in bm.blocks if k[0] == "shuf"]
+        assert not shuf, f"leaked shuffle blocks: {shuf[:3]}"
+    finally:
+        srv.shutdown()
+
+
+# -- attached sessions -------------------------------------------------------
+
+
+def test_attached_sessions_share_warehouse():
+    srv = make_server()
+    try:
+        a = SharkSession(server=srv, client_id="a")
+        b = srv.session("b")
+        a.create_table("u", Schema.of(x=DType.INT32),
+                       {"x": np.arange(100, dtype=np.int32)})
+        r = b.sql_np("SELECT COUNT(*) AS c FROM u")
+        assert r["c"][0] == 100
+        # sql2rdd still works against the shared catalog/lineage graph
+        rdd, names = a.sql2rdd("SELECT x FROM u WHERE x < 10")
+        total = sum(batch.num_rows for batch in rdd.collect())
+        assert total == 10 and names == ["x"]
+        a.shutdown()  # must NOT kill the shared server context
+        assert b.sql_np("SELECT COUNT(*) AS c FROM u")["c"][0] == 100
+    finally:
+        srv.shutdown()

@@ -7,6 +7,8 @@ import pytest
 
 from repro.core import DType, Schema, SharkSession
 
+pytestmark = pytest.mark.tier1
+
 
 @pytest.fixture(scope="module")
 def sess():

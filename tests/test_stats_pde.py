@@ -3,6 +3,10 @@ greedy bin-packing."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
+
+pytestmark = pytest.mark.tier1
 from hypothesis import given, settings, strategies as st
 
 from repro.core.batch import PartitionBatch
