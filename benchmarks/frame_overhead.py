@@ -1,0 +1,110 @@
+"""Frame-vs-SQL plan-construction overhead (API layer, DESIGN.md §7).
+
+Measures the cost of getting from a query *description* to an optimized,
+fingerprinted logical plan on each surface:
+
+  * sql   — tokenize + parse + bind + optimize + fingerprint
+  * frame — fluent construction (eager schema validation) + optimize
+            + fingerprint
+
+The engine executes identical plans either way, so this is the entire
+API-layer cost difference; regressions here show up in BENCH_frame_api.json
+(scripts/ci.sh runs the --quick smoke).
+
+    PYTHONPATH=src python -m benchmarks.frame_overhead \
+        [--iters 300] [--json-out BENCH_frame_api.json] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import DType, Schema, col, count, sum_
+from repro.core.plan import optimize
+from repro.server.result_cache import plan_fingerprint
+
+from .common import report, shark_session
+
+SQL = ("SELECT destURL, SUM(adRevenue) AS rev, COUNT(*) AS c "
+       "FROM rankings JOIN uservisits ON rankings.pageURL = "
+       "uservisits.destURL WHERE pageRank > 100 GROUP BY destURL "
+       "ORDER BY rev DESC LIMIT 10")
+
+
+def build_frame(sess):
+    # same operator order as the SQL text (WHERE applies over the join), so
+    # the two surfaces bind to byte-identical plans
+    return (sess.table("rankings")
+            .join(sess.table("uservisits"), on=("pageURL", "destURL"))
+            .filter(col("pageRank") > 100)
+            .group_by(col("destURL"))
+            .agg(sum_(col("adRevenue")).alias("rev"), count().alias("c"))
+            .order_by("rev", desc=True)
+            .limit(10))
+
+
+def _bench(fn, iters: int) -> float:
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=300)
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args, _ = ap.parse_known_args(argv)
+    iters = 50 if args.quick else args.iters
+
+    sess = shark_session(num_workers=2, max_threads=2)
+    rng = np.random.default_rng(0)
+    n = 2000
+    sess.create_table("rankings", Schema.of(
+        pageURL=DType.STRING, pageRank=DType.INT32),
+        {"pageURL": np.array([f"url{i % 97}" for i in range(n)]),
+         "pageRank": rng.integers(0, 1000, n).astype(np.int32)},
+        num_partitions=4)
+    sess.create_table("uservisits", Schema.of(
+        destURL=DType.STRING, adRevenue=DType.FLOAT64),
+        {"destURL": np.array([f"url{i % 97}" for i in range(n)]),
+         "adRevenue": rng.uniform(0, 10, n)},
+        num_partitions=4)
+
+    def sql_path():
+        node = optimize(sess.plan(SQL), sess.catalog)
+        plan_fingerprint(node, sess.catalog)
+
+    def frame_path():
+        plan_fingerprint(build_frame(sess).optimized_plan(), sess.catalog)
+
+    # identical plans is a precondition for comparing their build cost
+    assert build_frame(sess).explain() == sess.explain(SQL)
+
+    sql_s = _bench(sql_path, iters)
+    frame_s = _bench(frame_path, iters)
+    ratio = frame_s / max(sql_s, 1e-12)
+    report("plan_build_sql", sql_s, "parse+bind+optimize+fingerprint")
+    report("plan_build_frame", frame_s,
+           f"fluent+optimize+fingerprint ratio={ratio:.2f}x")
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"iters": iters,
+                       "sql_us": round(sql_s * 1e6, 2),
+                       "frame_us": round(frame_s * 1e6, 2),
+                       "frame_over_sql": round(ratio, 3),
+                       "plans_identical": True}, f, indent=2)
+    print(f"# frame_overhead: sql={sql_s * 1e6:.1f}us "
+          f"frame={frame_s * 1e6:.1f}us ratio={ratio:.2f}x")
+    sess.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,4 @@
-"""Benchmark harness — one module per paper table/figure (see DESIGN.md §7).
+"""Benchmark harness — one module per paper table/figure (see DESIGN.md §8).
 Prints ``name,us_per_call,derived`` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run [--only pavlo,ml_bench]
@@ -13,7 +13,7 @@ import traceback
 
 SUITES = ["loading", "kernels_bench", "pavlo", "tpch_micro", "join_pde",
           "fault_tolerance", "warehouse", "ml_bench", "task_overhead",
-          "concurrent_bench"]
+          "concurrent_bench", "frame_overhead"]
 
 
 def main() -> None:

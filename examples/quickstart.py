@@ -1,12 +1,13 @@
-"""Quickstart: the Shark engine in 60 lines — columnar store, SQL, map
-pruning, PDE join selection, and mid-query fault tolerance.
+"""Quickstart: the Shark engine in 60 lines — columnar store, the fluent
+SharkFrame API (and its SQL twin), map pruning, PDE join selection, and
+mid-query fault tolerance.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import DType, Schema, SharkSession
+from repro.core import DType, Schema, SharkSession, col, count, sum_
 
 sess = SharkSession(num_workers=4, max_threads=4, default_partitions=8)
 rng = np.random.default_rng(0)
@@ -22,32 +23,38 @@ sess.create_table(
     num_partitions=16)
 
 # -- selection with map pruning: only partitions overlapping day 7 scan ------
-r = sess.sql_np("SELECT url, revenue FROM visits WHERE day = 7")
+r = (sess.table("visits").filter(col("day") == 7)
+     .select("url", "revenue").to_numpy())
 m = sess.metrics()
 print(f"day=7 rows: {len(r['url'])}  "
       f"(pruned {m.pruned_partitions}/16 partitions without launching tasks)")
 
-# -- aggregation with PDE reducer coalescing ---------------------------------
-r = sess.sql_np("SELECT day, COUNT(*) AS n, SUM(revenue) AS rev "
-                "FROM visits GROUP BY day")
+# -- aggregation with PDE reducer coalescing; HAVING trims small groups ------
+daily = (sess.table("visits").group_by(col("day"))
+         .agg(count().alias("n"), sum_(col("revenue")).alias("rev"))
+         .having(col("rev") > 100))
+r = daily.to_numpy()
 print(f"{len(r['day'])} groups; PDE: {sess.metrics().reducer_decisions[-1]}")
 
 # -- join: PDE observes the filtered dim table is small -> broadcast join ----
+# (SQL text binds to the identical plan: sess.sql("SELECT lang, ...") )
 sess.create_table(
     "pages", Schema.of(purl=DType.STRING, lang=DType.STRING),
     {"purl": np.array([f"url{i}" for i in range(5000)]),
      "lang": np.array(["en", "de", "fr", "jp"])[rng.integers(0, 4, 5000)]})
-r = sess.sql_np("SELECT lang, SUM(revenue) AS rev FROM visits "
-                "JOIN pages ON visits.url = pages.purl "
-                "WHERE lang = 'de' GROUP BY lang")
+r = (sess.table("visits").join("pages", on=("url", "purl"))
+     .filter(col("lang") == "de")
+     .group_by(col("lang")).agg(sum_(col("revenue")).alias("rev"))
+     .to_numpy())
 print(f"join result: {dict(zip(r['lang'], np.round(r['rev'], 1)))}")
 print(f"join plan: {sess.metrics().join_decisions[-1]}")
 
 # -- kill a worker mid-session: lineage recomputes lost partitions -----------
-sess.sql("CREATE TABLE cache_demo TBLPROPERTIES ('shark.cache'='true') AS "
-         "SELECT day, revenue FROM visits WHERE day < 10")
+# .cache(name) is the fluent CREATE TABLE ... AS — materialize + register
+sess.table("visits").filter(col("day") < 10).select("day", "revenue") \
+    .cache("cache_demo")
 sess.ctx.scheduler.kill_worker(0)
-r = sess.sql_np("SELECT COUNT(*) AS c FROM cache_demo")
+r = sess.table("cache_demo").agg(count().alias("c")).to_numpy()
 print(f"after killing worker 0: COUNT = {r['c'][0]} "
       f"(recomputed {sess.ctx.scheduler.tasks_recomputed} tasks via lineage)")
 

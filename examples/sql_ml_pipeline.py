@@ -1,14 +1,15 @@
-"""Paper Listing 1: SQL -> feature extraction -> distributed logistic
-regression, one lineage graph end to end (with a node failure in the middle
-of training to prove it).
+"""Paper Listing 1 via the fluent SharkFrame API: relational selection ->
+feature extraction -> distributed logistic regression, one lineage graph end
+to end (with a node failure in the middle of training to prove it) — and
+zero SQL-string plumbing between stages.
 
     PYTHONPATH=src python examples/sql_ml_pipeline.py
 """
 
 import numpy as np
 
-from repro.core import DType, Schema, SharkSession
-from repro.ml import KMeans, LogisticRegression, table_rdd_to_features
+from repro.core import DType, Schema, SharkSession, col
+from repro.ml import KMeans, LogisticRegression
 
 rng = np.random.default_rng(0)
 n, d = 50_000, 10
@@ -23,11 +24,16 @@ sess.create_table("users", Schema.of(
     **{f"f{i}": DType.FLOAT32 for i in range(d)}, is_spammer=DType.FLOAT32),
     cols, num_partitions=8)
 
-# sql2rdd returns the query plan as an RDD (not collected rows)
-rdd, names = sess.sql2rdd("SELECT * FROM users WHERE f0 > -3")
-print("TableRDD columns:", names)
+# the frame is the query plan — lazy, composable, same lineage graph the
+# executor and the ML layer extend
+users = sess.table("users").filter(col("f0") > -3)
+print("SharkFrame columns:", users.columns)
+print(users.explain())
 
-feats = table_rdd_to_features(rdd, [f"f{i}" for i in range(d)], "is_spammer")
+# .to_features() leaves the final narrow stage lazy (Listing 1's mapRows);
+# the cached feature RDD is reused across .fit() calls below
+feature_cols = [f"f{i}" for i in range(d)]
+feats = users.to_features(feature_cols, "is_spammer")
 clf = LogisticRegression(dims=d, lr=0.5, iterations=5).fit(feats)
 print(f"after 5 iters: accuracy = {(clf.predict(X) == y).mean():.4f}")
 
@@ -39,7 +45,8 @@ print(f"after failure + 10 more iters: accuracy = "
       f"{(clf.predict(X) == y).mean():.4f} "
       f"(recomputed {sess.ctx.scheduler.tasks_recomputed} tasks)")
 
-# k-means over the same cached features — no data movement
+# k-means over the same cached features — no data movement; estimators also
+# accept the frame directly: KMeans(...).fit(users, feature_cols=...)
 km = KMeans(k=4, dims=d, iterations=10).fit(feats)
 print(f"k-means objective: {km.objective_history[0]:.0f} -> "
       f"{km.objective_history[-1]:.0f}")

@@ -1,15 +1,24 @@
 #!/usr/bin/env bash
-# CI entry point: fast deterministic tier-1 tests + a 2-client smoke of the
-# concurrent server benchmark (emits BENCH_concurrent.json).
+# CI entry point: fast deterministic tier-1 tests (includes the SharkFrame
+# API suite), a 2-client smoke of the concurrent server benchmark (emits
+# BENCH_concurrent.json), and the frame-vs-SQL plan-build micro-benchmark
+# (emits BENCH_frame_api.json) so API-layer regressions are visible.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
+echo "== tier-1 tests (includes the tier1-marked frame-API suite) =="
 python -m pytest -q -m tier1
+
+echo "== frame-API smoke (fluent SQL->ML pipeline end to end) =="
+python examples/sql_ml_pipeline.py
 
 echo "== concurrent server smoke (2 clients) =="
 python -m benchmarks.concurrent_bench --quick --clients 2 \
     --queries-per-client 4 --rows 60000 --json-out BENCH_concurrent.json
 echo "wrote BENCH_concurrent.json"
+
+echo "== frame-vs-SQL plan-build overhead =="
+python -m benchmarks.frame_overhead --quick --json-out BENCH_frame_api.json
+echo "wrote BENCH_frame_api.json"

@@ -63,9 +63,25 @@ class Expr:
     def __hash__(self):  # Exprs used as dict keys in planners
         return id(self)
 
+    def alias(self, name: str) -> "Aliased":
+        """Name this expression in a SharkFrame select/agg list."""
+        return Aliased(name, self)
+
 
 def _lit(v) -> "Expr":
     return v if isinstance(v, Expr) else Lit(v)
+
+
+@dataclasses.dataclass(eq=False)
+class Aliased:
+    """An (output name, expression) pair produced by `Expr.alias()`.
+
+    Not an Expr itself: it is only meaningful in a SharkFrame select/agg
+    list (or a GROUP BY key), where the name becomes the output column."""
+    name: str
+    expr: "Expr"
+
+    def __repr__(self): return f"{self.expr} AS {self.name}"
 
 
 @dataclasses.dataclass(eq=False)
@@ -389,6 +405,27 @@ def evaluate(e: Expr, ctx: Dict[str, ColumnVal], xp=np) -> ColumnVal:
 # ---------------------------------------------------------------------------
 # Predicate normalization helpers used by map pruning and pushdown
 # ---------------------------------------------------------------------------
+
+
+def rewrite_expr(e: Expr, fn: Callable[[Expr], Optional[Expr]]) -> Expr:
+    """Generic top-down expression rewrite: `fn(node)` returns a replacement
+    subtree (recursion stops there) or None to keep the node, in which case
+    it is shallow-copied and its children rewritten.  The single walker for
+    every rewriter (predicate pushdown substitution, HAVING resolution, ...)
+    so Expr attribute conventions live in one place."""
+    out = fn(e)
+    if out is not None:
+        return out
+    import copy
+    c = copy.copy(e)
+    for attr in ("left", "right"):
+        if hasattr(c, attr):
+            setattr(c, attr, rewrite_expr(getattr(c, attr), fn))
+    if hasattr(c, "child") and isinstance(getattr(c, "child"), Expr):
+        c.child = rewrite_expr(c.child, fn)
+    if hasattr(c, "args"):
+        c.args = tuple(rewrite_expr(x, fn) for x in c.args)
+    return c
 
 
 def split_conjuncts(e: Optional[Expr]) -> List[Expr]:

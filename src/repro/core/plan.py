@@ -176,19 +176,9 @@ def optimize(node: Node, catalog) -> Node:
 
 def _substitute(e: Expr, mapping: Dict[str, Expr]) -> Expr:
     """Rewrite column refs through a projection (for pushdown)."""
-    if isinstance(e, Col):
-        return mapping.get(e.name, e)
-    import copy
-    clone = copy.copy(e)
-    if hasattr(clone, "left"):
-        clone.left = _substitute(clone.left, mapping)
-    if hasattr(clone, "right"):
-        clone.right = _substitute(clone.right, mapping)
-    if hasattr(clone, "child") and isinstance(getattr(clone, "child", None), Expr):
-        clone.child = _substitute(clone.child, mapping)
-    if hasattr(clone, "args"):
-        clone.args = tuple(_substitute(a, mapping) for a in clone.args)
-    return clone
+    from .expr import rewrite_expr
+    return rewrite_expr(
+        e, lambda n: mapping.get(n.name, n) if isinstance(n, Col) else None)
 
 
 def push_down_filters(node: Node) -> Node:

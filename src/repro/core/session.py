@@ -1,13 +1,17 @@
-"""SharkSession — the user-facing entry point (paper §2, §4.1).
+"""SharkSession — the user-facing entry point (paper §2, §4.1; DESIGN.md §7).
 
     sess = SharkSession(num_workers=8)
     sess.create_table("logs", schema, data)          # load into memory store
     res = sess.sql("SELECT pageURL, pageRank FROM rankings WHERE pageRank > 100")
-    rdd, names = sess.sql2rdd("SELECT * FROM users")  # feed ML directly
+    top = sess.table("rankings").filter(col("pageRank") > 100)   # fluent
 
-`sql2rdd` returns the *query plan as an RDD* rather than collected rows:
-callers invoke distributed computation over it (Listing 1 of the paper), the
-whole pipeline shares one lineage graph, and recovery spans SQL and ML.
+Both query surfaces return a `SharkFrame` over the same logical plan:
+`sql()` executes eagerly (back-compat — the frame doubles as the old
+ExecResult) unless `lazy=True`; `table()` starts a lazy fluent chain.
+Either way `.to_rdd()` hands the *query plan as an RDD* rather than
+collected rows: ML invokes distributed computation over it (Listing 1 of
+the paper), the whole pipeline shares one lineage graph, and recovery
+spans SQL and ML.
 
 A session can also *attach to a shared SharkServer* (DESIGN.md §6) instead
 of owning a private context:
@@ -18,20 +22,23 @@ of owning a private context:
     h = sess.submit("...")          # async QueryHandle
 
 Attached sessions share the server's catalog, block store, memory budget,
-and result cache; `sql()` routes through the server's admission-controlled
-scheduler, while plan/explain/sql2rdd still work locally against the shared
-catalog (same lineage graph, same workers).
+and result cache; queries — SQL text or frames, which submit their *bound
+plan* — route through the server's admission-controlled scheduler, while
+plan/explain/to_rdd still work locally against the shared catalog (same
+lineage graph, same workers).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from .catalog import Catalog, ExternalSource
 from .columnar import Table, from_arrays
 from .batch import PartitionBatch
+from .frame import SharkFrame
 from .pde import PDEConfig
 from .physical import ExecResult, Executor
 from .plan import Node, explain, optimize
@@ -90,7 +97,11 @@ class SharkSession:
     def register_external(self, src: ExternalSource) -> None:
         self.catalog.register_external(src)
 
-    # -- query execution --------------------------------------------------------
+    # -- query construction / execution -----------------------------------------
+
+    def table(self, name: str) -> SharkFrame:
+        """Start a fluent SharkFrame query over a catalog table."""
+        return SharkFrame.table(self, name)
 
     def plan(self, sql: str) -> Node:
         stmt = parse(sql)
@@ -102,44 +113,56 @@ class SharkSession:
         node = optimize(self.plan(sql), self.catalog)
         return explain(node)
 
-    def sql(self, sql: str) -> ExecResult:
-        if self.server is not None:
-            return self.server.submit(sql, client=self.client_id).result()
+    def sql(self, sql: str, lazy: bool = False) -> SharkFrame:
+        """Parse + bind `sql` into a SharkFrame — text queries and fluent
+        queries are the same object from bind onward.  By default the frame
+        is executed eagerly (the historical contract: `sql()` returned a
+        finished result); pass `lazy=True` to defer execution, e.g. to
+        extend the plan or hand it to ML via `.to_rdd()`."""
         stmt = parse(sql)
         if isinstance(stmt, CreateStmt):
-            return self._create_table_as(stmt)
+            if self.server is not None:
+                result = self.server.submit(
+                    sql, client=self.client_id).result()
+            else:
+                result = self._create_table_as(stmt)
+            node = Binder(self.catalog).bind(stmt.select)
+            return SharkFrame(self, node, result=result)
         node = Binder(self.catalog).bind(stmt)
-        return self.executor.execute(node)
+        frame = SharkFrame(self, node)
+        if not lazy:
+            frame.collect()
+        return frame
 
-    def submit(self, sql: str, block: bool = True,
+    def submit(self, query: Union[str, Node], block: bool = True,
                timeout: Optional[float] = None):
-        """Async submission — attached sessions only; returns a QueryHandle."""
+        """Async submission of SQL text or a bound logical plan — attached
+        sessions only; returns a QueryHandle."""
         if self.server is None:
             raise RuntimeError(
                 "submit() needs a server-attached session; use sql()")
-        return self.server.submit(sql, client=self.client_id, block=block,
+        return self.server.submit(query, client=self.client_id, block=block,
                                   timeout=timeout)
 
     def sql_np(self, sql: str) -> Dict[str, np.ndarray]:
         return self.sql(sql).to_numpy()
 
     def sql2rdd(self, sql: str) -> Tuple[RDD, List[str]]:
-        """Return the query result as a TableRDD (paper §4.1): the final
-        narrow stage is left lazy so downstream ML extends the same lineage
-        graph; upstream shuffle stages have already been PDE-planned.
+        """Deprecated shim over `sess.sql(sql, lazy=True).to_rdd()`.
 
-        The materialized map outputs backing the returned RDD stay in the
-        block store until they are released: a private session frees them on
-        shutdown with its context; a server-attached session holds them in
-        the SHARED store, so call `shutdown()` (or `release_shuffles()`)
-        when done with the RDD to avoid accumulating working memory."""
+        Returns the query plan as a lazy TableRDD plus its column names
+        (paper §4.1).  The frame path registers the RDD's shuffle map
+        outputs on this session's executor, so `release_shuffles()` /
+        `shutdown()` frees them — a server-attached session cannot silently
+        leak shared-store memory."""
+        warnings.warn(
+            "sql2rdd() is deprecated; use sess.sql(query, lazy=True)"
+            ".to_rdd() or a fluent sess.table(...) chain",
+            DeprecationWarning, stacklevel=2)
         stmt = parse(sql)
         assert isinstance(stmt, SelectStmt), "sql2rdd takes a SELECT"
-        node = Binder(self.catalog).bind(stmt)
-        from .plan import optimize as opt
-        node = opt(node, self.catalog)
-        compiled = self.executor._compile(node)
-        return compiled.rdd, compiled.names
+        frame = SharkFrame(self, Binder(self.catalog).bind(stmt))
+        return frame.to_rdd(), frame.columns
 
     # -- CTAS / caching ---------------------------------------------------------
 
@@ -181,9 +204,6 @@ def create_table_as(executor: Executor, catalog: Catalog, stmt: CreateStmt,
     sel = stmt.select
     node = Binder(catalog).bind(sel)
     result = executor.execute(node)
-    merged = PartitionBatch.concat(result.batches)
-    data = merged.decoded()
-    schema = _infer_schema(data, result.schema_names)
     num_parts = default_partitions
     distribute = sel.distribute_by
     if "copartition" in stmt.properties:
@@ -191,11 +211,24 @@ def create_table_as(executor: Executor, catalog: Catalog, stmt: CreateStmt,
         num_parts = other.num_partitions
     if distribute is None and "copartition" in stmt.properties:
         raise ValueError("copartition requires DISTRIBUTE BY")
-    table = from_arrays(stmt.name, schema, data, num_parts, distribute)
     # shark.cache => keep in the memory store (all our tables are
     # in-memory; uncached CTAS still registers but could be spilled)
-    catalog.register_table(table)
+    register_result_as_table(catalog, stmt.name, result, num_parts,
+                             distribute)
     return result
+
+
+def register_result_as_table(catalog: Catalog, name: str, result: ExecResult,
+                             num_partitions: int,
+                             distribute_by: Optional[str]) -> Table:
+    """Re-partition a query result into the columnar store and register it
+    (shared by CTAS and `SharkFrame.cache()`)."""
+    merged = PartitionBatch.concat(result.batches)
+    data = merged.decoded()
+    schema = _infer_schema(data, result.schema_names)
+    table = from_arrays(name, schema, data, num_partitions, distribute_by)
+    catalog.register_table(table)
+    return table
 
 
 def _infer_schema(data: Dict[str, np.ndarray], names: List[str]) -> Schema:

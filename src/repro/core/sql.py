@@ -5,7 +5,8 @@ logical plan with basic optimization (predicate pushdown), emit a physical
 plan of RDD transformations.  The dialect covers the paper's workloads:
 
   SELECT <exprs|aggregates> FROM t [AS a][, u [AS b] | JOIN u ON k]
-    [WHERE pred] [GROUP BY exprs] [ORDER BY col [DESC], ...] [LIMIT n]
+    [WHERE pred] [GROUP BY exprs] [HAVING pred]
+    [ORDER BY col [DESC], ...] [LIMIT n]
 
   CREATE TABLE name [TBLPROPERTIES ("shark.cache"="true"
     [, "copartition"="other"])] AS SELECT ... [DISTRIBUTE BY col]
@@ -21,7 +22,7 @@ import re
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .expr import (And, Between, BinOp, Cmp, Col, Expr, Func, InList, Lit,
-                   Not, Or, conjoin, split_conjuncts)
+                   Not, Or, conjoin, rewrite_expr, split_conjuncts)
 from .plan import (AggFunc, AggregateNode, AggSpec, FilterNode, JoinNode,
                    LimitNode, Node, ProjectNode, ScanNode, SortNode)
 
@@ -87,6 +88,7 @@ class SelectStmt:
     order_by: List[Tuple[str, bool]]
     limit: Optional[int]
     distribute_by: Optional[str]
+    having: Optional[Expr] = None
 
 
 @dataclasses.dataclass
@@ -209,6 +211,9 @@ class Parser:
             group_by.append(self.expr())
             while self.accept("op", ","):
                 group_by.append(self.expr())
+        having = None
+        if self.accept("keyword", "HAVING"):
+            having = self.expr()
         order_by: List[Tuple[str, bool]] = []
         if self.accept("keyword", "ORDER"):
             self.expect("keyword", "BY")
@@ -228,7 +233,7 @@ class Parser:
             self.expect("keyword", "BY")
             distribute_by = self.expect("name").value
         return SelectStmt(select, from_items, joins, where, group_by,
-                          order_by, limit, distribute_by)
+                          order_by, limit, distribute_by, having)
 
     def _table_ref(self) -> Tuple[str, str]:
         t = self.expect("name").value
@@ -476,8 +481,17 @@ class Binder:
         # aggregation?
         has_agg = any(isinstance(e, _AggExpr) or _contains_agg(e)
                       for _, e in stmt.select if not isinstance(e, str))
+        if stmt.having is not None and not (stmt.group_by or has_agg):
+            raise ValueError("HAVING requires GROUP BY or an aggregate "
+                             "in the SELECT list")
         if stmt.group_by or has_agg:
-            node = self._bind_aggregate(node, stmt, strip_quals)
+            items = [(alias, e if isinstance(e, str) else strip_quals(e))
+                     for alias, e in stmt.select]
+            group_exprs = [strip_quals(g) for g in stmt.group_by]
+            having = (strip_quals(stmt.having)
+                      if stmt.having is not None else None)
+            node = bind_aggregate(self.catalog, node, items, group_exprs,
+                                  having)
         else:
             exprs: List[Tuple[str, Expr]] = []
             star = any(isinstance(e, str) for _, e in stmt.select)
@@ -504,66 +518,6 @@ class Binder:
             node = SortNode(node, [(c, d) for c, d in stmt.order_by])
         if stmt.limit is not None:
             node = LimitNode(node, stmt.limit)
-        return node
-
-    def _bind_aggregate(self, child: Node, stmt: SelectStmt,
-                        strip_quals) -> Node:
-        group_exprs = [strip_quals(g) for g in stmt.group_by]
-        # pre-project: group expressions become named columns; agg args keep
-        # base columns.
-        pre: List[Tuple[str, Expr]] = []
-        group_names: List[str] = []
-        for i, g in enumerate(group_exprs):
-            if isinstance(g, Col):
-                group_names.append(g.name)
-                pre.append((g.name, g))
-            else:
-                gname = f"__g{i}"
-                group_names.append(gname)
-                pre.append((gname, g))
-        aggs: List[AggSpec] = []
-        select_out: List[Tuple[str, str]] = []  # (out name, source col)
-        agg_idx = 0
-        for alias, e in stmt.select:
-            if isinstance(e, str):
-                raise NotImplementedError("SELECT * with GROUP BY")
-            e = strip_quals(e)
-            if isinstance(e, _AggExpr):
-                name = alias or _auto_name(e)
-                func = (AggFunc.COUNT_DISTINCT
-                        if (e.func == AggFunc.COUNT and e.distinct) else e.func)
-                aggs.append(AggSpec(name, func, e.arg))
-                select_out.append((name, name))
-                agg_idx += 1
-                # agg args reference base columns: ensure they pass through
-                if e.arg is not None:
-                    for c in e.arg.columns():
-                        if all(p[0] != c for p in pre):
-                            pre.append((c, Col(c)))
-            else:
-                # must match a group expression
-                matched = None
-                for gname, g in zip(group_names, group_exprs):
-                    if repr(e) == repr(g) or (isinstance(e, Col)
-                                              and e.name == gname):
-                        matched = gname
-                        break
-                if matched is None:
-                    raise ValueError(f"non-aggregate select expr {e} not in "
-                                     f"GROUP BY")
-                select_out.append((alias or _auto_name(e), matched))
-        if not pre:
-            # COUNT(*)-style aggregates need at least one column to carry the
-            # row count through the pre-projection
-            first_col = child.schema(self.catalog).names[0]
-            pre = [(first_col, Col(first_col))]
-        node: Node = ProjectNode(child, pre)
-        node = AggregateNode(node, group_names, aggs)
-        # post-project for aliasing/ordering
-        out_exprs = [(name, Col(src)) for name, src in select_out]
-        if [n for n, _ in out_exprs] != group_names + [a.out_name for a in aggs] \
-                or any(n != s for n, s in select_out):
-            node = ProjectNode(node, out_exprs)
         return node
 
     def _equi_keys(self, on: Expr, alias_schema, left_aliases, right_alias):
@@ -601,6 +555,110 @@ class Binder:
         if s1 == "right" and s2 == "left":
             return n2, n1
         return None
+
+
+# ---------------------------------------------------------------------------
+# Aggregate binding — shared by the SQL binder and SharkFrame (core/frame.py)
+# ---------------------------------------------------------------------------
+
+
+def bind_aggregate(catalog, child: Node,
+                   select_items: Sequence[Tuple[Optional[str], object]],
+                   group_exprs: Sequence[Expr],
+                   having: Optional[Expr] = None) -> Node:
+    """Build pre-project -> Aggregate [-> HAVING filter] [-> post-project].
+
+    `select_items` is the resolved output list: (alias-or-None, Expr|_AggExpr)
+    pairs, qualifier-stripped.  Both query surfaces — the SQL binder and the
+    fluent SharkFrame API — funnel through this one function, so a frame-built
+    aggregation and its SQL-text twin produce byte-identical logical plans
+    (and therefore share one plan-fingerprint result-cache entry)."""
+    group_exprs = list(group_exprs)
+    # pre-project: group expressions become named columns; agg args keep
+    # base columns.
+    pre: List[Tuple[str, Expr]] = []
+    group_names: List[str] = []
+    for i, g in enumerate(group_exprs):
+        if isinstance(g, Col):
+            group_names.append(g.name)
+            pre.append((g.name, g))
+        else:
+            gname = f"__g{i}"
+            group_names.append(gname)
+            pre.append((gname, g))
+    aggs: List[AggSpec] = []
+    agg_out: Dict[Tuple, str] = {}           # (func, arg repr, distinct) -> out
+    select_out: List[Tuple[str, str]] = []   # (out name, source col)
+    for alias, e in select_items:
+        if isinstance(e, str):
+            raise NotImplementedError("SELECT * with GROUP BY")
+        if isinstance(e, _AggExpr):
+            name = alias or _auto_name(e)
+            func = (AggFunc.COUNT_DISTINCT
+                    if (e.func == AggFunc.COUNT and e.distinct) else e.func)
+            aggs.append(AggSpec(name, func, e.arg))
+            agg_out.setdefault((e.func, repr(e.arg), e.distinct), name)
+            select_out.append((name, name))
+            # agg args reference base columns: ensure they pass through
+            if e.arg is not None:
+                for c in e.arg.columns():
+                    if all(p[0] != c for p in pre):
+                        pre.append((c, Col(c)))
+        else:
+            # must match a group expression
+            matched = None
+            for gname, g in zip(group_names, group_exprs):
+                if repr(e) == repr(g) or (isinstance(e, Col)
+                                          and e.name == gname):
+                    matched = gname
+                    break
+            if matched is None:
+                raise ValueError(f"non-aggregate select expr {e} not in "
+                                 f"GROUP BY")
+            select_out.append((alias or _auto_name(e), matched))
+    if not pre:
+        # COUNT(*)-style aggregates need at least one column to carry the
+        # row count through the pre-projection
+        first_col = child.schema(catalog).names[0]
+        pre = [(first_col, Col(first_col))]
+    node: Node = ProjectNode(child, pre)
+    node = AggregateNode(node, group_names, aggs)
+    if having is not None:
+        visible_to_src = {name: src for name, src in select_out}
+        available = set(group_names) | {a.out_name for a in aggs}
+        node = FilterNode(node, _resolve_having(having, agg_out,
+                                                visible_to_src, available))
+    # post-project for aliasing/ordering
+    out_exprs = [(name, Col(src)) for name, src in select_out]
+    if [n for n, _ in out_exprs] != group_names + [a.out_name for a in aggs] \
+            or any(n != s for n, s in select_out):
+        node = ProjectNode(node, out_exprs)
+    return node
+
+
+def _resolve_having(e: Expr, agg_out: Dict[Tuple, str],
+                    visible_to_src: Dict[str, str], available: set) -> Expr:
+    """Rewrite a HAVING predicate against the aggregate's output: aggregate
+    calls resolve to their SELECT alias, output aliases to internal names."""
+
+    def resolve(n: Expr) -> Optional[Expr]:
+        if isinstance(n, _AggExpr):
+            name = agg_out.get((n.func, repr(n.arg), n.distinct))
+            if name is None:
+                raise ValueError(f"HAVING aggregate {n!r} must also appear "
+                                 f"in the SELECT list")
+            return Col(name)
+        if isinstance(n, Col):
+            name = visible_to_src.get(n.name, n.name)
+            if name not in available:
+                raise ValueError(
+                    f"HAVING references {n.name!r}, which is not a GROUP BY "
+                    f"column or aggregate output; available: "
+                    f"{', '.join(sorted(available))}")
+            return Col(name)
+        return None
+
+    return rewrite_expr(e, resolve)
 
 
 def _contains_agg(e) -> bool:

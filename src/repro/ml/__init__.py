@@ -1,17 +1,20 @@
 """Machine learning as a first-class citizen (paper §4).
 
-SQL query results become TableRDDs; feature extraction and iterative
-algorithms run over the same partitions, on the same workers, under the same
-lineage graph — no data export, end-to-end fault tolerance.
+SQL query results become TableRDDs — or stay lazy as SharkFrames — and
+feature extraction and iterative algorithms run over the same partitions, on
+the same workers, under the same lineage graph: no data export, end-to-end
+fault tolerance.  Every estimator's `fit()` accepts a SharkFrame directly
+(`clf.fit(frame, feature_cols=[...], label_col="y")`), so the paper's
+Listing-1 pipeline is one fluent chain.
 
 The numeric kernels (gradients, distances, centroid updates) are jit-compiled
 JAX: on TPU they hit the MXU; on this CPU container they validate semantics.
 """
 
-from .featurize import table_rdd_to_features
+from .featurize import as_features_rdd, table_rdd_to_features
 from .logreg import LogisticRegression
 from .linreg import LinearRegression
 from .kmeans import KMeans
 
-__all__ = ["table_rdd_to_features", "LogisticRegression", "LinearRegression",
-           "KMeans"]
+__all__ = ["as_features_rdd", "table_rdd_to_features", "LogisticRegression",
+           "LinearRegression", "KMeans"]

@@ -1,8 +1,11 @@
-"""Feature extraction over TableRDDs (paper §4.1, Listing 1's mapRows).
+"""Feature extraction over TableRDDs and SharkFrames (paper §4.1, Listing 1's
+mapRows).
 
-`table_rdd_to_features` turns a SQL result RDD into an RDD of dense feature
-matrices (one jnp array per partition), applying an optional user mapRows
-function — the paper's ML pipeline step (2).
+`table_rdd_to_features` turns a SQL result RDD — or a lazy `SharkFrame`
+directly — into an RDD of dense feature matrices (one jnp array per
+partition), applying an optional user mapRows function — the paper's ML
+pipeline step (2).  `as_features_rdd` is the dispatch helper the estimators
+(`LogisticRegression.fit(frame, ...)` etc.) use to accept either surface.
 """
 
 from __future__ import annotations
@@ -13,17 +16,23 @@ import numpy as np
 
 from ..core.batch import PartitionBatch
 from ..core.expr import ColumnVal
+from ..core.frame import SharkFrame
 from ..core.rdd import RDD
 
 
-def table_rdd_to_features(rdd: RDD, feature_cols: Sequence[str],
+def table_rdd_to_features(rdd, feature_cols: Sequence[str],
                           label_col: Optional[str] = None,
                           map_rows: Optional[Callable[[np.ndarray], np.ndarray]] = None
                           ) -> RDD:
     """Each partition becomes a batch with a dense float32 'features' matrix
     (rows x len(feature_cols)) and optional 'label' vector.  Runs as a narrow
-    map, extending the SQL lineage graph."""
+    map, extending the SQL lineage graph.  `rdd` may be a TableRDD or a lazy
+    SharkFrame (compiled via `.to_rdd()`, same lineage graph)."""
 
+    if isinstance(rdd, SharkFrame):
+        # the frame validates eagerly (FrameBindError naming the column)
+        # instead of a raw KeyError inside a partition task
+        return rdd.to_features(feature_cols, label_col, map_rows)
     cols = list(feature_cols)
 
     def extract(split: int, batch: PartitionBatch) -> PartitionBatch:
@@ -43,3 +52,24 @@ def table_rdd_to_features(rdd: RDD, feature_cols: Sequence[str],
         return PartitionBatch(out)
 
     return rdd.map_partitions(extract)
+
+
+def as_features_rdd(data, feature_cols: Optional[Sequence[str]] = None,
+                    label_col: Optional[str] = None,
+                    map_rows: Optional[Callable[[np.ndarray], np.ndarray]] = None
+                    ) -> RDD:
+    """Normalize an estimator's input to a features RDD.
+
+    * SharkFrame -> featurized via `table_rdd_to_features` (feature_cols
+      defaults to every column except `label_col`);
+    * RDD with `feature_cols` given -> featurized likewise;
+    * RDD without `feature_cols` -> assumed already featurized
+      (partitions carry 'features' / 'label'), returned as-is.
+    """
+    if isinstance(data, SharkFrame):
+        cols = (list(feature_cols) if feature_cols is not None
+                else [c for c in data.columns if c != label_col])
+        return table_rdd_to_features(data, cols, label_col, map_rows)
+    if feature_cols is not None:
+        return table_rdd_to_features(data, feature_cols, label_col, map_rows)
+    return data

@@ -46,7 +46,15 @@ class KMeans:
         self.centroids = rng.normal(size=(k, dims)).astype(np.float32)
         self.objective_history: List[float] = []
 
-    def fit(self, features_rdd: RDD) -> "KMeans":
+    def fit(self, data, feature_cols=None, label_col=None,
+            map_rows=None) -> "KMeans":
+        """`data`: a features RDD, or a SharkFrame / TableRDD plus
+        `feature_cols` (featurized on the same lineage graph).  Clustering
+        ignores labels, but `label_col` still excludes that column from the
+        default feature set when `feature_cols` is omitted."""
+        from .featurize import as_features_rdd
+        features_rdd = as_features_rdd(data, feature_cols, label_col,
+                                       map_rows)
         features_rdd.cache()
         sched = features_rdd.ctx.scheduler
         for _ in range(self.iterations):

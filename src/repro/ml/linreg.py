@@ -32,7 +32,13 @@ class LinearRegression:
         self.iterations = iterations
         self.w = np.zeros(dims, np.float32)
 
-    def fit(self, features_rdd: RDD) -> "LinearRegression":
+    def fit(self, data, feature_cols=None, label_col=None,
+            map_rows=None) -> "LinearRegression":
+        """`data`: a features RDD, or a SharkFrame / TableRDD plus
+        `feature_cols`/`label_col` (featurized on the same lineage graph)."""
+        from .featurize import as_features_rdd
+        features_rdd = as_features_rdd(data, feature_cols, label_col,
+                                       map_rows)
         features_rdd.cache()
         sched = features_rdd.ctx.scheduler
         for _ in range(self.iterations):

@@ -45,8 +45,16 @@ class LogisticRegression:
         self.w = rng.normal(scale=0.01, size=dims).astype(np.float32)
         self.loss_history: List[float] = []
 
-    def fit(self, features_rdd: RDD) -> "LogisticRegression":
-        """`features_rdd` partitions carry 'features' (n x d) and 'label'."""
+    def fit(self, data, feature_cols=None, label_col=None,
+            map_rows=None) -> "LogisticRegression":
+        """Train over feature partitions carrying 'features' (n x d) and
+        'label'.  `data` is a features RDD, or a SharkFrame / TableRDD with
+        `feature_cols`/`label_col` naming the columns to featurize — the
+        paper's Listing-1 pipeline as one fluent chain on one lineage
+        graph."""
+        from .featurize import as_features_rdd
+        features_rdd = as_features_rdd(data, feature_cols, label_col,
+                                       map_rows)
         features_rdd.cache()
         sched = features_rdd.ctx.scheduler
         n_total = None
@@ -68,7 +76,9 @@ class LogisticRegression:
             self.w = self.w - self.lr * (g / max(n_total, 1)).astype(np.float32)
         return self
 
-    def loss(self, features_rdd: RDD) -> float:
+    def loss(self, data, feature_cols=None, label_col=None) -> float:
+        from .featurize import as_features_rdd
+        features_rdd = as_features_rdd(data, feature_cols, label_col)
         sched = features_rdd.ctx.scheduler
         w = jnp.asarray(self.w)
 

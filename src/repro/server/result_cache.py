@@ -8,7 +8,11 @@ the catalog versions of every base table the plan reads:
     fingerprint = sha1(explain(optimized_plan) | table@version, ...)
 
 Two queries that bind+optimize to the same plan over the same table
-versions share one entry, regardless of SQL text differences.  Catalog
+versions share one entry, regardless of SQL text differences — and
+regardless of *surface*: a fluent SharkFrame query submits its bound plan
+object and lands on the same fingerprint as its SQL-text twin, because
+both surfaces emit identical logical plans (core/frame.py, DESIGN.md §7)
+and the fingerprint hashes the optimized plan, not query text.  Catalog
 epochs make invalidation exact: any CREATE TABLE / load / drop bumps the
 mutated table's version, which (a) changes the fingerprint of future
 queries, and (b) fires a subscription that eagerly drops entries depending

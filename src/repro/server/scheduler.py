@@ -32,12 +32,20 @@ class AdmissionError(RuntimeError):
 
 
 class QueryHandle:
-    """Async handle for a submitted query (a tiny Future with timings)."""
+    """Async handle for a submitted query (a tiny Future with timings).
+
+    A query is either SQL text (`sql`) or a bound logical plan (`plan`,
+    a `core.plan.Node` — what `SharkFrame.collect()` submits).  Exactly one
+    of the two is set; both run through the same admission control, fair
+    scheduling, and plan-fingerprint result cache."""
 
     QUEUED, RUNNING, DONE, FAILED = "queued", "running", "done", "failed"
 
-    def __init__(self, sql: str, client: str):
+    def __init__(self, sql: Optional[str], client: str, plan=None):
+        assert (sql is None) != (plan is None), \
+            "QueryHandle takes SQL text or a logical plan, not both"
         self.sql = sql
+        self.plan = plan
         self.client = client
         self.status = self.QUEUED
         self.cached = False          # served from the result cache
@@ -48,12 +56,16 @@ class QueryHandle:
         self._result = None
         self._error: Optional[BaseException] = None
 
+    @property
+    def describe(self) -> str:
+        return self.sql if self.sql is not None else f"<plan {self.plan!r}>"
+
     def done(self) -> bool:
         return self._event.is_set()
 
     def result(self, timeout: Optional[float] = None):
         if not self._event.wait(timeout):
-            raise TimeoutError(f"query not finished: {self.sql!r}")
+            raise TimeoutError(f"query not finished: {self.describe!r}")
         if self._error is not None:
             raise self._error
         return self._result

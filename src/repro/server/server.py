@@ -17,6 +17,11 @@ Execution path per query (worker-pool thread):
            memory budget; evicted partitions recompute from lineage)
         -> release the query's shuffle map outputs -> result-cache fill.
 
+`submit()` also accepts a *bound logical plan* (what `SharkFrame.collect()`
+sends): the plan path joins the pipeline at the optimize step, so frame
+queries and SQL text get identical admission control, fair scheduling, and
+result-cache behavior — one plan fingerprint, one cache entry.
+
 Each query gets a fresh Executor (per-query metrics, no cross-query state)
 but all executors share the context, catalog, scan cache, and therefore
 the block store — that sharing is the whole point of the server tier.
@@ -24,8 +29,9 @@ the block store — that sharing is the whole point of the server tier.
 
 from __future__ import annotations
 
+import copy
 import threading
-from typing import Dict, Optional
+from typing import Dict, Optional, Union
 
 import numpy as np
 
@@ -35,7 +41,7 @@ from ..core.pde import PDEConfig
 from ..core.physical import ExecResult, Executor, ScanCache
 from ..core.runtime import SharkContext
 from ..core.sql import Binder, CreateStmt, parse
-from ..core.plan import optimize
+from ..core.plan import Node, optimize
 from ..core.types import Schema
 from .memory import MemoryManager
 from .result_cache import ResultCache, plan_fingerprint
@@ -119,12 +125,30 @@ class SharkServer:
 
     # -- query submission -----------------------------------------------------
 
-    def submit(self, sql: str, client: str = "default", block: bool = True,
+    def submit(self, query: Union[str, Node], client: str = "default",
+               block: bool = True,
                timeout: Optional[float] = None) -> QueryHandle:
-        """Enqueue `sql` for async execution; blocks (or raises
-        AdmissionError) when the admission queue is full."""
-        return self.scheduler.submit(QueryHandle(sql, client),
-                                     block=block, timeout=timeout)
+        """Enqueue a query for async execution; blocks (or raises
+        AdmissionError) when the admission queue is full.
+
+        `query` is SQL text, a SharkFrame, or a *bound logical plan* (a
+        `core.plan.Node`, what `SharkFrame.collect()` submits).  All forms
+        share admission control, fair scheduling, and — because the result
+        cache is keyed by the fingerprint of the optimized plan — one cache
+        entry: a frame query and its SQL-text twin hit each other's
+        results."""
+        from ..core.frame import SharkFrame
+        if isinstance(query, SharkFrame):
+            handle = QueryHandle(None, client, plan=query.logical_plan())
+        elif isinstance(query, Node):
+            handle = QueryHandle(None, client, plan=query)
+        elif isinstance(query, str):
+            handle = QueryHandle(query, client)
+        else:
+            raise TypeError(
+                f"submit() takes SQL text, a SharkFrame, or a logical plan "
+                f"Node; got {type(query).__name__}")
+        return self.scheduler.submit(handle, block=block, timeout=timeout)
 
     def sql(self, sql: str, client: str = "default") -> ExecResult:
         return self.submit(sql, client=client).result()
@@ -139,6 +163,12 @@ class SharkServer:
                         scan_cache=self.scan_cache, **self._exec_kw)
 
     def _run_query(self, handle: QueryHandle):
+        if handle.plan is not None:
+            # frame submission: the plan object is owned by the (immutable,
+            # possibly shared) frame — optimize a private copy
+            node = optimize(copy.deepcopy(handle.plan), self.catalog)
+            return self._execute_plan(node)
+
         stmt = parse(handle.sql)
         if isinstance(stmt, CreateStmt):
             from ..core.session import create_table_as
@@ -151,6 +181,12 @@ class SharkServer:
             return result, False
 
         node = optimize(Binder(self.catalog).bind(stmt), self.catalog)
+        return self._execute_plan(node)
+
+    def _execute_plan(self, node: Node):
+        """Result-cache probe -> execute -> fill, for an optimized plan.
+        Shared by the SQL-text and frame (plan-object) submission paths, so
+        the two surfaces are indistinguishable from bind onward."""
         fingerprint = deps = None
         if self.result_cache is not None:
             fingerprint, deps = plan_fingerprint(node, self.catalog)

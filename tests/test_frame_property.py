@@ -1,0 +1,82 @@
+"""Property test (hypothesis): any generated filter+group+agg query built
+through the fluent SharkFrame API and through SQL text optimizes to an
+identical plan — same `explain()`, same `plan_fingerprint` — so the two
+surfaces share result-cache entries by construction (DESIGN.md §7)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DType, Schema, SharkSession, avg, col, count,
+                        count_distinct, max_, min_, sum_)
+from repro.core.plan import optimize
+from repro.server.result_cache import plan_fingerprint
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture(scope="module")
+def sess():
+    rng = np.random.default_rng(0)
+    s = SharkSession(num_workers=2, max_threads=2, default_partitions=4,
+                     default_shuffle_buckets=4)
+    s.create_table("t", Schema.of(a=DType.INT64, b=DType.INT64,
+                                  v=DType.FLOAT64),
+                   {"a": rng.integers(0, 20, 500).astype(np.int64),
+                    "b": rng.integers(0, 50, 500).astype(np.int64),
+                    "v": rng.uniform(0, 1, 500)})
+    yield s
+    s.shutdown()
+
+
+AGGS = {"SUM": sum_, "AVG": avg, "MIN": min_, "MAX": max_}
+
+CMP_OPS = {">": lambda c, v: c > v, "<": lambda c, v: c < v,
+           ">=": lambda c, v: c >= v, "<=": lambda c, v: c <= v,
+           "=": lambda c, v: c == v, "!=": lambda c, v: c != v}
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    pred_col=st.sampled_from(["a", "b"]),
+    op=st.sampled_from(sorted(CMP_OPS)),
+    threshold=st.integers(min_value=0, max_value=50),
+    group_col=st.sampled_from(["a", "b"]),
+    agg_name=st.sampled_from(sorted(AGGS)),
+    agg_col=st.sampled_from(["v", "b"]),
+    distinct_count=st.booleans(),
+    limit=st.one_of(st.none(), st.integers(min_value=1, max_value=10)),
+)
+def test_property_frame_sql_same_plan(sess, pred_col, op, threshold,
+                                      group_col, agg_name, agg_col,
+                                      distinct_count, limit):
+    sql_text = (f"SELECT {group_col}, {agg_name}({agg_col}) AS x, "
+                + (f"COUNT(DISTINCT {pred_col}) AS u, " if distinct_count
+                   else "")
+                + f"COUNT(*) AS c FROM t WHERE {pred_col} {op} {threshold} "
+                f"GROUP BY {group_col}")
+    if limit is not None:
+        sql_text += f" ORDER BY c DESC LIMIT {limit}"
+
+    aggs = [AGGS[agg_name](col(agg_col)).alias("x")]
+    if distinct_count:
+        aggs.append(count_distinct(col(pred_col)).alias("u"))
+    aggs.append(count().alias("c"))
+    frame = (sess.table("t")
+             .filter(CMP_OPS[op](col(pred_col), threshold))
+             .group_by(col(group_col))
+             .agg(*aggs))
+    if limit is not None:
+        frame = frame.order_by("c", desc=True).limit(limit)
+
+    assert frame.explain() == sess.explain(sql_text), (
+        f"plans diverge for {sql_text!r}:\n--- frame ---\n{frame.explain()}"
+        f"\n--- sql ---\n{sess.explain(sql_text)}")
+    sql_node = optimize(sess.plan(sql_text), sess.catalog)
+    fp_sql, deps_sql = plan_fingerprint(sql_node, sess.catalog)
+    fp_frame, deps_frame = plan_fingerprint(frame.optimized_plan(),
+                                            sess.catalog)
+    assert fp_sql == fp_frame and deps_sql == deps_frame
