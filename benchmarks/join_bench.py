@@ -1,0 +1,125 @@
+"""Multi-way star-join benchmark: PDE per-boundary re-optimization on vs off
+(paper §3.1, §6.3; ISSUE 3 tentpole).
+
+A 4-table star join (fact + three dims) runs under two key distributions:
+
+  * uniform — every fact key uniformly drawn; the win comes from PDE
+    broadcasting each small dim instead of pre-shuffling the fact side at
+    every boundary (the §6.3.2 map-join conversion, compounded N-way);
+  * skewed  — half the fact rows carry one heavy-hitter key; PDE-off hashes
+    that key's whole bucket onto a single reducer while PDE-on splits it
+    across reducers (skew-aware splitting, §3.1.2) on top of the broadcast
+    conversions.
+
+PDE-off forces compile-time shuffle joins with one reducer per bucket —
+what a static optimizer without run-time statistics must conservatively do.
+Emits BENCH_joins.json; scripts/ci.sh runs the --quick smoke.
+
+    PYTHONPATH=src python -m benchmarks.join_bench \
+        [--rows 400000] [--json-out BENCH_joins.json] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import DType, Schema, SharkSession
+
+from .common import SHARK_TASK_OVERHEAD_S, report, shark_session, timeit
+
+QUERY = ("SELECT sval, COUNT(*) AS c, SUM(rev) AS total FROM fact "
+         "JOIN small_d ON fact.sk = small_d.skey "
+         "JOIN mid_d ON fact.mk = mid_d.mkey "
+         "JOIN big_d ON fact.bk = big_d.bkey "
+         "GROUP BY sval")
+
+
+def load_star(sess, rows: int, skewed: bool) -> None:
+    rng = np.random.default_rng(5)
+    bk = rng.integers(0, 2000, rows)
+    if skewed:
+        bk[: rows // 2] = 42          # heavy hitter on the widest join
+    sess.create_table("fact", Schema.of(
+        sk=DType.INT64, mk=DType.INT64, bk=DType.INT64, rev=DType.FLOAT64),
+        {"sk": rng.integers(0, 16, rows).astype(np.int64),
+         "mk": rng.integers(0, 400, rows).astype(np.int64),
+         "bk": bk.astype(np.int64),
+         "rev": rng.uniform(0, 10, rows)})
+    sess.create_table("small_d", Schema.of(skey=DType.INT64, sval=DType.INT64),
+                      {"skey": np.arange(16, dtype=np.int64),
+                       "sval": (np.arange(16, dtype=np.int64) % 4)})
+    sess.create_table("mid_d", Schema.of(mkey=DType.INT64, mval=DType.INT64),
+                      {"mkey": np.arange(400, dtype=np.int64),
+                       "mval": (np.arange(400, dtype=np.int64) % 11)})
+    sess.create_table("big_d", Schema.of(bkey=DType.INT64, bval=DType.INT64),
+                      {"bkey": np.arange(2000, dtype=np.int64),
+                       "bval": (np.arange(2000, dtype=np.int64) % 13)})
+
+
+def run_one(rows: int, skewed: bool, iters: int):
+    label = "skewed" if skewed else "uniform"
+
+    kw = {}
+    if skewed:
+        # scale the PDE thresholds to this host-sized "cluster" (as
+        # common.shark_session does for the reducer target) so the widest
+        # boundary crosses the broadcast threshold and exercises the
+        # shuffle + skew-splitting path; the narrow dims still map-join
+        from repro.core.pde import PDEConfig
+        kw["pde_config"] = PDEConfig(broadcast_threshold_bytes=8 << 10,
+                                     target_reduce_bytes=64 << 10,
+                                     skew_factor=2.0)
+    on = shark_session(**kw)
+    load_star(on, rows, skewed)
+    t_on = timeit(lambda: on.sql_np(QUERY), warmup=1, iters=iters)
+    boundaries = [b.describe() for b in on.metrics().join_boundaries]
+    skew_shards = sum(b.skew_shards for b in on.metrics().join_boundaries)
+    on.shutdown()
+
+    # PDE-off control: identical substrate (columnar store, pruning, task
+    # overhead) — ONLY the run-time re-optimization is disabled, so the
+    # delta is attributable to PDE's boundary decisions
+    off = SharkSession(enable_pde=False, enable_map_pruning=True,
+                       num_workers=8, max_threads=8, default_partitions=16,
+                       default_shuffle_buckets=32,
+                       task_launch_overhead_s=SHARK_TASK_OVERHEAD_S)
+    load_star(off, rows, skewed)
+    t_off = timeit(lambda: off.sql_np(QUERY), warmup=1, iters=iters)
+    off.shutdown()
+
+    speedup = t_off / t_on
+    report(f"join_{label}_pde_off", t_off, "")
+    report(f"join_{label}_pde_on", t_on,
+           f"speedup={speedup:.2f}x skew_shards={skew_shards}")
+    return {"pde_on_s": t_on, "pde_off_s": t_off, "speedup": speedup,
+            "skew_shards": skew_shards, "boundaries": boundaries}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=400_000)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="small data / fewer iters for CI smoke")
+    args = ap.parse_args(argv)
+    # quick mode still needs enough rows that the PDE-on/off delta clears
+    # scheduler noise on a loaded CI host
+    rows = 150_000 if args.quick else args.rows
+    iters = 2 if args.quick else args.iters
+
+    out = {"rows": rows,
+           "uniform": run_one(rows, skewed=False, iters=iters),
+           "skewed": run_one(rows, skewed=True, iters=iters)}
+    assert out["skewed"]["speedup"] > 1.0, \
+        f"PDE-on must beat PDE-off on the skewed star join: {out['skewed']}"
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,8 @@ import time
 import traceback
 
 SUITES = ["loading", "kernels_bench", "pavlo", "tpch_micro", "join_pde",
-          "fault_tolerance", "warehouse", "ml_bench", "task_overhead",
-          "concurrent_bench", "frame_overhead"]
+          "join_bench", "fault_tolerance", "warehouse", "ml_bench",
+          "task_overhead", "concurrent_bench", "frame_overhead"]
 
 
 def main() -> None:

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # CI entry point: fast deterministic tier-1 tests (includes the SharkFrame
-# API suite), a 2-client smoke of the concurrent server benchmark (emits
-# BENCH_concurrent.json), and the frame-vs-SQL plan-build micro-benchmark
-# (emits BENCH_frame_api.json) so API-layer regressions are visible.
+# API suite and the ~200-query differential oracle), a 2-client smoke of the
+# concurrent server benchmark (emits BENCH_concurrent.json), the frame-vs-SQL
+# plan-build micro-benchmark (emits BENCH_frame_api.json), and the multi-way
+# star-join PDE-on/off benchmark (emits BENCH_joins.json; asserts PDE-on
+# beats PDE-off on the skewed star join).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,3 +24,7 @@ echo "wrote BENCH_concurrent.json"
 echo "== frame-vs-SQL plan-build overhead =="
 python -m benchmarks.frame_overhead --quick --json-out BENCH_frame_api.json
 echo "wrote BENCH_frame_api.json"
+
+echo "== multi-way star join: PDE on/off, uniform + skewed keys =="
+python -m benchmarks.join_bench --quick --json-out BENCH_joins.json
+echo "wrote BENCH_joins.json"

@@ -149,6 +149,13 @@ class SharkFrame:
 
     def join(self, other: Union["SharkFrame", str], on,
              how: str = "inner") -> "SharkFrame":
+        """Equi-join with another frame (or table name).  Chained
+        `.join().join()` calls build the same left-deep JoinNode trees the
+        SQL binder emits for `FROM a JOIN b ON ... JOIN c ON ...`, so an
+        N-way frame query and its SQL twin optimize — including the
+        cost-based join-ordering pass — to byte-identical plans: one
+        `plan_fingerprint`, one result-cache entry, and the same PDE
+        re-optimization points at every join boundary."""
         if isinstance(other, str):
             other = SharkFrame.table(self._session, other)
         if other._session.catalog is not self._session.catalog:

@@ -108,6 +108,109 @@ def decide_parallelism(stats: StageStats, num_buckets: int,
         f"{len(skewed)} skewed buckets bin-packed")
 
 
+# ---------------------------------------------------------------------------
+# Skew-aware shuffle-join splitting (§3.1.2, "data skew" paragraph).
+#
+# Bin-packing equalizes reducer loads only down to the granularity of one
+# hash bucket; a heavy-hitter join key puts its whole bucket on one reducer
+# no matter how buckets are grouped.  The runtime fix: *split* a skewed
+# bucket's probe-side rows across several reducers and replicate the other
+# (build) side's bucket to each — every probe row still meets every matching
+# build row exactly once, so the join is unchanged but the hot key's work is
+# parallelized.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SkewShard:
+    """One reduce split handling 1/num_shards of a skewed bucket: the
+    `shard_side` input's bucket is partitioned across shards at MAP-OUTPUT
+    granularity (shard s reads map tasks s, s+num_shards, ... — each map
+    output is read exactly once across shards, so splitting adds no fetch
+    amplification on the big side); the other side's bucket is replicated
+    to every shard (broadcast-within-bucket)."""
+    bucket: int
+    shard: int
+    num_shards: int
+    shard_side: str  # "left" | "right": the probe side being partitioned
+
+
+@dataclasses.dataclass
+class SkewJoinDecision:
+    """Reduce-side plan of one shuffle-join boundary: plain bin-packed
+    bucket groups plus SkewShard splits for heavy-hitter buckets."""
+    splits: List[object]            # List[int] group | SkewShard
+    skewed_buckets: List[int]
+    num_reducers: int
+    hot_keys: List[object]          # merged heavy-hitter sketch (top keys)
+    reason: str
+
+
+def _skew_side_maps(lsz, rsz, b: int, how: str,
+                    left_maps: Optional[int],
+                    right_maps: Optional[int]) -> int:
+    """Map-task count of the side that would be sharded for bucket `b` —
+    the upper bound on how many ways the bucket can split."""
+    if how == "inner":
+        side_maps = left_maps if lsz[b] >= rsz[b] else right_maps
+    else:
+        side_maps = left_maps
+    return side_maps if side_maps is not None else 1 << 30
+
+
+def decide_skew_join(left_stats: StageStats, right_stats: StageStats,
+                     num_buckets: int, how: str = "inner",
+                     cfg: PDEConfig = PDEConfig(),
+                     left_maps: Optional[int] = None,
+                     right_maps: Optional[int] = None) -> SkewJoinDecision:
+    """§3.1.2 applied to joins: bin-pack the well-behaved buckets, split the
+    skewed ones.  A bucket is skewed when its combined materialized size
+    exceeds `skew_factor`× the mean AND the reducer byte target (splitting
+    tiny buckets only adds task overhead).  Shards partition the probe side
+    at map-output granularity, so a bucket splits at most as many ways as
+    its probe side has map tasks.  For outer joins only the preserved
+    (left) side may be strided — striding the NULL-padding side would
+    duplicate unmatched left rows per shard."""
+    lsz = left_stats.output_bytes_per_bucket(num_buckets)
+    rsz = right_stats.output_bytes_per_bucket(num_buckets)
+    combined = lsz + rsz
+    mean = float(combined.mean()) if num_buckets else 0.0
+    skewed = [b for b in range(num_buckets)
+              if mean > 0 and combined[b] > cfg.skew_factor * mean
+              and combined[b] > cfg.target_reduce_bytes
+              and _skew_side_maps(lsz, rsz, b, how, left_maps,
+                                  right_maps) >= 2]
+    skew_set = set(skewed)
+    normal = [b for b in range(num_buckets) if b not in skew_set]
+
+    splits: List[object] = []
+    if normal:
+        sizes = combined[normal]
+        n = choose_num_reducers(sizes, cfg.target_reduce_bytes,
+                                cfg.min_reducers,
+                                min(cfg.max_reducers, len(normal)))
+        groups = greedy_bin_pack(sizes.tolist(), n)
+        splits.extend([[normal[i] for i in g] for g in groups if g])
+
+    for b in skewed:
+        if how == "inner":
+            side = "left" if lsz[b] >= rsz[b] else "right"
+        else:
+            side = "left"
+        cap = _skew_side_maps(lsz, rsz, b, how, left_maps, right_maps)
+        num_shards = max(2, int(np.ceil(combined[b]
+                                        / cfg.target_reduce_bytes)))
+        num_shards = min(num_shards, cfg.max_reducers, cap)
+        splits.extend(SkewShard(b, s, num_shards, side)
+                      for s in range(num_shards))
+
+    hot = list(left_stats.heavy_hitters(4)) + list(right_stats.heavy_hitters(4))
+    reason = (f"{combined.sum():.0f}B over {num_buckets} buckets -> "
+              f"{len(splits)} reducers; {len(skewed)} skewed bucket(s) "
+              f"split" + (f" (hot keys {hot[:4]})" if skewed and hot else ""))
+    return SkewJoinDecision(splits, skewed, len(splits), hot, reason)
+
+
 def likely_small_side(left_hint_bytes: Optional[float],
                       right_hint_bytes: Optional[float],
                       left_filtered: bool, right_filtered: bool) -> Optional[str]:

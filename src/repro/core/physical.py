@@ -31,8 +31,8 @@ from .catalog import Catalog
 from .columnar import Table
 from .expr import ColumnVal, Expr, evaluate
 from .joins import broadcast_join, join_local
-from .pde import (JoinChoice, PDEConfig, decide_join, decide_parallelism,
-                  likely_small_side)
+from .pde import (JoinChoice, PDEConfig, SkewShard, decide_join,
+                  decide_parallelism, decide_skew_join, likely_small_side)
 from .plan import (AggFunc, AggregateNode, AggSpec, FilterNode, JoinNode,
                    JoinStrategy, LimitNode, Node, ProjectNode, ScanNode,
                    SortNode, optimize, required_columns)
@@ -59,38 +59,96 @@ class ExecResult:
 
 
 @dataclasses.dataclass
+class JoinBoundaryDecision:
+    """What PDE actually chose at ONE join shuffle boundary — recorded in
+    execution order so tests (and explain tooling) can assert the runtime
+    re-planning: strategy per boundary, observed sizes, reducer count, and
+    any skew splits."""
+    boundary: int                   # 0-based, in execution order
+    strategy: str                   # broadcast | shuffle | copartition | empty
+    build_side: Optional[str]       # broadcast: which input was broadcast
+    # bytes per side: observed map-output sizes where the strategy
+    # materialized them (broadcast small side, shuffle both sides);
+    # catalog/hint estimates otherwise (copartition zips without
+    # materializing anything, so there is nothing observed to report)
+    left_bytes: float
+    right_bytes: float
+    num_reducers: int
+    skewed_buckets: List[int]
+    skew_shards: int                # total SkewShard reduce splits
+    hot_keys: List[object]
+    reason: str
+
+    def describe(self) -> str:
+        extra = ""
+        if self.strategy == "broadcast":
+            extra = f" build={self.build_side}"
+        if self.skew_shards:
+            extra += (f" skew={len(self.skewed_buckets)}bucket(s)/"
+                      f"{self.skew_shards}shards hot={self.hot_keys[:2]}")
+        return (f"join#{self.boundary}: {self.strategy}{extra} "
+                f"l={self.left_bytes:.0f}B r={self.right_bytes:.0f}B "
+                f"reducers={self.num_reducers}")
+
+
+@dataclasses.dataclass
 class ExecMetrics:
     """Observable decisions, for tests and EXPERIMENTS.md."""
     pruned_partitions: int = 0
     scanned_partitions: int = 0
     join_decisions: List[str] = dataclasses.field(default_factory=list)
     reducer_decisions: List[str] = dataclasses.field(default_factory=list)
+    join_boundaries: List[JoinBoundaryDecision] = dataclasses.field(
+        default_factory=list)
     shuffled_bytes: float = 0.0
     broadcast_bytes: float = 0.0
 
+    def describe_joins(self) -> str:
+        """One line per join boundary, execution order — the runtime twin of
+        the static explain() output."""
+        return "\n".join(b.describe() for b in self.join_boundaries)
+
 
 class JoinShuffledRDD(RDD):
-    """Reduce side of a shuffle join: split b fetches bucket-group b from
-    BOTH parents' map outputs and joins locally (reducer-local algorithm
-    choice inside `join_local`)."""
+    """Reduce side of a shuffle join.  Each split is either a plain bucket
+    group (fetch the group from BOTH parents' map outputs, join locally) or
+    a `SkewShard`: one stripe of a heavy-hitter bucket, where the sharded
+    (probe) side fetches only map outputs shard, shard+n, ... and the other
+    side's bucket is replicated to each stripe — the skew-splitting half of
+    §3.1.2.  Across the stripes every probe map output is read exactly
+    once, so splitting adds no fetch amplification on the big side, and a
+    recomputed-after-failure stripe deterministically sees the same rows
+    (map tasks are deterministic)."""
 
     def __init__(self, ldep: ShuffleDependency, rdep: ShuffleDependency,
-                 bucket_groups: List[List[int]], lkey: str, rkey: str,
+                 bucket_groups: List[object], lkey: str, rkey: str,
                  how: str = "inner"):
         self.ldep, self.rdep = ldep, rdep
         self.bucket_groups = bucket_groups
         self.lkey, self.rkey, self.how = lkey, rkey, how
         super().__init__(ldep.parent.ctx, len(bucket_groups), [ldep, rdep])
 
+    def _fetch(self, dep: ShuffleDependency, buckets: List[int],
+               maps=None) -> PartitionBatch:
+        pieces = self.ctx.block_manager.fetch_shuffle(
+            dep.shuffle_id, dep.parent.num_partitions, buckets, maps)
+        return PartitionBatch.concat(pieces)
+
     def compute(self, split: int, tc: TaskContext) -> PartitionBatch:
-        buckets = self.bucket_groups[split]
-        bm = self.ctx.block_manager
-        lpieces = bm.fetch_shuffle(self.ldep.shuffle_id,
-                                   self.ldep.parent.num_partitions, buckets)
-        rpieces = bm.fetch_shuffle(self.rdep.shuffle_id,
-                                   self.rdep.parent.num_partitions, buckets)
-        l = PartitionBatch.concat(lpieces)
-        r = PartitionBatch.concat(rpieces)
+        spec = self.bucket_groups[split]
+        if isinstance(spec, SkewShard):
+            sdep, odep = ((self.ldep, self.rdep)
+                          if spec.shard_side == "left"
+                          else (self.rdep, self.ldep))
+            stripe = range(spec.shard, sdep.parent.num_partitions,
+                           spec.num_shards)
+            sharded = self._fetch(sdep, [spec.bucket], list(stripe))
+            other = self._fetch(odep, [spec.bucket])
+            l, r = ((sharded, other) if spec.shard_side == "left"
+                    else (other, sharded))
+            return join_local(l, r, self.lkey, self.rkey, self.how)
+        l = self._fetch(self.ldep, spec)
+        r = self._fetch(self.rdep, spec)
         return join_local(l, r, self.lkey, self.rkey, self.how)
 
 
@@ -252,10 +310,23 @@ class Executor:
         return Compiled(rdd, [n for n, _ in exprs], None, child.scan_filtered,
                         child.size_hint)
 
+    def _materialize_empty(self, compiled: Compiled, child_node: Node
+                           ) -> Compiled:
+        """Blocking operators (aggregate/sort/limit) need at least one input
+        partition to produce their (possibly identity-valued) output; a
+        scan whose partitions were ALL map-pruned compiles to a 0-partition
+        RDD, so substitute a single zero-row batch with the right schema."""
+        if compiled.rdd.num_partitions > 0:
+            return compiled
+        schema = child_node.schema(self.catalog)
+        rdd = self.ctx.parallelize([_empty_batch(compiled.names, schema)])
+        return Compiled(rdd, compiled.names, None, compiled.scan_filtered,
+                        compiled.size_hint)
+
     # -- aggregation ---------------------------------------------------------
 
     def _compile_aggregate(self, node: AggregateNode) -> Compiled:
-        child = self._compile(node.child)
+        child = self._materialize_empty(self._compile(node.child), node.child)
         group_cols = node.group_by
         aggs = node.aggs
         names = group_cols + [a.out_name for a in aggs]
@@ -295,22 +366,101 @@ class Executor:
 
     # -- joins ----------------------------------------------------------------
 
+    def _fetch_shuffle_recovering(self, dep, buckets) -> List[PartitionBatch]:
+        """Master-side shuffle fetch with lineage recovery: a worker lost
+        between the map stage and this fetch (e.g. mid multi-way join) only
+        costs recomputation of its map tasks (§2.3)."""
+        from .runtime import FetchFailed
+        retries = self.ctx.scheduler.max_stage_retries
+        for attempt in range(retries + 1):
+            try:
+                return self.ctx.block_manager.fetch_shuffle(
+                    dep.shuffle_id, dep.parent.num_partitions, buckets)
+            except FetchFailed as ff:
+                if attempt == retries:
+                    raise RuntimeError(
+                        "exceeded max stage retries fetching broadcast "
+                        "side") from ff
+                self.ctx.scheduler._recover_map_outputs(dep, ff.missing_maps)
+        raise AssertionError("unreachable")
+
+    def _record_boundary(self, strategy: str, build_side: Optional[str],
+                         left_bytes: float, right_bytes: float,
+                         num_reducers: int, reason: str,
+                         skewed_buckets: Optional[List[int]] = None,
+                         skew_shards: int = 0,
+                         hot_keys: Optional[List[object]] = None
+                         ) -> JoinBoundaryDecision:
+        dec = JoinBoundaryDecision(
+            boundary=len(self.metrics.join_boundaries), strategy=strategy,
+            build_side=build_side, left_bytes=left_bytes,
+            right_bytes=right_bytes, num_reducers=num_reducers,
+            skewed_buckets=skewed_buckets or [], skew_shards=skew_shards,
+            hot_keys=hot_keys or [], reason=reason)
+        self.metrics.join_boundaries.append(dec)
+        return dec
+
     def _compile_join(self, node: JoinNode) -> Compiled:
+        """One join boundary.  Because _compile recurses left-then-right and
+        every boundary runs its map stage(s) eagerly, an N-way join is
+        re-planned boundary by boundary: each decision below sees the
+        *materialized* output of all upstream joins, not compile-time
+        guesses (paper §3.1 — the DAG is altered while the query runs)."""
         left = self._compile(node.left)
         right = self._compile(node.right)
         lkey, rkey = node.left_key, node.right_key
         names = left.names + [n if n not in left.names else n + "_r"
                               for n in right.names]
+        hint = ((left.size_hint or 0.0) + (right.size_hint or 0.0)
+                if (left.size_hint is not None or right.size_hint is not None)
+                else None)
+        # the output of this boundary is a materialized intermediate: its
+        # selectivity has been OBSERVED, so it must not carry the
+        # "filtered, likely small" prior into the next boundary
+        filtered = False
+
+        # a side with zero compiled partitions (map pruning refuted every
+        # partition, §3.5): the inner join is provably empty — skip the
+        # boundary entirely; a left join keeps left rows, zero-padding the
+        # right columns (the dialect's NULL emulation)
+        if left.rdd.num_partitions == 0 or right.rdd.num_partitions == 0:
+            self.metrics.join_decisions.append(
+                "pruned-empty side: join short-circuited")
+            self._record_boundary("empty", None, 0.0, 0.0, 0,
+                                  "a side was pruned to zero partitions")
+            if node.how == "inner" or left.rdd.num_partitions == 0:
+                return Compiled(self.ctx.parallelize([]), names)
+            rschema = node.right.schema(self.catalog)
+            lnames = list(left.names)
+
+            def pad_right(split: int, batch: PartitionBatch) -> PartitionBatch:
+                out = dict(batch.cols)
+                n = batch.num_rows
+                for f in rschema.fields:
+                    name = f.name if f.name not in lnames else f.name + "_r"
+                    empty = _empty_batch([f.name], rschema).cols[f.name]
+                    arr = np.zeros(n, np.asarray(empty.arr).dtype)
+                    sdict = (np.array([""]) if empty.sdict is not None
+                             else None)
+                    out[name] = ColumnVal(arr, sdict, True)
+                return PartitionBatch(out)
+
+            return Compiled(left.rdd.map_partitions(pad_right), names,
+                            size_hint=hint)
 
         # §3.4 co-partitioned tables: zip corresponding partitions, no shuffle
         if (node.strategy in (JoinStrategy.AUTO, JoinStrategy.COPARTITION)
                 and left.table is not None and right.table is not None
                 and left.table.co_partitioned_with(right.table, lkey, rkey)):
             self.metrics.join_decisions.append("copartition: zip, no shuffle")
+            self._record_boundary(
+                "copartition", None, left.size_hint or 0.0,
+                right.size_hint or 0.0, left.rdd.num_partitions,
+                "co-partitioned zip, no shuffle")
             rdd = ZipPartitionsRDD(
                 left.rdd, right.rdd,
                 lambda s, l, r: join_local(l, r, lkey, rkey, node.how))
-            return Compiled(rdd, names)
+            return Compiled(rdd, names, size_hint=hint, scan_filtered=filtered)
 
         if node.strategy == JoinStrategy.BROADCAST:
             return self._broadcast(left, right, lkey, rkey, node.how,
@@ -347,10 +497,14 @@ class Executor:
                 f"PDE map-join: broadcast {'left' if first == 'left' else 'right'} "
                 f"({decision.left_bytes:.0f}B observed); large side not shuffled")
             small = PartitionBatch.concat(
-                self.ctx.block_manager.fetch_shuffle(
-                    adep.shuffle_id, adep.parent.num_partitions,
-                    list(range(num_buckets))))
+                self._fetch_shuffle_recovering(adep, list(range(num_buckets))))
             self.metrics.broadcast_bytes += small.nbytes
+            observed = float(small.nbytes)
+            lb, rb = ((observed, right.size_hint or 0.0) if first == "left"
+                      else (left.size_hint or 0.0, observed))
+            self._record_boundary(
+                "broadcast", first, lb, rb, b.rdd.num_partitions,
+                decision.reason)
             if first == "left":
                 # inner join is symmetric; emit left-major column order
                 rdd = b.rdd.map_partitions(
@@ -360,7 +514,7 @@ class Executor:
                 rdd = b.rdd.map_partitions(
                     lambda s, big: _reorder(join_local(
                         big, small, bkey, akey, node.how), names))
-            return Compiled(rdd, names)
+            return Compiled(rdd, names, size_hint=hint, scan_filtered=filtered)
 
         # not small: pre-shuffle the other side too, aligned buckets
         self.metrics.join_decisions.append(
@@ -370,20 +524,29 @@ class Executor:
         bdep = self._new_shuffle(
             b.rdd.map_partitions(lambda s, x: x.decode_strings()),
             num_buckets, bucket_by_hash(bkey, num_buckets),
-            accumulators=lambda: [SizeAccumulator(num_buckets)])
+            accumulators=lambda: [SizeAccumulator(num_buckets),
+                                  HeavyHitterAccumulator(bkey)])
         bstats = self.ctx.scheduler.run_map_stage(bdep)
         self.metrics.shuffled_bytes += bstats.total_output_bytes()
 
-        sizes = (astats.output_bytes_per_bucket(num_buckets)
-                 + bstats.output_bytes_per_bucket(num_buckets))
-        pdecision = decide_parallelism(
-            _stats_from_sizes(sizes), num_buckets, self.pde)
-        self.metrics.reducer_decisions.append(pdecision.reason)
-        groups = pdecision.bucket_groups
-
+        lstats, rstats = (astats, bstats) if first == "left" else (bstats, astats)
         ldep, rdep = (adep, bdep) if first == "left" else (bdep, adep)
-        rdd = JoinShuffledRDD(ldep, rdep, groups, lkey, rkey, node.how)
-        return Compiled(rdd, names)
+        sdecision = decide_skew_join(lstats, rstats, num_buckets, node.how,
+                                     self.pde,
+                                     left_maps=ldep.parent.num_partitions,
+                                     right_maps=rdep.parent.num_partitions)
+        self.metrics.reducer_decisions.append(sdecision.reason)
+        self._record_boundary(
+            "shuffle", None, lstats.total_output_bytes(),
+            rstats.total_output_bytes(), sdecision.num_reducers,
+            sdecision.reason, skewed_buckets=sdecision.skewed_buckets,
+            skew_shards=sum(1 for s in sdecision.splits
+                            if isinstance(s, SkewShard)),
+            hot_keys=sdecision.hot_keys)
+
+        rdd = JoinShuffledRDD(ldep, rdep, sdecision.splits, lkey, rkey,
+                              node.how)
+        return Compiled(rdd, names, size_hint=hint, scan_filtered=filtered)
 
     def _broadcast(self, left: Compiled, right: Compiled, lkey: str,
                    rkey: str, how: str, note: str, names: List[str],
@@ -395,6 +558,12 @@ class Executor:
             self.ctx.scheduler.run_result_stage(
                 small.rdd.map_partitions(lambda s, x: x.decode_strings())))
         self.metrics.broadcast_bytes += collected.nbytes
+        observed = float(collected.nbytes)
+        lb, rb = ((observed, big.size_hint or 0.0)
+                  if broadcast_side == "left"
+                  else (big.size_hint or 0.0, observed))
+        self._record_boundary("broadcast", broadcast_side, lb, rb,
+                              big.rdd.num_partitions, note)
         if broadcast_side == "right":
             rdd = big.rdd.map_partitions(
                 lambda s, part: _reorder(
@@ -423,6 +592,8 @@ class Executor:
         rs = self.ctx.scheduler.run_map_stage(rdep)
         self.metrics.shuffled_bytes += (ls.total_output_bytes()
                                         + rs.total_output_bytes())
+        self._record_boundary("shuffle", None, ls.total_output_bytes(),
+                              rs.total_output_bytes(), num_buckets, note)
         groups = [[b] for b in range(num_buckets)]
         rdd = JoinShuffledRDD(ldep, rdep, groups, lkey, rkey, how)
         return Compiled(rdd, names)
@@ -430,7 +601,7 @@ class Executor:
     # -- sort / limit ----------------------------------------------------------
 
     def _compile_sort(self, node: SortNode, limit: Optional[int]) -> Compiled:
-        child = self._compile(node.child)
+        child = self._materialize_empty(self._compile(node.child), node.child)
         keys = node.keys
 
         def local_sort(split: int, batch: PartitionBatch) -> PartitionBatch:
@@ -458,7 +629,7 @@ class Executor:
     def _compile_limit(self, node: LimitNode) -> Compiled:
         if isinstance(node.child, SortNode):
             return self._compile_sort(node.child, node.n)
-        child = self._compile(node.child)
+        child = self._materialize_empty(self._compile(node.child), node.child)
         n = node.n
 
         # §2.4: LIMIT pushed to individual partitions, final limit at collect
@@ -471,6 +642,24 @@ class Executor:
         self.ctx.scheduler.run_map_stage(dep)
         rdd = ShuffledRDD(dep, [[0]], lambda s, b: b.head(n))
         return Compiled(rdd, child.names)
+
+
+def _empty_batch(names: List[str], schema) -> PartitionBatch:
+    """A zero-row batch carrying the right columns (and string-ness), so
+    blocking operators behave identically whether their input is empty
+    because rows were filtered or because map pruning refuted every
+    partition (§3.5)."""
+    from .types import DType
+    cols: Dict[str, ColumnVal] = {}
+    for name in names:
+        field = schema.field(name) if name in schema else None
+        if field is not None and field.dtype == DType.STRING:
+            cols[name] = ColumnVal(np.zeros(0, np.int32),
+                                   np.array([], dtype=np.str_), True)
+        else:
+            dt = field.dtype.np_dtype if field is not None else np.float64
+            cols[name] = ColumnVal(np.zeros(0, dt), None, True)
+    return PartitionBatch(cols)
 
 
 def _reorder(batch: PartitionBatch, names: List[str]) -> PartitionBatch:

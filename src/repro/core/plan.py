@@ -168,8 +168,9 @@ class LimitNode(Node):
 
 
 def optimize(node: Node, catalog) -> Node:
-    node = push_down_filters(node)
+    node = push_down_filters(node, catalog)
     node = merge_filters(node)
+    node = order_joins(node, catalog)
     node = push_down_limits(node)
     return node
 
@@ -181,8 +182,15 @@ def _substitute(e: Expr, mapping: Dict[str, Expr]) -> Expr:
         e, lambda n: mapping.get(n.name, n) if isinstance(n, Col) else None)
 
 
-def push_down_filters(node: Node) -> Node:
-    """Predicate pushdown: move filters below projects and into join sides."""
+def push_down_filters(node: Node, catalog=None) -> Node:
+    """Predicate pushdown: move filters below projects and into join sides.
+
+    With a catalog, scan schemas resolve exactly, so WHERE conjuncts of an
+    N-way join descend all the way onto the individual scans — which is what
+    feeds map pruning (§3.5) and the "likely small side" prior (§6.3.2).
+    Pushing into the non-preserved side of an outer join is unsound (it
+    would turn NULL-padded rows into dropped rows), so only the preserved
+    left side receives pushdowns there."""
     if isinstance(node, FilterNode):
         child = node.child
         if isinstance(child, ProjectNode):
@@ -191,19 +199,20 @@ def push_down_filters(node: Node) -> Node:
             if all(c in mapping for c in node.pred.columns()):
                 new_pred = _substitute(node.pred, mapping)
                 return push_down_filters(
-                    ProjectNode(FilterNode(child.child, new_pred), child.exprs))
+                    ProjectNode(FilterNode(child.child, new_pred),
+                                child.exprs), catalog)
         if isinstance(child, FilterNode):
             merged = FilterNode(child.child, And(child.pred, node.pred))
-            return push_down_filters(merged)
+            return push_down_filters(merged, catalog)
         if isinstance(child, JoinNode):
-            l_schema_cols = set(_available_columns(child.left))
-            r_schema_cols = set(_available_columns(child.right))
+            l_schema_cols = set(_available_columns(child.left, catalog))
+            r_schema_cols = set(_available_columns(child.right, catalog))
             keep, left_preds, right_preds = [], [], []
             for c in split_conjuncts(node.pred):
                 cols = set(c.columns())
                 if cols <= l_schema_cols:
                     left_preds.append(c)
-                elif cols <= r_schema_cols:
+                elif cols <= r_schema_cols and child.how == "inner":
                     right_preds.append(c)
                 else:
                     keep.append(c)
@@ -213,31 +222,37 @@ def push_down_filters(node: Node) -> Node:
                 new_left = FilterNode(new_left, conjoin(left_preds))
             if right_preds:
                 new_right = FilterNode(new_right, conjoin(right_preds))
-            new_join = JoinNode(push_down_filters(new_left),
-                                push_down_filters(new_right),
+            new_join = JoinNode(push_down_filters(new_left, catalog),
+                                push_down_filters(new_right, catalog),
                                 child.left_key, child.right_key, child.how,
                                 child.strategy)
             if keep:
                 return FilterNode(new_join, conjoin(keep))
             return new_join
-        return FilterNode(push_down_filters(child), node.pred)
+        return FilterNode(push_down_filters(child, catalog), node.pred)
     # generic recursion
     for attr in ("child", "left", "right"):
         if hasattr(node, attr):
-            setattr(node, attr, push_down_filters(getattr(node, attr)))
+            setattr(node, attr, push_down_filters(getattr(node, attr),
+                                                  catalog))
     return node
 
 
-def _available_columns(node: Node) -> List[str]:
+def _available_columns(node: Node, catalog=None) -> List[str]:
     if isinstance(node, ScanNode):
-        return ["*"]  # unknown without catalog; resolved later
+        if catalog is not None:
+            try:
+                return list(catalog.schema(node.table).names)
+            except KeyError:
+                pass
+        return ["*"]  # unknown without catalog; "*" matches nothing
     if isinstance(node, ProjectNode):
         return [n for n, _ in node.exprs]
     if isinstance(node, AggregateNode):
         return node.group_by + [a.out_name for a in node.aggs]
     cols: List[str] = []
     for ch in node.children():
-        cols.extend(_available_columns(ch))
+        cols.extend(_available_columns(ch, catalog))
     return cols
 
 
@@ -262,6 +277,245 @@ def push_down_limits(node: Node) -> Node:
         if hasattr(node, attr):
             setattr(node, attr, push_down_limits(getattr(node, attr)))
     return node
+
+
+# ---------------------------------------------------------------------------
+# Cost-based join ordering (left-deep, smallest-relation-first with
+# co-partition awareness).  PDE then re-plans every boundary at run time from
+# observed map-output sizes — this pass only picks the *initial* shape.
+# ---------------------------------------------------------------------------
+
+def _broadcast_prior_bytes() -> float:
+    """The default PDE broadcast threshold, as the static prior for 'this
+    side is probably cheap to move'.  The runtime decision uses observed
+    sizes against the session's actual PDEConfig; the ordering pass only
+    needs the right order of magnitude."""
+    from .pde import PDEConfig
+    return PDEConfig().broadcast_threshold_bytes
+
+
+def estimate_relation(node: Node, catalog) -> "RelEstimate":
+    """Pre-execution (rows, bytes) estimate of a plan subtree, from catalog
+    and piggybacked partition statistics (core/stats.py)."""
+    from .stats import (RelEstimate, predicate_selectivity,
+                        surviving_partition_fraction)
+    if isinstance(node, ScanNode):
+        t = catalog.get(node.table)
+        return RelEstimate(float(t.num_rows), float(t.nbytes), t)
+    if isinstance(node, FilterNode):
+        base = estimate_relation(node.child, catalog)
+        sel = predicate_selectivity(node.pred)
+        if base.table is not None:
+            # partition-stat refutation gives a hard upper bound on survivors
+            sel = min(sel, surviving_partition_fraction(base.table, node.pred))
+        return dataclasses.replace(base, rows=base.rows * sel,
+                                   nbytes=base.nbytes * sel)
+    if isinstance(node, ProjectNode):
+        base = estimate_relation(node.child, catalog)
+        return dataclasses.replace(base, table=None)
+    if isinstance(node, LimitNode):
+        base = estimate_relation(node.child, catalog)
+        rows = min(base.rows, float(node.n))
+        frac = rows / base.rows if base.rows > 0 else 1.0
+        return dataclasses.replace(base, rows=rows, nbytes=base.nbytes * frac,
+                                   table=None)
+    if isinstance(node, AggregateNode):
+        base = estimate_relation(node.child, catalog)
+        rows = max(1.0, base.rows ** 0.5)  # grouping collapses cardinality
+        return dataclasses.replace(base, rows=rows,
+                                   nbytes=base.nbytes * rows / max(base.rows, 1.0),
+                                   table=None)
+    if isinstance(node, JoinNode):
+        return _estimate_join(node, catalog)[0]
+    if isinstance(node, SortNode):
+        base = estimate_relation(node.child, catalog)
+        return dataclasses.replace(base, table=None)
+    # unknown node: sum children
+    rows = nbytes = 0.0
+    for ch in node.children():
+        e = estimate_relation(ch, catalog)
+        rows += e.rows
+        nbytes += e.nbytes
+    return RelEstimate(rows, nbytes)
+
+
+def _join_key_ndv(est, key: str) -> float:
+    """Distinct-value estimate of a join key within one relation."""
+    from .stats import table_column_ndv
+    if est.table is not None:
+        ndv = table_column_ndv(est.table, key)
+        if ndv is not None:
+            return float(max(ndv, 1))
+    return max(est.rows, 1.0)
+
+
+def _estimate_join(node: "JoinNode", catalog):
+    """(output RelEstimate, boundary cost in bytes moved) for one join."""
+    from .stats import RelEstimate
+    l = estimate_relation(node.left, catalog)
+    r = estimate_relation(node.right, catalog)
+    ndv = max(_join_key_ndv(l, node.left_key), _join_key_ndv(r, node.right_key))
+    out_rows = max(1.0, l.rows * r.rows / ndv)
+    out_bytes = out_rows * (l.bytes_per_row + r.bytes_per_row)
+    cost = _boundary_cost(node, l, r)
+    return RelEstimate(out_rows, out_bytes), cost
+
+
+def _boundary_cost(node: "JoinNode", l, r) -> float:
+    """Estimated bytes moved across this shuffle boundary under the runtime
+    strategies PDE can pick: zip (co-partitioned) ≈ 0, broadcast = small
+    side only, shuffle = both sides."""
+    if (l.table is not None and r.table is not None
+            and l.table.co_partitioned_with(r.table, node.left_key,
+                                            node.right_key)):
+        return 0.0
+    small = min(l.nbytes, r.nbytes)
+    if small <= _broadcast_prior_bytes():
+        return small
+    return l.nbytes + r.nbytes
+
+
+def estimate_plan_cost(node: Node, catalog) -> float:
+    """Total estimated bytes moved across all join boundaries of a plan —
+    the objective the join-ordering pass minimizes (and what the property
+    test compares across join orders)."""
+    total = 0.0
+    if isinstance(node, JoinNode):
+        _, cost = _estimate_join(node, catalog)
+        total += cost
+    for ch in node.children():
+        total += estimate_plan_cost(ch, catalog)
+    return total
+
+
+def _flatten_join_chain(node: Node):
+    """Flatten a tree of inner AUTO joins into (relations, edges); each edge
+    is (left_key, right_key) from one JoinNode.  Non-join subtrees (scans,
+    filtered scans, aggregates, outer joins, forced strategies) stay opaque
+    relations."""
+    rels: List[Node] = []
+    edges: List[Tuple[str, str]] = []
+
+    def walk(n: Node):
+        if (isinstance(n, JoinNode) and n.how == "inner"
+                and n.strategy == JoinStrategy.AUTO):
+            walk(n.left)
+            walk(n.right)
+            edges.append((n.left_key, n.right_key))
+        else:
+            rels.append(n)
+
+    walk(node)
+    return rels, edges
+
+
+def order_joins(node: Node, catalog) -> Node:
+    """Cost-based initial join ordering: rebuild chains of ≥3 inner-joined
+    relations as a left-deep tree, greedily attaching the cheapest next
+    relation (smallest estimated size; co-partitioned pairs first since
+    they join shuffle-free, §3.4).
+
+    Conservative by design: bails out (returning the tree unchanged) on
+    outer joins, planner-forced strategies, ambiguous key ownership, or
+    duplicate column names across relations — the runtime PDE still
+    re-optimizes every boundary of an un-reordered plan."""
+    if isinstance(node, JoinNode):
+        reordered = _try_reorder(node, catalog)
+        if reordered is not None:
+            # _try_reorder already ordered each opaque relation's subtree;
+            # recursing into the freshly built spine would only re-derive it
+            return reordered
+    for attr in ("child", "left", "right"):
+        if hasattr(node, attr):
+            setattr(node, attr, order_joins(getattr(node, attr), catalog))
+    return node
+
+
+def _try_reorder(root: "JoinNode", catalog) -> Optional[Node]:
+    rels, edges = _flatten_join_chain(root)
+    if len(rels) < 3 or len(edges) != len(rels) - 1:
+        return None
+    # order any nested join chains inside the opaque relations now — the
+    # caller will not descend into a successfully rebuilt spine
+    rels = [order_joins(r, catalog) for r in rels]
+    # schemas + global column uniqueness (join output flattens columns with
+    # positional _r suffixing — reordering under duplicates would rename)
+    schemas: List[set] = []
+    seen: set = set()
+    for r in rels:
+        try:
+            names = set(r.schema(catalog).names)
+        except Exception:
+            return None
+        if seen & names:
+            return None
+        seen |= names
+        schemas.append(names)
+
+    def owner(col: str) -> Optional[int]:
+        hits = [i for i, s in enumerate(schemas) if col in s]
+        return hits[0] if len(hits) == 1 else None
+
+    adj: Dict[int, List[Tuple[int, str, str]]] = {i: [] for i in range(len(rels))}
+    for lk, rk in edges:
+        a, b = owner(lk), owner(rk)
+        if a is None or b is None or a == b:
+            return None
+        adj[a].append((b, lk, rk))
+        adj[b].append((a, rk, lk))
+
+    ests = [estimate_relation(r, catalog) for r in rels]
+
+    def attach_cost(tree_est, cand_est, tree_is_scan_pair=None) -> float:
+        if tree_is_scan_pair is not None:
+            lk, rk = tree_is_scan_pair
+            if (tree_est.table is not None and cand_est.table is not None
+                    and tree_est.table.co_partitioned_with(
+                        cand_est.table, lk, rk)):
+                return 0.0
+        small = min(tree_est.nbytes, cand_est.nbytes)
+        if small <= _broadcast_prior_bytes():
+            return small
+        return tree_est.nbytes + cand_est.nbytes
+
+    # start: the connected pair with the cheapest first boundary, breaking
+    # ties toward smaller combined size (smallest-relation-first)
+    best = None
+    for a in range(len(rels)):
+        for b, lk, rk in adj[a]:
+            if a >= b:
+                continue
+            cost = attach_cost(ests[a], ests[b], (lk, rk))
+            key = (cost, ests[a].nbytes + ests[b].nbytes, a, b)
+            if best is None or key < best[0]:
+                best = (key, a, b, lk, rk)
+    if best is None:
+        return None
+    _, a, b, lk, rk = best
+    # the smaller relation leads (build side of the first boundary)
+    if ests[b].nbytes < ests[a].nbytes:
+        a, b, lk, rk = b, a, rk, lk
+
+    placed = {a, b}
+    tree: Node = JoinNode(rels[a], rels[b], lk, rk, "inner")
+    tree_est, _ = _estimate_join(tree, catalog)
+    while len(placed) < len(rels):
+        cand = None
+        for p in placed:
+            for q, pk, qk in adj[p]:
+                if q in placed:
+                    continue
+                cost = attach_cost(tree_est, ests[q])
+                key = (cost, ests[q].nbytes, q)
+                if cand is None or key < cand[0]:
+                    cand = (key, q, pk, qk)
+        if cand is None:
+            return None  # disconnected (cross join): keep original order
+        _, q, pk, qk = cand
+        tree = JoinNode(tree, rels[q], pk, qk, "inner")
+        tree_est, _ = _estimate_join(tree, catalog)
+        placed.add(q)
+    return tree
 
 
 def required_columns(node: Node, catalog, want: Optional[set] = None) -> Dict[str, set]:

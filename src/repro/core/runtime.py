@@ -176,12 +176,16 @@ class BlockManager:
                        for k in self.blocks)
 
     def fetch_shuffle(self, shuffle_id: int, num_maps: int,
-                      buckets: Sequence[int]) -> List[PartitionBatch]:
-        """All pieces of `buckets` from every map task; FetchFailed lists the
-        missing map splits so the scheduler can recompute exactly those."""
+                      buckets: Sequence[int],
+                      maps: Optional[Sequence[int]] = None
+                      ) -> List[PartitionBatch]:
+        """All pieces of `buckets` from every map task (or the subset in
+        `maps` — used by skew-split reducers, each of which owns a disjoint
+        stripe of map outputs); FetchFailed lists the missing map splits so
+        the scheduler can recompute exactly those."""
         pieces, missing = [], set()
         with self.lock:
-            for m in range(num_maps):
+            for m in (range(num_maps) if maps is None else maps):
                 for b in buckets:
                     hit = self.blocks.get(("shuf", shuffle_id, m, b))
                     if hit is None:
@@ -336,7 +340,12 @@ class Scheduler:
                 except FetchFailed:
                     raise  # stage-level recovery (lineage) handled above us
                 except Exception:
-                    # task failed (e.g. worker death): retry elsewhere
+                    # task failed (e.g. worker death): retry elsewhere.
+                    # Clear the handled future FIRST — it would otherwise be
+                    # re-observed as "done" on every poll iteration while the
+                    # retry waits for a pool thread, spawning a retry per
+                    # poll until the attempt cap kills the whole stage.
+                    rec.future = None
                     if attempt_counter[split] > 8:
                         raise
                     running[split].append(

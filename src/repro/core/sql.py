@@ -327,10 +327,12 @@ class Parser:
         return self._atom()
 
     def _literal_value(self):
+        neg = bool(self.accept("op", "-"))
         t = self.next()
         if t.kind == "number":
-            return float(t.value) if "." in t.value else int(t.value)
-        if t.kind == "string":
+            v = float(t.value) if "." in t.value else int(t.value)
+            return -v if neg else v
+        if t.kind == "string" and not neg:
             return t.value
         raise SyntaxError(f"expected literal, got {t.value!r}")
 
@@ -393,6 +395,10 @@ class _AggExpr(Expr):
 
 
 def _litval(e: Expr):
+    # fold the unary-minus encoding (0 - x) back into a negative literal
+    if (isinstance(e, BinOp) and e.op == "-" and isinstance(e.left, Lit)
+            and e.left.value == 0 and isinstance(e.right, Lit)):
+        return -e.right.value
     assert isinstance(e, Lit), f"expected literal, got {e}"
     return e.value
 
@@ -446,33 +452,53 @@ class Binder:
 
         where = strip_quals(stmt.where) if stmt.where is not None else None
 
-        # explicit JOIN ... ON
+        # Build the left-deep join tree over ALL from-items: explicit
+        # JOIN ... ON clauses and comma tables (whose equi predicates live in
+        # WHERE) bind in user order where possible, deferring any item whose
+        # join keys reference a table that is not bound yet — so arbitrary
+        # N-way mixes like `FROM f JOIN d1 ON ..., d2 WHERE f.x = d2.k`
+        # resolve regardless of reference order.  The cost-based ordering
+        # pass (plan.order_joins) then picks the initial execution order.
         node: Node = ScanNode(stmt.from_items[0][0])
         bound_aliases = [stmt.from_items[0][1]]
-        for t, a, on, how in stmt.joins:
-            lk, rk = self._equi_keys(on, alias_schema, bound_aliases, a)
-            node = JoinNode(node, ScanNode(t), lk, rk, how)
-            bound_aliases.append(a)
-
-        # comma joins: extract equi conjuncts from WHERE
-        extra_tables = stmt.from_items[1:]
-        if extra_tables:
-            conjuncts = split_conjuncts(where)
-            remaining = list(conjuncts)
-            for t, a in extra_tables:
-                found = None
-                for c in remaining:
-                    keys = self._try_equi(c, alias_schema, bound_aliases, a)
-                    if keys:
-                        found = (c, keys)
-                        break
-                if not found:
-                    raise NotImplementedError(
-                        f"no equi-join predicate found for table {t}")
-                c, (lk, rk) = found
-                remaining.remove(c)
-                node = JoinNode(node, ScanNode(t), lk, rk, "inner")
+        pending: List[tuple] = (
+            [("join", t, a, on, how) for t, a, on, how in stmt.joins]
+            + [("comma", t, a, None, "inner") for t, a in stmt.from_items[1:]])
+        remaining = list(split_conjuncts(where)) if where is not None else []
+        while pending:
+            progressed = False
+            for pi, item in enumerate(pending):
+                kind, t, a, on, how = item
+                if kind == "join":
+                    keys = self._try_equi(on, alias_schema, bound_aliases, a)
+                    if not keys:
+                        continue
+                    lk, rk = keys
+                else:
+                    found = None
+                    for c in remaining:
+                        keys = self._try_equi(c, alias_schema, bound_aliases, a)
+                        if keys:
+                            found = (c, keys)
+                            break
+                    if not found:
+                        continue
+                    c, (lk, rk) = found
+                    # remove by identity: Expr overloads == into a Cmp node
+                    remaining = [x for x in remaining if x is not c]
+                node = JoinNode(node, ScanNode(t), lk, rk, how)
                 bound_aliases.append(a)
+                del pending[pi]
+                progressed = True
+                break
+            if not progressed:
+                kind, t, a, on, how = pending[0]
+                if kind == "join":
+                    raise NotImplementedError(
+                        f"unsupported join condition {on} for table {t}")
+                raise NotImplementedError(
+                    f"no equi-join predicate found for table {t}")
+        if stmt.from_items[1:]:
             where = conjoin(remaining)
 
         if where is not None:
@@ -519,12 +545,6 @@ class Binder:
         if stmt.limit is not None:
             node = LimitNode(node, stmt.limit)
         return node
-
-    def _equi_keys(self, on: Expr, alias_schema, left_aliases, right_alias):
-        keys = self._try_equi(on, alias_schema, left_aliases, right_alias)
-        if not keys:
-            raise NotImplementedError(f"unsupported join condition {on}")
-        return keys
 
     def _try_equi(self, c: Expr, alias_schema, left_aliases, right_alias):
         if not isinstance(c, Cmp) or c.op != "=":

@@ -206,6 +206,81 @@ class StageStats:
 
 
 # --------------------------------------------------------------------------
+# Catalog / partition statistics for cost-based join ordering.
+#
+# The paper's PDE re-plans from *observed* statistics at run time; the
+# initial join order, however, must be chosen before anything has executed.
+# These estimators derive that prior from what the columnar store already
+# piggybacks on load (§3.3, §3.5): per-partition row counts, byte sizes,
+# min/max ranges, and small distinct-value sets.
+# --------------------------------------------------------------------------
+
+
+def predicate_selectivity(pred) -> float:
+    """System-R-style selectivity heuristic for a filter predicate.
+
+    Used only to *rank* candidate join orders, so coarse class-based factors
+    are enough; PDE corrects any misestimate at the shuffle boundary."""
+    from .expr import (And, Between, Cmp, Expr, InList, Not, Or)
+    if pred is None:
+        return 1.0
+    if isinstance(pred, And):
+        return predicate_selectivity(pred.left) * predicate_selectivity(pred.right)
+    if isinstance(pred, Or):
+        s = (predicate_selectivity(pred.left)
+             + predicate_selectivity(pred.right))
+        return min(1.0, s)
+    if isinstance(pred, Not):
+        return max(0.05, 1.0 - predicate_selectivity(pred.child))
+    if isinstance(pred, Cmp):
+        return 0.1 if pred.op == "=" else (0.9 if pred.op == "!=" else 0.33)
+    if isinstance(pred, Between):
+        return 0.25
+    if isinstance(pred, InList):
+        return min(1.0, 0.05 * max(len(pred.values), 1))
+    return 0.5
+
+
+def table_column_ndv(table, col: str) -> Optional[int]:
+    """Number of distinct values of `col`, from the per-partition distinct
+    sets piggybacked on loading — exact when every partition kept its set
+    (enum-ish columns), else None (caller falls back to row count)."""
+    union: set = set()
+    for p in table.partitions:
+        block = p.columns.get(col)
+        if block is None or block.stats.distinct is None:
+            return None
+        union.update(block.stats.distinct)
+    return len(union) if union else None
+
+
+def surviving_partition_fraction(table, pred) -> float:
+    """Fraction of partitions whose piggybacked stats could satisfy `pred`
+    (the same refutation test map pruning uses, §3.5) — a second, data-aware
+    selectivity signal for the join-order prior."""
+    from .pruning import may_match
+    total = table.num_partitions
+    if total == 0:
+        return 1.0
+    kept = sum(1 for p in table.partitions if may_match(pred, p.stats()))
+    return kept / total
+
+
+@dataclasses.dataclass
+class RelEstimate:
+    """Pre-execution size estimate of one relation (a join input subtree)."""
+    rows: float
+    nbytes: float
+    # table backing a bare scan (for NDV lookups / co-partition checks);
+    # None once the subtree contains anything but Scan/Filter/Project
+    table: Optional[Any] = None
+
+    @property
+    def bytes_per_row(self) -> float:
+        return self.nbytes / self.rows if self.rows > 0 else 0.0
+
+
+# --------------------------------------------------------------------------
 # Greedy bin-packing used for reducer coalescing / skew mitigation (§3.1.2)
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,424 @@
+"""Differential query oracle: a seeded random query generator whose queries
+render to the engine's SQL dialect AND execute on a pure-pandas reference.
+
+The generator emits a *structured* Query (tables, filters, grouping,
+aggregates, having, order/limit) rather than raw text, so the same object
+drives both executors — there is no second SQL parser to trust.  Coverage
+targets the surface the multi-way-join tentpole grew: star joins over 1-4
+tables (explicit `JOIN ... ON` chains and comma-joins with WHERE equi
+predicates, in shuffled clause order), conjunctive filters (comparisons,
+BETWEEN, IN lists, string equality), GROUP BY / HAVING over SUM / AVG /
+MIN / MAX / COUNT(*) / COUNT(DISTINCT), and ORDER BY ... LIMIT.
+
+Comparison policy (`compare`):
+  * un-aggregated queries project stored values unchanged — rows must match
+    exactly as multisets;
+  * aggregated queries compare per-group with np.allclose on float columns
+    (group keys are exact);
+  * ORDER BY ... LIMIT is non-deterministic under ties, so the result must
+    be the right size, a sub-multiset of the full reference result, with
+    order-column values equal to the reference's sorted top-n.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Star schema: one fact table + three dimensions, globally-unique column
+# names (the dialect strips qualifiers, and the join-ordering pass is
+# conservative under duplicates).
+# ---------------------------------------------------------------------------
+
+FACT_ROWS = 1200
+DIM_ROWS = {"dim1": 40, "dim2": 25, "dim3": 12}
+JOIN_KEYS = {"dim1": ("fk1", "pk1"), "dim2": ("fk2", "pk2"),
+             "dim3": ("fk3", "pk3")}
+
+# columns usable in filters / grouping / aggregates, per table
+NUMERIC_COLS = {"fact": ["fn", "fv"], "dim1": ["a1"], "dim2": ["a2"],
+                "dim3": ["a3"]}
+INT_COLS = {"fact": ["fn"], "dim1": ["a1"], "dim2": ["a2"], "dim3": []}
+STRING_COLS = {"fact": ["fs"], "dim1": ["s1"], "dim2": [], "dim3": []}
+GROUP_COLS = {"fact": ["fs", "fn"], "dim1": ["a1", "s1"], "dim2": ["a2"],
+              "dim3": []}
+
+
+def make_star_data(seed: int = 0) -> Dict[str, Dict[str, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    n = FACT_ROWS
+    # fk1 is mildly skewed so PDE sees non-uniform buckets now and then
+    fk1 = rng.integers(0, DIM_ROWS["dim1"], n)
+    fk1[: n // 6] = 3
+    data = {
+        "fact": {
+            "fk1": fk1.astype(np.int64),
+            "fk2": rng.integers(0, DIM_ROWS["dim2"], n).astype(np.int64),
+            "fk3": rng.integers(0, DIM_ROWS["dim3"], n).astype(np.int64),
+            "fn": rng.integers(0, 100, n).astype(np.int64),
+            "fv": rng.uniform(0, 10, n),
+            "fs": np.array([f"g{i}" for i in rng.integers(0, 8, n)]),
+        },
+        "dim1": {
+            "pk1": np.arange(DIM_ROWS["dim1"], dtype=np.int64),
+            "a1": rng.integers(0, 20, DIM_ROWS["dim1"]).astype(np.int64),
+            "s1": np.array([f"c{i % 4}" for i in range(DIM_ROWS["dim1"])]),
+        },
+        "dim2": {
+            "pk2": np.arange(DIM_ROWS["dim2"], dtype=np.int64),
+            "a2": rng.integers(0, 15, DIM_ROWS["dim2"]).astype(np.int64),
+        },
+        "dim3": {
+            "pk3": np.arange(DIM_ROWS["dim3"], dtype=np.int64),
+            "a3": rng.uniform(-5, 5, DIM_ROWS["dim3"]),
+        },
+    }
+    return data
+
+
+def register_star_tables(sess, data) -> None:
+    from repro.core import DType, Schema
+    sess.create_table("fact", Schema.of(
+        fk1=DType.INT64, fk2=DType.INT64, fk3=DType.INT64,
+        fn=DType.INT64, fv=DType.FLOAT64, fs=DType.STRING), data["fact"])
+    sess.create_table("dim1", Schema.of(
+        pk1=DType.INT64, a1=DType.INT64, s1=DType.STRING), data["dim1"])
+    sess.create_table("dim2", Schema.of(
+        pk2=DType.INT64, a2=DType.INT64), data["dim2"])
+    sess.create_table("dim3", Schema.of(
+        pk3=DType.INT64, a3=DType.FLOAT64), data["dim3"])
+
+
+# ---------------------------------------------------------------------------
+# Query model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Filter:
+    col: str
+    op: str                 # > < >= <= = != between in
+    value: object           # scalar | (lo, hi) | tuple of values
+
+    def sql(self) -> str:
+        if self.op == "between":
+            lo, hi = self.value
+            return f"{self.col} BETWEEN {_sql_lit(lo)} AND {_sql_lit(hi)}"
+        if self.op == "in":
+            vals = ", ".join(_sql_lit(v) for v in self.value)
+            return f"{self.col} IN ({vals})"
+        return f"{self.col} {self.op} {_sql_lit(self.value)}"
+
+    def mask(self, df) -> np.ndarray:
+        c = df[self.col]
+        if self.op == "between":
+            lo, hi = self.value
+            return (c >= lo) & (c <= hi)
+        if self.op == "in":
+            return c.isin(list(self.value))
+        import operator
+        ops = {">": operator.gt, "<": operator.lt, ">=": operator.ge,
+               "<=": operator.le, "=": operator.eq, "!=": operator.ne}
+        return ops[self.op](c, self.value)
+
+
+@dataclasses.dataclass
+class AggItem:
+    func: str               # SUM AVG MIN MAX COUNT COUNT_DISTINCT
+    col: Optional[str]      # None for COUNT(*)
+    alias: str
+
+    def sql(self) -> str:
+        if self.func == "COUNT" and self.col is None:
+            return f"COUNT(*) AS {self.alias}"
+        if self.func == "COUNT_DISTINCT":
+            return f"COUNT(DISTINCT {self.col}) AS {self.alias}"
+        return f"{self.func}({self.col}) AS {self.alias}"
+
+    def call_sql(self) -> str:
+        if self.func == "COUNT" and self.col is None:
+            return "COUNT(*)"
+        if self.func == "COUNT_DISTINCT":
+            return f"COUNT(DISTINCT {self.col})"
+        return f"{self.func}({self.col})"
+
+    def pandas(self, df_or_group):
+        import pandas as pd
+        grouped = not isinstance(df_or_group, pd.DataFrame)
+        if self.func == "COUNT" and self.col is None:
+            return df_or_group.size() if grouped else len(df_or_group)
+        c = df_or_group[self.col]
+        return {"SUM": c.sum, "AVG": c.mean, "MIN": c.min, "MAX": c.max,
+                "COUNT": c.count, "COUNT_DISTINCT": c.nunique}[self.func]()
+
+
+@dataclasses.dataclass
+class Query:
+    tables: List[str]                     # "fact" first, then dims
+    join_style: str                       # explicit | comma
+    filters: List[Filter]
+    select_cols: List[str]                # non-aggregate projection
+    group_by: List[str]
+    aggs: List[AggItem]
+    having: Optional[Tuple[AggItem, str, float]]
+    order_by: Optional[Tuple[str, bool]]  # (output column, desc)
+    limit: Optional[int]
+
+    # -- SQL rendering ------------------------------------------------------
+
+    def sql(self) -> str:
+        if self.aggs:
+            items = list(self.group_by) + [a.sql() for a in self.aggs]
+        else:
+            items = list(self.select_cols)
+        sel = "SELECT " + ", ".join(items)
+        dims = self.tables[1:]
+        join_preds = [f"fact.{JOIN_KEYS[d][0]} = {d}.{JOIN_KEYS[d][1]}"
+                      for d in dims]
+        where_parts = [f.sql() for f in self.filters]
+        if self.join_style == "explicit" or not dims:
+            frm = " FROM fact" + "".join(
+                f" JOIN {d} ON {p}" for d, p in zip(dims, join_preds))
+        else:
+            frm = " FROM " + ", ".join(self.tables)
+            where_parts = join_preds + where_parts
+        q = sel + frm
+        if where_parts:
+            q += " WHERE " + " AND ".join(where_parts)
+        if self.group_by:
+            q += " GROUP BY " + ", ".join(self.group_by)
+        if self.having is not None:
+            agg, op, v = self.having
+            q += f" HAVING {agg.call_sql()} {op} {_sql_lit(v)}"
+        if self.order_by is not None:
+            col, desc = self.order_by
+            q += f" ORDER BY {col}{' DESC' if desc else ''}"
+        if self.limit is not None:
+            q += f" LIMIT {self.limit}"
+        return q
+
+    # -- pandas reference ---------------------------------------------------
+
+    def pandas(self, dfs: Dict[str, "object"]):
+        import pandas as pd
+        df = dfs["fact"]
+        for d in self.tables[1:]:
+            fk, pk = JOIN_KEYS[d]
+            df = df.merge(dfs[d], left_on=fk, right_on=pk, how="inner")
+        for f in self.filters:
+            df = df[f.mask(df)]
+        if self.aggs:
+            if self.group_by:
+                g = df.groupby(list(self.group_by), sort=False)
+                out = pd.DataFrame({a.alias: a.pandas(g) for a in self.aggs})
+                out = out.reset_index()
+            else:
+                out = pd.DataFrame(
+                    {a.alias: [a.pandas(df)] for a in self.aggs})
+            if self.having is not None:
+                agg, op, v = self.having
+                out = out[Filter(agg.alias, op, v).mask(out)]
+            return out
+        return df[self.select_cols].copy()
+
+
+def _sql_lit(v) -> str:
+    if isinstance(v, str):
+        return "'" + v.replace("'", "''") + "'"
+    if isinstance(v, (float, np.floating)):
+        return repr(float(round(v, 4)))
+    return str(int(v))
+
+
+# ---------------------------------------------------------------------------
+# Generator
+# ---------------------------------------------------------------------------
+
+
+class QueryGen:
+    def __init__(self, data, seed: int):
+        self.data = data
+        self.rng = np.random.default_rng(seed)
+
+    def _pick(self, xs):
+        return xs[int(self.rng.integers(0, len(xs)))]
+
+    def _filter_for(self, col: str, table: str) -> Filter:
+        vals = self.data[table][col]
+        if col in STRING_COLS.get(table, []):
+            if self.rng.random() < 0.5:
+                return Filter(col, "=", self._pick(sorted(set(vals.tolist()))))
+            pool = sorted(set(vals.tolist()))
+            k = min(len(pool), int(self.rng.integers(1, 4)))
+            return Filter(col, "in", tuple(pool[:k]))
+        lo, hi = np.quantile(vals, [0.2, 0.8])
+        op = self._pick([">", "<", ">=", "<=", "=", "!=", "between", "in"])
+        if op == "between":
+            return Filter(col, op, (_num(vals, lo), _num(vals, hi)))
+        if op == "in":
+            pool = sorted(set(vals.tolist()))
+            k = min(len(pool), int(self.rng.integers(2, 6)))
+            picks = tuple(_num(vals, p) for p in
+                          self.rng.choice(pool, size=k, replace=False))
+            return Filter(col, op, picks)
+        if op in ("=", "!="):
+            return Filter(col, op, _num(vals, self._pick(vals.tolist())))
+        return Filter(col, op, _num(vals, float(self.rng.uniform(lo, hi))))
+
+    def gen(self) -> Query:
+        rng = self.rng
+        n_dims = int(rng.integers(0, 4))
+        dims = list(rng.permutation(["dim1", "dim2", "dim3"])[:n_dims])
+        tables = ["fact"] + dims
+        join_style = self._pick(["explicit", "comma"]) if dims else "explicit"
+
+        filters = []
+        for _ in range(int(rng.integers(0, 3))):
+            t = self._pick(tables)
+            cols = NUMERIC_COLS[t] + STRING_COLS.get(t, [])
+            if cols:
+                filters.append(self._filter_for(self._pick(cols), t))
+
+        num_pool = [c for t in tables for c in NUMERIC_COLS[t]]
+        int_pool = [c for t in tables for c in INT_COLS[t]]
+        group_pool = [c for t in tables for c in GROUP_COLS[t]]
+
+        aggs: List[AggItem] = []
+        group_by: List[str] = []
+        having = None
+        if rng.random() < 0.6:
+            if group_pool and rng.random() < 0.8:
+                k = int(rng.integers(1, min(2, len(group_pool)) + 1))
+                group_by = list(rng.choice(group_pool, size=k, replace=False))
+            for i in range(int(rng.integers(1, 4))):
+                func = self._pick(["SUM", "AVG", "MIN", "MAX", "COUNT",
+                                   "COUNT_DISTINCT"])
+                if func == "COUNT_DISTINCT" and any(
+                        a.func == "COUNT_DISTINCT" for a in aggs):
+                    func = "COUNT"  # dialect limit: one COUNT(DISTINCT)/query
+                if func == "COUNT":
+                    aggs.append(AggItem("COUNT", None, f"agg{i}"))
+                elif func == "COUNT_DISTINCT":
+                    aggs.append(AggItem(func, self._pick(int_pool), f"agg{i}"))
+                else:
+                    aggs.append(AggItem(func, self._pick(num_pool), f"agg{i}"))
+            if group_by and rng.random() < 0.4:
+                agg = self._pick(aggs)
+                op = self._pick([">", "<", ">="])
+                having = (agg, op, float(round(rng.uniform(0, 50), 2)))
+
+        if aggs:
+            select_cols: List[str] = []
+            out_cols = group_by + [a.alias for a in aggs]
+        else:
+            pool = sorted({c for t in tables
+                           for c in NUMERIC_COLS[t] + STRING_COLS.get(t, [])})
+            k = int(rng.integers(1, len(pool) + 1))
+            select_cols = list(rng.choice(pool, size=k, replace=False))
+            out_cols = select_cols
+
+        order_by = None
+        limit = None
+        if rng.random() < 0.35:
+            order_by = (self._pick(out_cols), bool(rng.random() < 0.5))
+            if rng.random() < 0.7:
+                limit = int(rng.integers(1, 40))
+        return Query(tables, join_style, filters, select_cols, group_by,
+                     aggs, having, order_by, limit)
+
+
+def _num(vals: np.ndarray, v):
+    """A literal of the column's kind (int columns get int literals)."""
+    if np.issubdtype(np.asarray(vals).dtype, np.integer):
+        return int(v)
+    return float(round(float(v), 4))
+
+
+# ---------------------------------------------------------------------------
+# Comparison
+# ---------------------------------------------------------------------------
+
+
+def _canon_rows(cols: Dict[str, np.ndarray], names: List[str],
+                decimals: int = 6) -> List[Tuple]:
+    arrays = []
+    for n in names:
+        a = np.asarray(cols[n])
+        if a.dtype.kind == "f":
+            a = np.round(a, decimals)
+        arrays.append(a.tolist())
+    return sorted(zip(*arrays)) if arrays else []
+
+
+def compare(query: Query, got: Dict[str, np.ndarray], ref) -> None:
+    """Assert engine output `got` matches the pandas reference `ref`
+    (a DataFrame) under the policy in the module docstring."""
+    names = (query.group_by + [a.alias for a in query.aggs]
+             if query.aggs else list(query.select_cols))
+    if not got:
+        # a fully-pruned plan yields zero batches (no columns at all) —
+        # correct only when the reference result is empty too
+        assert len(ref) == 0, \
+            f"engine returned nothing, reference has {len(ref)} rows\n" \
+            f"  {query.sql()}"
+        return
+    for n in names:
+        assert n in got, f"missing output column {n!r} (have {list(got)})"
+    if query.aggs and not query.group_by and len(ref) == 1:
+        # global aggregate over an EMPTY input: SQL says NULL, pandas says
+        # NaN, and this dialect (no NULLs) emits identity sentinels for
+        # MIN/MAX/AVG — only compare the well-defined (COUNT/SUM) outputs
+        names = [n for n in names
+                 if not (isinstance(ref[n].iloc[0], (float, np.floating))
+                         and np.isnan(ref[n].iloc[0]))]
+        if not names:
+            return
+    ref_cols = {n: ref[n].to_numpy() for n in names}
+    q = query.sql()
+
+    if query.limit is not None and query.order_by is not None:
+        ocol, desc = query.order_by
+        n_expected = min(query.limit, len(ref))
+        got_n = len(got[names[0]])
+        assert got_n == n_expected, \
+            f"LIMIT row count {got_n} != {n_expected}\n  {q}"
+        ref_rows = _canon_rows(ref_cols, names)
+        got_rows = _canon_rows(got, names)
+        remaining = list(ref_rows)
+
+        def close(a, b):
+            if isinstance(b, float):
+                return abs(a - b) <= 1e-6 + 1e-6 * abs(b)
+            return a == b
+
+        for row in got_rows:
+            idx = next((i for i, cand in enumerate(remaining)
+                        if all(close(a, b) for a, b in zip(row, cand))), None)
+            assert idx is not None, f"row {row} not in reference\n  {q}"
+            remaining.pop(idx)
+        ref_order = np.sort(np.asarray(ref_cols[ocol]))
+        ref_top = ref_order[::-1][:n_expected] if desc else ref_order[:n_expected]
+        got_order = np.sort(np.asarray(got[ocol]))[::-1] if desc \
+            else np.sort(np.asarray(got[ocol]))
+        assert np.allclose(np.asarray(got_order, np.float64),
+                           np.asarray(ref_top, np.float64)) \
+            if ref_top.dtype.kind in "fiu" else \
+            (got_order.tolist() == ref_top.tolist()), \
+            f"ORDER BY boundary mismatch\n  {q}"
+        return
+
+    got_rows = _canon_rows(got, names)
+    ref_rows = _canon_rows(ref_cols, names)
+    assert len(got_rows) == len(ref_rows), \
+        f"row count {len(got_rows)} != {len(ref_rows)}\n  {q}"
+    for g, r in zip(got_rows, ref_rows):
+        assert len(g) == len(r)
+        for gv, rv, name in zip(g, r, names):
+            if isinstance(rv, float):
+                assert abs(gv - rv) <= 1e-6 + 1e-6 * abs(rv), \
+                    f"{name}: {gv} != {rv}\n  {q}"
+            else:
+                assert gv == rv, f"{name}: {gv!r} != {rv!r}\n  {q}"

@@ -1,0 +1,144 @@
+"""Chaos testing: worker loss at EVERY shuffle boundary of a multi-way join
+(and during the reduce phase), under a SharkServer with concurrent sessions.
+
+A 3-way star join + aggregation crosses several PDE boundaries (one
+pre-shuffle map stage per join decision, one for the aggregate); this suite
+kills a worker right after each one — dropping that worker's cached scan
+partitions AND shuffle map outputs — and asserts:
+
+  * every concurrent client still gets results identical to the
+    failure-free run (lineage recovery, paper §2.3);
+  * shuffle map outputs are released from the shared block store once the
+    queries complete (no leak even when recovery re-materialized them).
+"""
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core import DType, Schema
+from repro.server import SharkServer
+
+pytestmark = pytest.mark.tier1
+
+N_FACT = 15_000
+
+QUERY = ("SELECT sval, COUNT(*) AS c, SUM(rev) AS total FROM fact "
+         "JOIN small_d ON fact.sk = small_d.skey "
+         "JOIN mid_d ON fact.mk = mid_d.mkey "
+         "GROUP BY sval")
+
+
+def _make_server() -> SharkServer:
+    rng = np.random.default_rng(11)
+    srv = SharkServer(num_workers=4, max_threads=4,
+                      enable_result_cache=False,  # every run must execute
+                      max_concurrent_queries=2, default_partitions=6,
+                      default_shuffle_buckets=8)
+    srv.create_table("fact", Schema.of(
+        sk=DType.INT64, mk=DType.INT64, rev=DType.FLOAT64),
+        {"sk": rng.integers(0, 8, N_FACT).astype(np.int64),
+         "mk": rng.integers(0, 300, N_FACT).astype(np.int64),
+         "rev": rng.uniform(0, 10, N_FACT)})
+    srv.create_table("small_d", Schema.of(skey=DType.INT64, sval=DType.INT64),
+                     {"skey": np.arange(8, dtype=np.int64),
+                      "sval": np.arange(8, dtype=np.int64) % 3})
+    srv.create_table("mid_d", Schema.of(mkey=DType.INT64, mval=DType.INT64),
+                     {"mkey": np.arange(300, dtype=np.int64),
+                      "mval": np.arange(300, dtype=np.int64) % 9})
+    return srv
+
+
+def _canon(result) -> dict:
+    out = {}
+    for sval, c, total in zip(result["sval"].tolist(), result["c"].tolist(),
+                              result["total"].tolist()):
+        out[int(sval)] = (int(c), round(float(total), 6))
+    return out
+
+
+def _run_concurrent(srv, n_clients: int = 2):
+    sessions = [srv.session(f"chaos-{i}") for i in range(n_clients)]
+    with ThreadPoolExecutor(max_workers=n_clients) as pool:
+        futs = [pool.submit(lambda s=s: _canon(s.sql_np(QUERY)))
+                for s in sessions]
+        return [f.result(timeout=120) for f in futs]
+
+
+def _assert_shuffles_released(srv):
+    leaked = [k for k in srv.ctx.block_manager.blocks if k[0] == "shuf"]
+    assert not leaked, f"shuffle blocks leaked: {leaked[:5]}"
+
+
+def test_worker_loss_at_each_shuffle_boundary_and_during_reduce():
+    srv = _make_server()
+    try:
+        # ---- failure-free baseline + count this query's shuffle boundaries
+        scheduler = srv.ctx.scheduler
+        orig_map_stage = scheduler.run_map_stage
+        calls = []
+        scheduler.run_map_stage = lambda dep: (calls.append(dep),
+                                               orig_map_stage(dep))[1]
+        baseline = _run_concurrent(srv, n_clients=1)[0]
+        scheduler.run_map_stage = orig_map_stage
+        n_boundaries = len(calls)
+        assert n_boundaries >= 3, \
+            f"expected >=3 map stages (2 joins + aggregate), saw {n_boundaries}"
+        assert baseline, "baseline produced no groups"
+        _assert_shuffles_released(srv)
+
+        def kill_one():
+            w = sorted(scheduler.alive)[0]
+            scheduler.kill_worker(w)
+            scheduler.add_worker()
+
+        # ---- kill a worker right AFTER each shuffle boundary in turn
+        for k in range(n_boundaries):
+            state = {"i": 0}
+            lock = threading.Lock()
+
+            def chaotic_map_stage(dep, _k=k):
+                stats = orig_map_stage(dep)
+                with lock:
+                    fire = state["i"] == _k
+                    state["i"] += 1
+                if fire:
+                    kill_one()
+                return stats
+
+            scheduler.run_map_stage = chaotic_map_stage
+            try:
+                results = _run_concurrent(srv)
+            finally:
+                scheduler.run_map_stage = orig_map_stage
+            for r in results:
+                assert r == baseline, \
+                    f"boundary {k}: result diverged after worker loss"
+            _assert_shuffles_released(srv)
+
+        # ---- kill a worker DURING the reduce (before the result stage)
+        orig_result_stage = scheduler.run_result_stage
+        fired = {"done": False}
+        lock = threading.Lock()
+
+        def chaotic_result_stage(rdd):
+            with lock:
+                fire = not fired["done"]
+                fired["done"] = True
+            if fire:
+                kill_one()
+            return orig_result_stage(rdd)
+
+        scheduler.run_result_stage = chaotic_result_stage
+        try:
+            results = _run_concurrent(srv)
+        finally:
+            scheduler.run_result_stage = orig_result_stage
+        for r in results:
+            assert r == baseline, "reduce-phase worker loss diverged"
+        _assert_shuffles_released(srv)
+        assert scheduler.tasks_recomputed > 0 or scheduler.tasks_launched > 0
+    finally:
+        srv.shutdown()

@@ -1,0 +1,96 @@
+"""Property tests (hypothesis): join-order invariance and ordering-cost
+sanity for 3-table star joins.
+
+  1. Every valid left-deep join order of the same 3-table query produces
+     row-identical results (joins are commutative/associative for inner
+     equi-joins — and PDE's per-boundary strategy choices must not change
+     that).
+  2. The optimizer's chosen order never loses to the WORST order on
+     estimated cost (plan.estimate_plan_cost, the objective order_joins
+     minimizes).
+
+A deterministic single-dataset twin of these properties runs unconditionally
+in tests/test_multiway_join.py; this file explores random data shapes when
+hypothesis is installed.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import DType, Schema, SharkSession
+from repro.core.plan import estimate_plan_cost, optimize
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture(scope="module")
+def sess():
+    s = SharkSession(num_workers=2, max_threads=2, default_partitions=3,
+                     default_shuffle_buckets=4)
+    yield s
+    s.shutdown()
+
+
+def _register(sess, seed: int):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(100, 1500))
+    d1 = int(rng.integers(3, 40))
+    d2 = int(rng.integers(3, 40))
+    sess.create_table("pf", Schema.of(
+        k1=DType.INT64, k2=DType.INT64, rev=DType.FLOAT64),
+        {"k1": rng.integers(0, d1, n).astype(np.int64),
+         "k2": rng.integers(0, d2, n).astype(np.int64),
+         "rev": rng.uniform(0, 10, n)})
+    sess.create_table("pd1", Schema.of(p1=DType.INT64, x1=DType.INT64),
+                      {"p1": np.arange(d1, dtype=np.int64),
+                       "x1": rng.integers(0, 5, d1).astype(np.int64)})
+    sess.create_table("pd2", Schema.of(p2=DType.INT64, x2=DType.INT64),
+                      {"p2": np.arange(d2, dtype=np.int64),
+                       "x2": rng.integers(0, 5, d2).astype(np.int64)})
+
+
+def _orders(sess):
+    """All valid left-deep join orders of pf ⋈ pd1 ⋈ pd2 as frames (each
+    newly attached relation must connect via an equi predicate)."""
+    f, a, b = (lambda: sess.table("pf"), lambda: sess.table("pd1"),
+               lambda: sess.table("pd2"))
+    return [
+        f().join(a(), on=("k1", "p1")).join(b(), on=("k2", "p2")),
+        f().join(b(), on=("k2", "p2")).join(a(), on=("k1", "p1")),
+        a().join(f(), on=("p1", "k1")).join(b(), on=("k2", "p2")),
+        b().join(f(), on=("p2", "k2")).join(a(), on=("k1", "p1")),
+    ]
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(seed=st.integers(0, 2**31 - 1))
+def test_all_join_orders_row_identical(sess, seed):
+    _register(sess, seed)
+    results = []
+    for frame in _orders(sess):
+        out = frame.select("rev", "x1", "x2").to_numpy()
+        rows = sorted(zip(np.round(out["rev"], 9).tolist(),
+                          out["x1"].tolist(), out["x2"].tolist()))
+        results.append(rows)
+    assert all(r == results[0] for r in results[1:]), \
+        "join orders disagree on result rows"
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(seed=st.integers(0, 2**31 - 1))
+def test_chosen_order_never_loses_to_worst(sess, seed):
+    _register(sess, seed)
+    raw_costs = [estimate_plan_cost(fr.logical_plan(), sess.catalog)
+                 for fr in _orders(sess)]
+    chosen_costs = [estimate_plan_cost(fr.optimized_plan(), sess.catalog)
+                    for fr in _orders(sess)]
+    worst = max(raw_costs)
+    for c in chosen_costs:
+        assert c <= worst + 1e-9, \
+            f"optimizer chose cost {c} > worst raw order {worst}"

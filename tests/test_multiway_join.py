@@ -1,0 +1,291 @@
+"""Multi-way joins: cost-based initial ordering, per-boundary PDE
+re-optimization, skew splitting, and SQL/frame plan parity (ISSUE 3).
+
+The star schema used throughout: `fact` (40k rows) referencing dims
+`small_d` (tiny), `mid_d`, `big_d`; `fact.hot` carries a heavy-hitter key
+for the skew tests.
+"""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import DType, Schema, SharkSession, col
+from repro.core.pde import PDEConfig
+from repro.core.plan import (JoinNode, ScanNode, estimate_plan_cost,
+                             explain, optimize, order_joins)
+from repro.core.sql import Binder, parse
+from repro.server.result_cache import plan_fingerprint
+
+pytestmark = pytest.mark.tier1
+
+N_FACT = 40_000
+
+
+@pytest.fixture(scope="module")
+def sess():
+    rng = np.random.default_rng(42)
+    s = SharkSession(num_workers=4, max_threads=4, default_partitions=6,
+                     default_shuffle_buckets=8)
+    hot = rng.integers(0, 200, N_FACT)
+    hot[: N_FACT // 2] = 13          # heavy hitter: half the fact table
+    s.create_table("fact", Schema.of(
+        sk=DType.INT64, mk=DType.INT64, bk=DType.INT64, hot=DType.INT64,
+        rev=DType.FLOAT64),
+        {"sk": rng.integers(0, 8, N_FACT).astype(np.int64),
+         "mk": rng.integers(0, 500, N_FACT).astype(np.int64),
+         "bk": rng.integers(0, 5000, N_FACT).astype(np.int64),
+         "hot": hot.astype(np.int64),
+         "rev": rng.uniform(0, 10, N_FACT)})
+    s.create_table("small_d", Schema.of(skey=DType.INT64, sval=DType.INT64),
+                   {"skey": np.arange(8, dtype=np.int64),
+                    "sval": rng.integers(0, 3, 8).astype(np.int64)})
+    s.create_table("mid_d", Schema.of(mkey=DType.INT64, mval=DType.INT64),
+                   {"mkey": np.arange(500, dtype=np.int64),
+                    "mval": rng.integers(0, 9, 500).astype(np.int64)})
+    s.create_table("big_d", Schema.of(bkey=DType.INT64, bval=DType.INT64),
+                   {"bkey": np.arange(5000, dtype=np.int64),
+                    "bval": rng.integers(0, 7, 5000).astype(np.int64)})
+    yield s
+    s.shutdown()
+
+
+def ref(sess, table):
+    return sess.catalog.get(table).to_dict()
+
+
+def _ref_join_rows(sess, tables_keys):
+    """Reference inner-join row count: fact against listed (dim, fk, pk)."""
+    d = ref(sess, "fact")
+    n = len(d["sk"])
+    mask = np.ones(n, bool)
+    mult = np.ones(n, np.int64)
+    for t, fk, pk in tables_keys:
+        dd = ref(sess, t)
+        cnt = collections.Counter(dd[pk].tolist())
+        mult *= np.array([cnt[v] for v in d[fk].tolist()])
+    return int((mult * mask).sum())
+
+
+THREE_WAY = ("SELECT rev, sval, mval FROM fact "
+             "JOIN small_d ON fact.sk = small_d.skey "
+             "JOIN mid_d ON fact.mk = mid_d.mkey")
+FOUR_WAY = ("SELECT rev, sval, mval, bval FROM fact "
+            "JOIN small_d ON fact.sk = small_d.skey "
+            "JOIN mid_d ON fact.mk = mid_d.mkey "
+            "JOIN big_d ON fact.bk = big_d.bkey")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end correctness, both surfaces, byte-identical plans
+# ---------------------------------------------------------------------------
+
+
+def test_three_way_join_runs_and_matches_reference(sess):
+    r = sess.sql_np(THREE_WAY)
+    expected = _ref_join_rows(sess, [("small_d", "sk", "skey"),
+                                     ("mid_d", "mk", "mkey")])
+    assert len(r["rev"]) == expected
+    assert len(sess.metrics().join_boundaries) == 2
+
+
+def test_four_way_join_runs_and_matches_reference(sess):
+    r = sess.sql_np(FOUR_WAY)
+    expected = _ref_join_rows(sess, [("small_d", "sk", "skey"),
+                                     ("mid_d", "mk", "mkey"),
+                                     ("big_d", "bk", "bkey")])
+    assert len(r["rev"]) == expected
+    assert len(sess.metrics().join_boundaries) == 3
+
+
+@pytest.mark.parametrize("q_sql,frame_fn", [
+    (THREE_WAY, lambda s: (
+        s.table("fact").join("small_d", on=("sk", "skey"))
+         .join("mid_d", on=("mk", "mkey")).select("rev", "sval", "mval"))),
+    (FOUR_WAY, lambda s: (
+        s.table("fact").join("small_d", on=("sk", "skey"))
+         .join("mid_d", on=("mk", "mkey")).join("big_d", on=("bk", "bkey"))
+         .select("rev", "sval", "mval", "bval"))),
+])
+def test_frame_and_sql_emit_byte_identical_plans(sess, q_sql, frame_fn):
+    sql_plan = optimize(sess.plan(q_sql), sess.catalog)
+    frame_plan = frame_fn(sess).optimized_plan()
+    assert explain(sql_plan) == explain(frame_plan)
+    assert (plan_fingerprint(sql_plan, sess.catalog)[0]
+            == plan_fingerprint(frame_plan, sess.catalog)[0])
+
+
+def test_frame_and_sql_parity_with_aggregation(sess):
+    q = ("SELECT sval, SUM(rev) AS total FROM fact "
+         "JOIN small_d ON fact.sk = small_d.skey "
+         "JOIN mid_d ON fact.mk = mid_d.mkey "
+         "WHERE mval > 4 GROUP BY sval")
+    from repro.core import sum_
+    fr = (sess.table("fact").join("small_d", on=("sk", "skey"))
+          .join("mid_d", on=("mk", "mkey")).filter(col("mval") > 4)
+          .group_by("sval").agg(sum_(col("rev")).alias("total")))
+    sql_plan = optimize(sess.plan(q), sess.catalog)
+    assert explain(sql_plan) == explain(fr.optimized_plan())
+    assert (plan_fingerprint(sql_plan, sess.catalog)[0]
+            == plan_fingerprint(fr.optimized_plan(), sess.catalog)[0])
+    # and both execute to the same grouped totals
+    r_sql = sess.sql_np(q)
+    r_frame = fr.to_numpy()
+    assert dict(zip(r_sql["sval"].tolist(), r_sql["total"].tolist())) \
+        == pytest.approx(dict(zip(r_frame["sval"].tolist(),
+                                  r_frame["total"].tolist())))
+
+
+# ---------------------------------------------------------------------------
+# Cost-based initial ordering
+# ---------------------------------------------------------------------------
+
+
+def test_order_joins_puts_smallest_relation_first(sess):
+    # user wrote big_d first; the optimizer should lead with small_d
+    q = ("SELECT rev, sval, bval FROM fact "
+         "JOIN big_d ON fact.bk = big_d.bkey "
+         "JOIN small_d ON fact.sk = small_d.skey")
+    plan = optimize(sess.plan(q), sess.catalog)
+
+    def leftmost(n):
+        while True:
+            if isinstance(n, JoinNode):
+                n = n.left
+            elif hasattr(n, "child"):
+                n = n.child
+            else:
+                return n
+
+    assert isinstance(leftmost(plan), ScanNode)
+    assert leftmost(plan).table == "small_d"
+
+
+def test_order_joins_never_increases_estimated_cost(sess):
+    q = FOUR_WAY
+    raw = sess.plan(q)
+    ordered = optimize(sess.plan(q), sess.catalog)
+    assert (estimate_plan_cost(ordered, sess.catalog)
+            <= estimate_plan_cost(raw, sess.catalog) + 1e-9)
+
+
+def test_all_three_way_orders_row_identical_and_chosen_not_worst(sess):
+    """Deterministic twin of the hypothesis property test: every valid join
+    order of the same 3-table query returns the same rows, and the
+    optimizer's pick never loses to the worst order on estimated cost."""
+    import itertools
+    perms = list(itertools.permutations(
+        [("small_d", "sk", "skey"), ("mid_d", "mk", "mkey")]))
+    counts = set()
+    costs = []
+    for perm in perms:
+        fr = sess.table("fact")
+        for t, fk, pk in perm:
+            fr = fr.join(t, on=(fk, pk))
+        fr = fr.select("rev", "sval", "mval")
+        raw_cost = estimate_plan_cost(fr.logical_plan(), sess.catalog)
+        costs.append(raw_cost)
+        counts.add(fr.count())
+    assert len(counts) == 1, f"join orders disagree on row count: {counts}"
+    chosen = estimate_plan_cost(
+        optimize(sess.plan(THREE_WAY), sess.catalog), sess.catalog)
+    assert chosen <= max(costs) + 1e-9
+
+
+def test_order_joins_prefers_copartitioned_pair(sess):
+    sess.sql("CREATE TABLE cp_a TBLPROPERTIES ('shark.cache'='true') AS "
+             "SELECT mk, rev FROM fact DISTRIBUTE BY mk")
+    sess.sql("CREATE TABLE cp_b TBLPROPERTIES ('shark.cache'='true', "
+             "'copartition'='cp_a') AS SELECT mkey, mval FROM mid_d "
+             "DISTRIBUTE BY mkey")
+    # comma-join form: equi predicates in WHERE, user order big_d first
+    q = ("SELECT rev, mval, bval FROM big_d, cp_a, cp_b "
+         "WHERE cp_a.mk = cp_b.mkey AND big_d.bkey = cp_a.mk")
+    sess.sql_np(q)
+    boundaries = sess.metrics().join_boundaries
+    assert boundaries, "no join boundaries recorded"
+    assert boundaries[0].strategy == "copartition", \
+        sess.metrics().describe_joins()
+
+
+# ---------------------------------------------------------------------------
+# Per-boundary PDE decisions (the acceptance assertions)
+# ---------------------------------------------------------------------------
+
+
+def test_pde_broadcasts_small_build_side_per_boundary(sess):
+    sess.sql_np(FOUR_WAY)
+    m = sess.metrics()
+    assert len(m.join_boundaries) == 3
+    b0 = m.join_boundaries[0]
+    assert b0.strategy == "broadcast", m.describe_joins()
+    # the broadcast build side must be the small one, observed small
+    small_side = min(b0.left_bytes, b0.right_bytes)
+    assert small_side <= PDEConfig().broadcast_threshold_bytes
+    # every dim in this star fits under the threshold: all boundaries
+    # become map joins and the fact side is never pre-shuffled
+    assert all(b.strategy == "broadcast" for b in m.join_boundaries), \
+        m.describe_joins()
+    assert m.shuffled_bytes == 0.0
+
+
+def test_pde_skew_splits_heavy_hitter_key(sess):
+    """Force the shuffle path (tiny broadcast threshold); the hot key's
+    bucket must be split across multiple reducers and the result must still
+    be exact."""
+    s = SharkSession(num_workers=4, max_threads=4, default_partitions=6,
+                     default_shuffle_buckets=8,
+                     pde_config=PDEConfig(broadcast_threshold_bytes=256,
+                                          target_reduce_bytes=32 << 10,
+                                          skew_factor=2.0))
+    rng = np.random.default_rng(7)
+    n = 30_000
+    hot = rng.integers(0, 64, n)
+    hot[: n // 2] = 13
+    s.create_table("l", Schema.of(hk=DType.INT64, lv=DType.FLOAT64),
+                   {"hk": hot.astype(np.int64), "lv": rng.uniform(0, 1, n)})
+    s.create_table("r", Schema.of(rk=DType.INT64, rv=DType.FLOAT64),
+                   {"rk": rng.integers(0, 64, 2000).astype(np.int64),
+                    "rv": rng.uniform(0, 1, 2000)})
+    res = s.sql_np("SELECT lv, rv FROM l JOIN r ON l.hk = r.rk")
+    cnt = collections.Counter(ref(s, "r")["rk"].tolist())
+    expected = sum(cnt[v] for v in ref(s, "l")["hk"].tolist())
+    assert len(res["lv"]) == expected
+    m = s.metrics()
+    assert len(m.join_boundaries) == 1
+    b = m.join_boundaries[0]
+    assert b.strategy == "shuffle", m.describe_joins()
+    assert b.skewed_buckets, "heavy-hitter bucket not detected"
+    assert b.skew_shards >= 2, m.describe_joins()
+    assert 13 in b.hot_keys, f"hot key not in sketch: {b.hot_keys}"
+    s.shutdown()
+
+
+def test_skew_split_left_outer_join_correct():
+    """Outer joins may only stride the preserved side; unmatched left rows
+    must appear exactly once."""
+    s = SharkSession(num_workers=2, max_threads=2, default_partitions=4,
+                     default_shuffle_buckets=4,
+                     pde_config=PDEConfig(broadcast_threshold_bytes=64,
+                                          target_reduce_bytes=8 << 10,
+                                          skew_factor=2.0))
+    rng = np.random.default_rng(3)
+    n = 20_000
+    hot = rng.integers(0, 32, n)
+    hot[: n // 2] = 5
+    hot[n - 50:] = 999           # unmatched keys
+    s.create_table("l", Schema.of(hk=DType.INT64, lv=DType.FLOAT64),
+                   {"hk": hot.astype(np.int64), "lv": rng.uniform(0, 1, n)})
+    s.create_table("r", Schema.of(rk=DType.INT64, rv=DType.FLOAT64),
+                   {"rk": np.arange(32, dtype=np.int64),
+                    "rv": rng.uniform(0, 1, 32)})
+    res = s.sql_np("SELECT lv, rv FROM l LEFT JOIN r ON l.hk = r.rk")
+    assert len(res["lv"]) == n     # every left row exactly once (pk dim)
+    s.shutdown()
+
+
+def test_describe_joins_is_assertable_text(sess):
+    sess.sql_np(THREE_WAY)
+    text = sess.metrics().describe_joins()
+    assert "join#0" in text and "broadcast" in text
