@@ -1,0 +1,148 @@
+"""Compiled vectorized execution vs interpreted operator-at-a-time
+(DESIGN.md §10; paper §6.2.1–6.2.2, where Hive's CPU-boundedness is traced
+to per-row deserialization and interpreted expression evaluators).
+
+TPC-H-micro shapes over one lineitem-like table, each executed under
+``backend="compiled"`` (pipeline segments: fused jit / kernel routes) and
+``backend="numpy"`` (the same segments on the interpreted evaluate() path):
+
+  * scan_filter_project — predicate + arithmetic projection;
+  * filter_agg_fused    — range filter + COUNT/SUM/MIN/MAX: the colscan
+                          kernel shape (XLA-fused on CPU, Pallas on TPU);
+  * filter_agg_dict     — same, filter column dictionary-encoded (the
+                          fused-decode shape: predicate runs on codes);
+  * groupby_small_ndv   — small-NDV group-by (groupby_mxu shape).
+
+Per shape: median wall time per backend, rows/s through the segment, and
+bytes moved into it (from ExecMetrics).  Emits BENCH_exec_engine.json and
+asserts the compiled path beats the interpreted path on the fused
+filter+aggregate shape — the ROADMAP's "fast as the hardware allows" gate.
+
+    PYTHONPATH=src python -m benchmarks.exec_engine \
+        [--rows 1000000] [--json-out BENCH_exec_engine.json] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import DType, Schema, SharkSession
+
+SHAPES = [
+    ("scan_filter_project",
+     "SELECT l_qty * l_price AS rev, l_qty FROM lineitem "
+     "WHERE l_ship BETWEEN 2000 AND 6000"),
+    ("filter_agg_fused",
+     "SELECT COUNT(*) AS c, SUM(l_price) AS s, MIN(l_price) AS mn, "
+     "MAX(l_price) AS mx FROM lineitem WHERE l_ship BETWEEN 2000 AND 6000"),
+    ("filter_agg_dict",
+     "SELECT COUNT(*) AS c, SUM(l_price) AS s FROM lineitem "
+     "WHERE l_tax BETWEEN 0.02 AND 0.06"),
+    ("groupby_small_ndv",
+     "SELECT l_mode, SUM(l_price) AS s, COUNT(*) AS c FROM lineitem "
+     "GROUP BY l_mode"),
+]
+
+ASSERT_SHAPE = "filter_agg_fused"
+
+
+def make_lineitem(rows: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "l_ship": rng.integers(0, 10000, rows).astype(np.int64),
+        "l_qty": rng.integers(1, 50, rows).astype(np.int64),
+        "l_price": rng.uniform(1.0, 100.0, rows),
+        # 9 distinct values: the load task dictionary-encodes this column,
+        # so BETWEEN on it exercises the code-space / fused-decode path
+        "l_tax": rng.choice(np.round(np.linspace(0.0, 0.08, 9), 3), rows),
+        "l_mode": np.array(["AIR", "RAIL", "SHIP", "TRUCK", "MAIL",
+                            "FOB", "REG"])[rng.integers(0, 7, rows)],
+    }
+
+
+SCHEMA = Schema.of(l_ship=DType.INT64, l_qty=DType.INT64,
+                   l_price=DType.FLOAT64, l_tax=DType.FLOAT64,
+                   l_mode=DType.STRING)
+
+
+def _session(backend: str, rows: int, data) -> SharkSession:
+    # few, large partitions: the measurement targets per-row evaluation
+    # cost, not task-scheduling overhead (benchmarks/task_overhead.py
+    # covers that axis)
+    sess = SharkSession(num_workers=4, max_threads=4, default_partitions=4,
+                        default_shuffle_buckets=8, backend=backend)
+    sess.create_table("lineitem", SCHEMA, data)
+    return sess
+
+
+def _time(sess: SharkSession, sql: str, iters: int):
+    sess.sql_np(sql)    # warmup: trace + compile, populate decode caches
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        sess.sql_np(sql)
+        times.append(time.perf_counter() - t0)
+    m = sess.metrics()
+    seg = {"routes": m.segment_routes(),
+           "rows_in": sum(s.rows_in for s in m.segments),
+           "bytes_in": sum(s.bytes_in for s in m.segments)}
+    return float(np.median(times)), seg
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=1_000_000)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    rows = 500_000 if args.quick else args.rows
+    iters = 5 if args.quick else args.iters
+
+    data = make_lineitem(rows)
+    out = {"rows": rows, "shapes": {}}
+    sessions = {b: _session(b, rows, data) for b in ("compiled", "numpy")}
+    try:
+        for name, sql in SHAPES:
+            entry = {}
+            for backend, sess in sessions.items():
+                t, seg = _time(sess, sql, iters)
+                entry[backend] = {
+                    "seconds": t,
+                    "us_per_call": t * 1e6,
+                    "segment_rows_per_s": seg["rows_in"] / t if t else 0.0,
+                    "segment_bytes_in": seg["bytes_in"],
+                    "routes": seg["routes"],
+                }
+            entry["speedup"] = (entry["numpy"]["seconds"]
+                                / max(entry["compiled"]["seconds"], 1e-12))
+            out["shapes"][name] = entry
+            print(f"exec_engine_{name}_compiled,"
+                  f"{entry['compiled']['us_per_call']:.0f},"
+                  f"speedup={entry['speedup']:.2f}x "
+                  f"routes={entry['compiled']['routes']}")
+            print(f"exec_engine_{name}_interpreted,"
+                  f"{entry['numpy']['us_per_call']:.0f},")
+    finally:
+        for sess in sessions.values():
+            sess.shutdown()
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+
+    fused = out["shapes"][ASSERT_SHAPE]
+    assert fused["speedup"] >= 1.0, (
+        f"compiled path lost to interpreted on {ASSERT_SHAPE}: "
+        f"{fused['speedup']:.2f}x")
+    routes = fused["compiled"]["routes"]
+    assert any(r != "numpy" for r in routes), \
+        f"fused shape never took a compiled route: {routes}"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
 # CI entry point: fast deterministic tier-1 tests (includes the SharkFrame
-# API suite and the ~200-query differential oracle), a 2-client smoke of the
+# API suite, the ~200-query dual-backend differential oracle, and the
+# kernels_interpret-marked Pallas-route tests), a 2-client smoke of the
 # concurrent server benchmark (emits BENCH_concurrent.json), the frame-vs-SQL
-# plan-build micro-benchmark (emits BENCH_frame_api.json), and the multi-way
+# plan-build micro-benchmark (emits BENCH_frame_api.json), the multi-way
 # star-join PDE-on/off benchmark (emits BENCH_joins.json; asserts PDE-on
-# beats PDE-off on the skewed star join).
+# beats PDE-off on the skewed star join), and the compiled-vs-interpreted
+# execution benchmark (emits BENCH_exec_engine.json; asserts the fused
+# compiled path beats the interpreted path on the filter+aggregate shape).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -28,3 +31,7 @@ echo "wrote BENCH_frame_api.json"
 echo "== multi-way star join: PDE on/off, uniform + skewed keys =="
 python -m benchmarks.join_bench --quick --json-out BENCH_joins.json
 echo "wrote BENCH_joins.json"
+
+echo "== compiled vectorized execution: compiled vs interpreted =="
+python -m benchmarks.exec_engine --quick --json-out BENCH_exec_engine.json
+echo "wrote BENCH_exec_engine.json"

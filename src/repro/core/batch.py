@@ -28,12 +28,19 @@ class PartitionBatch:
         if not self.cols:
             return 0
         v = next(iter(self.cols.values()))
+        if not v.materialized and v.block is not None:
+            return v.block.n
         return int(np.asarray(v.arr).shape[0])
 
     @property
     def nbytes(self) -> int:
         total = 0
         for v in self.cols.values():
+            if not v.materialized and v.block is not None:
+                # still encoded in the column store: account encoded bytes
+                # rather than forcing a decode just to size the batch
+                total += v.block.nbytes
+                continue
             total += np.asarray(v.arr).nbytes
             if v.sdict is not None:
                 total += v.sdict.nbytes
@@ -90,11 +97,14 @@ class PartitionBatch:
     @staticmethod
     def from_partition(p: Partition, columns: Optional[Sequence[str]] = None
                        ) -> "PartitionBatch":
+        """Block-backed batch: columns stay encoded until something reads
+        `.arr` (memoized decode) — the compiled segment executor evaluates
+        predicates on dictionary codes and may never materialize them."""
         names = list(columns) if columns is not None else list(p.columns)
         out = {}
         for n in names:
             b = p.columns[n]
-            out[n] = ColumnVal(b.values(), b.str_dict, True)
+            out[n] = ColumnVal(None, b.str_dict, True, block=b)
         return PartitionBatch(out)
 
     @staticmethod

@@ -68,6 +68,31 @@ class ColumnBlock:
         """Raw stored values (int32 dictionary codes for STRING columns)."""
         return decode_np(self.enc)
 
+    @property
+    def encoding(self) -> Encoding:
+        return self.enc.encoding
+
+    def code_space(self):
+        """Encoded-aware access for the compiled execution path: when this
+        block's *stored values* are DICT-encoded, return (codes, sorted
+        dictionary) so predicates can be evaluated on int32 codes without
+        decoding — `np.unique` dictionaries are sorted and unique, so code
+        order is value order and range/equality predicates translate to
+        code-bound compares.  Returns None for other encodings (their
+        streams are not order-preserving code streams) and for float
+        dictionaries containing NaN: np.unique sorts NaN to the tail, so a
+        code-bound `>=` would include NaN rows that every value-space
+        comparison excludes."""
+        if self.enc.encoding != Encoding.DICT:
+            return None
+        d = self.enc.dictionary
+        if d.dtype.kind == "f" and len(d) and np.isnan(d[-1]):
+            return None
+        return self.enc.codes, d
+
+    def drop_decoded(self) -> int:
+        return self.enc.drop_decoded()
+
     def decoded(self) -> np.ndarray:
         """Logical values: maps codes through the partition-local string
         dictionary.  Used at shuffle/join/result boundaries where values must
@@ -141,6 +166,14 @@ class Partition:
     def column(self, name: str) -> ColumnBlock:
         return self.columns[name]
 
+    def drop_decoded(self) -> int:
+        """Release all memoized decode caches in this partition."""
+        return sum(b.drop_decoded() for b in self.columns.values())
+
+    @property
+    def decoded_cache_nbytes(self) -> int:
+        return sum(b.enc.decoded_nbytes for b in self.columns.values())
+
     def arrays(self, names: Optional[Sequence[str]] = None) -> Dict[str, np.ndarray]:
         names = names if names is not None else list(self.columns)
         return {n: self.columns[n].values() for n in names}
@@ -183,6 +216,15 @@ class Table:
     @property
     def nbytes(self) -> int:
         return sum(p.nbytes for p in self.partitions)
+
+    def drop_decoded(self) -> int:
+        """Release every partition's memoized decode cache (MemoryManager
+        pressure hook): bytes freed."""
+        return sum(p.drop_decoded() for p in self.partitions)
+
+    @property
+    def decoded_cache_nbytes(self) -> int:
+        return sum(p.decoded_cache_nbytes for p in self.partitions)
 
     def column_np(self, name: str) -> np.ndarray:
         """Materialize a full column, logically decoded (testing / results)."""

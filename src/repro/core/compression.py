@@ -59,6 +59,14 @@ class Encoded:
     bias: int = 0
     n: int = 0
     orig_dtype: Optional[np.dtype] = None
+    # Memoized decode: a query typically touches the same block several
+    # times (scan predicate, then projection, then aggregation argument);
+    # the first decode_np caches here and later calls are free.  The
+    # MemoryManager calls drop_decoded() under cache pressure — the cache
+    # is pure derived state, so dropping it is always safe.
+    _decoded: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    decode_count: int = dataclasses.field(default=0, repr=False, compare=False)
 
     @property
     def nbytes(self) -> int:
@@ -68,6 +76,17 @@ class Encoded:
             if a is not None:
                 total += a.nbytes
         return total
+
+    @property
+    def decoded_nbytes(self) -> int:
+        """Bytes currently held by the memoized decode cache."""
+        return self._decoded.nbytes if self._decoded is not None else 0
+
+    def drop_decoded(self) -> int:
+        """Release the memoized decoded array; returns bytes freed."""
+        freed = self.decoded_nbytes
+        self._decoded = None
+        return freed
 
 
 def _avg_run_length(values: np.ndarray) -> float:
@@ -143,20 +162,30 @@ def encode(values: np.ndarray, encoding: Optional[Encoding] = None) -> Encoded:
 # ---------------------------------------------------------------------------
 
 def decode_np(enc: Encoded) -> np.ndarray:
-    """Host-side decode (ground truth)."""
+    """Host-side decode (ground truth), memoized on the Encoded.
+
+    PLAIN blocks return the stored array directly (no copy, nothing to
+    cache); every other scheme materializes once and caches the result on
+    the block until `drop_decoded()` releases it."""
     if enc.encoding == Encoding.PLAIN:
         return enc.data
+    if enc._decoded is not None:
+        return enc._decoded
+    enc.decode_count += 1
     if enc.encoding == Encoding.DICT:
-        return enc.dictionary[enc.codes]
-    if enc.encoding == Encoding.RLE:
-        return np.repeat(enc.run_values, enc.run_lengths)
-    if enc.encoding == Encoding.BITPACK:
+        out = enc.dictionary[enc.codes]
+    elif enc.encoding == Encoding.RLE:
+        out = np.repeat(enc.run_values, enc.run_lengths)
+    elif enc.encoding == Encoding.BITPACK:
         width, per_word = enc.bit_width, 32 // enc.bit_width
         shifts = (np.arange(per_word, dtype=np.uint32) * width)
         lanes = (enc.words[:, None] >> shifts[None, :]) & np.uint32((1 << width) - 1)
         flat = lanes.reshape(-1)[: enc.n].astype(np.int64) + enc.bias
-        return flat.astype(enc.orig_dtype)
-    raise ValueError(enc.encoding)
+        out = flat.astype(enc.orig_dtype)
+    else:
+        raise ValueError(enc.encoding)
+    enc._decoded = out
+    return out
 
 
 def decode_jnp(enc: Encoded) -> jnp.ndarray:

@@ -210,12 +210,36 @@ def infer_dtype(e: Expr, schema: Schema) -> DType:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
 class ColumnVal:
-    """Evaluated column value: either numeric array, or (codes, dictionary)."""
-    arr: Any                       # np/jnp array (codes for strings)
-    sdict: Optional[np.ndarray] = None  # sorted str dict when string-typed
-    sorted_dict: bool = True       # codes order-preserving w.r.t. strings?
+    """Evaluated column value: either numeric array, or (codes, dictionary).
+
+    May be *block-backed* (the scan path): `block` references the columnar
+    store's ColumnBlock and `arr` materializes lazily through the memoized
+    decode on first access — the compiled pipeline-segment executor reads
+    dictionary codes straight off the block and may never touch `arr` for a
+    filter-only column."""
+
+    __slots__ = ("_arr", "sdict", "sorted_dict", "block")
+
+    def __init__(self, arr: Any = None, sdict: Optional[np.ndarray] = None,
+                 sorted_dict: bool = True, block: Any = None):
+        if arr is None and block is None:
+            raise ValueError("ColumnVal needs an array or a backing block")
+        self._arr = arr
+        self.sdict = sdict          # sorted str dict when string-typed
+        self.sorted_dict = sorted_dict  # codes order-preserving w.r.t. strings?
+        self.block = block          # columnar.ColumnBlock backing (scan path)
+
+    @property
+    def arr(self) -> Any:
+        """np/jnp array (codes for strings); decodes lazily when block-backed."""
+        if self._arr is None:
+            self._arr = self.block.values()
+        return self._arr
+
+    @property
+    def materialized(self) -> bool:
+        return self._arr is not None
 
     @property
     def is_string(self) -> bool:
@@ -225,6 +249,10 @@ class ColumnVal:
         if self.sdict is None:
             return np.asarray(self.arr)
         return self.sdict[np.asarray(self.arr)]
+
+    def __repr__(self):
+        backing = "lazy" if self._arr is None else "materialized"
+        return f"ColumnVal({backing}, string={self.is_string})"
 
 
 class Evaluator:
@@ -400,6 +428,467 @@ def _const(e: Expr):
 
 def evaluate(e: Expr, ctx: Dict[str, ColumnVal], xp=np) -> ColumnVal:
     return Evaluator(ctx, xp).eval(e)
+
+
+# ---------------------------------------------------------------------------
+# Expression compiler (paper §5): `compile_expr(e)` lowers an Expr tree into
+# ONE traceable columnar closure.  Per partition, the host resolves every
+# dictionary-dependent constant (string-literal code bounds, numeric-dict
+# bounds, LENGTH tables) into a flat `consts` tuple; the jitted function is
+# pure array math over (column arrays, consts) and is therefore shared
+# across partitions — XLA emits a single fused vector kernel per segment.
+#
+# `evaluate(..., xp=)` above remains the semantic oracle: the lowering must
+# agree with it bit-for-bit on ints/bools/strings and to rounding on floats
+# (tests/test_compile_expr_property.py).  Anything the lowering cannot
+# express (string-transforming Funcs, unsorted dictionaries, string-vs-
+# string column compares) raises ExprCompileError and the segment executor
+# falls back to the numpy evaluator for that partition — recorded per
+# partition in ExecMetrics.
+# ---------------------------------------------------------------------------
+
+
+class ExprCompileError(Exception):
+    """The expression cannot be lowered to the traced columnar form."""
+
+
+def _x64():
+    from jax.experimental import enable_x64
+    return enable_x64()
+
+
+def literal_compare_columns(*exprs: Expr) -> set:
+    """Columns appearing ONLY as the direct child of a literal comparison
+    (Cmp vs Lit, Between, InList) across all given trees: their predicates
+    can run in dictionary-code space without ever decoding the column."""
+    compare_pos: set = set()
+    value_pos: set = set()
+
+    def walk(n: Expr) -> None:
+        if isinstance(n, Cmp):
+            if isinstance(n.left, Col) and isinstance(n.right, Lit):
+                compare_pos.add(n.left.name)
+                return
+            if isinstance(n.right, Col) and isinstance(n.left, Lit):
+                compare_pos.add(n.right.name)
+                return
+        if isinstance(n, (Between, InList)) and isinstance(n.child, Col):
+            compare_pos.add(n.child.name)
+            return
+        if isinstance(n, Col):
+            value_pos.add(n.name)
+            return
+        for ch in n.children():
+            walk(ch)
+
+    for e in exprs:
+        walk(e)
+    return compare_pos - value_pos
+
+
+@dataclasses.dataclass
+class _Low:
+    """One lowered subtree: fn(env, consts, xp) -> array, plus a tag saying
+    what space the result lives in: ("num",) for plain value arrays,
+    ("str", col) / ("ndict", col) for dictionary codes of `col`."""
+    fn: Callable
+    tag: Tuple
+
+
+_FLIP_CMP = {"=": "=", "!=": "!=", "<": ">", "<=": ">=", ">": "<", ">=": "<="}
+
+
+class _Lowering:
+    def __init__(self, kinds: Dict[str, str]):
+        self.kinds = kinds
+        self.extractors: List[Callable] = []
+
+    def _const_idx(self, f: Callable) -> int:
+        self.extractors.append(f)
+        return len(self.extractors) - 1
+
+    def _bound_idx(self, name: str, kind: str, value, side: str) -> int:
+        """Per-partition searchsorted bound of `value` in the column's
+        sorted dictionary (string dict or numeric DICT-encoding dict)."""
+        if kind == "str":
+            value = str(value)
+
+        def extract(ctx, name=name, kind=kind, value=value, side=side):
+            d = (ctx[name].sdict if kind == "str"
+                 else ctx[name].block.code_space()[1])
+            return np.int64(np.searchsorted(d, value, side=side))
+
+        return self._const_idx(extract)
+
+    @staticmethod
+    def _need_num(low: _Low) -> None:
+        if low.tag[0] != "num":
+            raise ExprCompileError(
+                f"dictionary-coded value used in a value position: {low.tag}")
+
+    # -- dictionary-space comparisons ---------------------------------------
+
+    def _dict_cmp(self, op: str, tag: Tuple, value) -> _Low:
+        kind, name = tag
+        if kind == "str" and not isinstance(value, str):
+            raise ExprCompileError("string column vs non-string literal")
+        if kind == "ndict" and isinstance(value, str):
+            raise ExprCompileError("numeric column vs string literal")
+        lo = self._bound_idx(name, kind, value, "left")
+        ri = self._bound_idx(name, kind, value, "right")
+
+        def fn(env, c, xp, name=name, lo=lo, ri=ri, op=op):
+            a = env[name]
+            if op == "=":
+                return (a >= c[lo]) & (a < c[ri])
+            if op == "!=":
+                return ~((a >= c[lo]) & (a < c[ri]))
+            if op == "<":
+                return a < c[lo]
+            if op == "<=":
+                return a < c[ri]
+            if op == ">":
+                return a >= c[ri]
+            if op == ">=":
+                return a >= c[lo]
+            raise ValueError(op)
+
+        return _Low(fn, ("num",))
+
+    # -- recursive lowering ---------------------------------------------------
+
+    def lower(self, e: Expr) -> _Low:
+        if isinstance(e, Col):
+            name = e.name
+            kind = self.kinds[name]
+            fn = lambda env, c, xp, name=name: env[name]
+            if kind == "str":
+                return _Low(fn, ("str", name))
+            if kind == "ndict":
+                return _Low(fn, ("ndict", name))
+            return _Low(fn, ("num",))
+        if isinstance(e, Lit):
+            v = e.value
+            if isinstance(v, str):
+                raise ExprCompileError("bare string literal")
+            return _Low(lambda env, c, xp, v=v: v, ("num",))
+        if isinstance(e, BinOp):
+            l, r = self.lower(e.left), self.lower(e.right)
+            self._need_num(l)
+            self._need_num(r)
+            op = e.op
+
+            def fn(env, c, xp, l=l, r=r, op=op):
+                a, b = l.fn(env, c, xp), r.fn(env, c, xp)
+                if op == "+":
+                    return a + b
+                if op == "-":
+                    return a - b
+                if op == "*":
+                    return a * b
+                if op == "/":
+                    return (xp.asarray(a, dtype=np.float64) / b
+                            if not np.isscalar(a)
+                            else a / xp.asarray(b, dtype=np.float64))
+                if op == "%":
+                    return a % b
+                raise ValueError(op)
+
+            return _Low(fn, ("num",))
+        if isinstance(e, Cmp):
+            # dictionary-space forms first: the literal child must not be
+            # lowered (string literals only exist as host-resolved bounds)
+            if isinstance(e.right, Lit):
+                l = self.lower(e.left)
+                if l.tag[0] in ("str", "ndict"):
+                    return self._dict_cmp(e.op, l.tag, e.right.value)
+            if isinstance(e.left, Lit):
+                r = self.lower(e.right)
+                if r.tag[0] in ("str", "ndict"):
+                    return self._dict_cmp(_FLIP_CMP[e.op], r.tag,
+                                          e.left.value)
+            l, r = self.lower(e.left), self.lower(e.right)
+            self._need_num(l)
+            self._need_num(r)
+            op = e.op
+
+            def fn(env, c, xp, l=l, r=r, op=op):
+                a, b = l.fn(env, c, xp), r.fn(env, c, xp)
+                if op == "=":
+                    return a == b
+                if op == "!=":
+                    return a != b
+                if op == "<":
+                    return a < b
+                if op == "<=":
+                    return a <= b
+                if op == ">":
+                    return a > b
+                return a >= b
+
+            return _Low(fn, ("num",))
+        if isinstance(e, And):
+            l, r = self.lower(e.left), self.lower(e.right)
+            self._need_num(l)
+            self._need_num(r)
+            return _Low(lambda env, c, xp, l=l, r=r:
+                        l.fn(env, c, xp) & r.fn(env, c, xp), ("num",))
+        if isinstance(e, Or):
+            l, r = self.lower(e.left), self.lower(e.right)
+            self._need_num(l)
+            self._need_num(r)
+            return _Low(lambda env, c, xp, l=l, r=r:
+                        l.fn(env, c, xp) | r.fn(env, c, xp), ("num",))
+        if isinstance(e, Not):
+            ch = self.lower(e.child)
+            self._need_num(ch)
+            return _Low(lambda env, c, xp, ch=ch:
+                        xp.logical_not(ch.fn(env, c, xp)), ("num",))
+        if isinstance(e, InList):
+            ch = self.lower(e.child)
+            if ch.tag[0] in ("str", "ndict"):
+                parts = [self._dict_cmp("=", ch.tag, v) for v in e.values]
+
+                def fn(env, c, xp, parts=parts):
+                    mask = None
+                    for p in parts:
+                        m = p.fn(env, c, xp)
+                        mask = m if mask is None else (mask | m)
+                    return mask
+
+                return _Low(fn, ("num",))
+            self._need_num(ch)
+            values = tuple(e.values)
+            if any(isinstance(v, str) for v in values):
+                raise ExprCompileError("string IN-list on numeric value")
+
+            def fn(env, c, xp, ch=ch, values=values):
+                a = ch.fn(env, c, xp)
+                mask = None
+                for v in values:
+                    m = a == v
+                    mask = m if mask is None else (mask | m)
+                return mask
+
+            return _Low(fn, ("num",))
+        if isinstance(e, Between):
+            ch = self.lower(e.child)
+            if ch.tag[0] in ("str", "ndict"):
+                kind, name = ch.tag
+                lo = self._bound_idx(name, kind, e.lo, "left")
+                ri = self._bound_idx(name, kind, e.hi, "right")
+                return _Low(lambda env, c, xp, name=name, lo=lo, ri=ri:
+                            (env[name] >= c[lo]) & (env[name] < c[ri]),
+                            ("num",))
+            self._need_num(ch)
+            lo, hi = e.lo, e.hi
+            if isinstance(lo, str) or isinstance(hi, str):
+                raise ExprCompileError("string BETWEEN on numeric value")
+            return _Low(lambda env, c, xp, ch=ch, lo=lo, hi=hi:
+                        (lambda a: (a >= lo) & (a <= hi))(ch.fn(env, c, xp)),
+                        ("num",))
+        if isinstance(e, Func):
+            if e.name in STRING_FUNCS:
+                raise ExprCompileError(
+                    f"string function {e.name} (dictionary transform)")
+            if e.name == "LENGTH":
+                ch = self.lower(e.args[0])
+                if ch.tag[0] != "str":
+                    raise ExprCompileError("LENGTH of non-string")
+                name = ch.tag[1]
+
+                def extract(ctx, name=name):
+                    return np.char.str_len(ctx[name].sdict).astype(np.int32)
+
+                li = self._const_idx(extract)
+                return _Low(lambda env, c, xp, name=name, li=li:
+                            xp.asarray(c[li])[env[name]], ("num",))
+            ch = self.lower(e.args[0])
+            self._need_num(ch)
+            fname = e.name
+
+            def fn(env, c, xp, ch=ch, fname=fname):
+                a = ch.fn(env, c, xp)
+                if fname == "ABS":
+                    return xp.abs(a)
+                if fname == "SQRT":
+                    return xp.sqrt(a)
+                if fname == "LOG":
+                    return xp.log(a)
+                if fname == "EXP":
+                    return xp.exp(a)
+                if fname == "FLOOR":
+                    return xp.floor(a)
+                if fname == "CEIL":
+                    return xp.ceil(a)
+                if fname == "YEAR":
+                    return (a // 365.2425 + 1970).astype(np.int32)
+                raise ExprCompileError(fname)
+
+            return _Low(fn, ("num",))
+        raise ExprCompileError(f"cannot lower {type(e).__name__}")
+
+
+@dataclasses.dataclass
+class _ExprPlan:
+    jitfn: Callable
+    extractors: List[Callable]
+    out_str_cols: List[Optional[str]]   # per output: codes of this str col
+
+
+# Compiled plans are shared process-wide, keyed by (expression structure,
+# partition layout signature): two queries with the same predicate shape
+# reuse one jitted function instead of re-tracing — jax.jit caches per
+# function object, so without this every query would recompile.
+_PLAN_CACHE: Dict[Tuple, _ExprPlan] = {}
+_PLAN_CACHE_MAX = 512
+
+
+def _plan_cache_get(key: Tuple) -> Optional[_ExprPlan]:
+    return _PLAN_CACHE.get(key)
+
+
+def _plan_cache_put(key: Tuple, plan: _ExprPlan) -> None:
+    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+        _PLAN_CACHE.clear()     # crude but bounded; plans rebuild on demand
+    _PLAN_CACHE[key] = plan
+
+
+class CompiledExprSet:
+    """Several expressions (a segment's predicate plus its computed
+    projections) lowered through ONE shared lowering and traced into ONE
+    jitted function returning all outputs — the whole segment is a single
+    fused XLA program per partition.
+
+    Lowering is cached per *signature* — the tuple of (column, space)
+    choices, which can differ between partitions because compression is
+    chosen per partition (§3.2) — so every partition with the same layout
+    reuses one compiled function."""
+
+    def __init__(self, exprs: Sequence[Expr]):
+        self.exprs = list(exprs)
+        for e in self.exprs:
+            if not _structurally_compilable(e):
+                raise ExprCompileError("string-transforming function in tree")
+        cols: set = set()
+        for e in self.exprs:
+            cols.update(e.columns())
+        self.cols = sorted(cols)
+        self.code_candidates = literal_compare_columns(*self.exprs)
+        # structural identity for the cross-query plan cache: reprs carry
+        # operators, column names, and literal values
+        self._key = tuple(repr(e) for e in self.exprs)
+        self._plans: Dict[Tuple, _ExprPlan] = {}
+
+    # -- per-partition layout --------------------------------------------------
+
+    def kinds_for(self, ctx: Dict[str, ColumnVal]) -> Dict[str, str]:
+        kinds: Dict[str, str] = {}
+        for name in self.cols:
+            if name not in ctx:
+                raise ExprCompileError(f"unbound column {name!r}")
+            v = ctx[name]
+            if v.is_string:
+                if not v.sorted_dict:
+                    raise ExprCompileError("unsorted string dictionary")
+                kinds[name] = "str"
+            elif (name in self.code_candidates and v.block is not None
+                    and v.block.code_space() is not None):
+                kinds[name] = "ndict"
+            else:
+                kinds[name] = "vals"
+        return kinds
+
+    def _plan_for(self, kinds: Dict[str, str]) -> _ExprPlan:
+        sig = tuple((n, kinds[n]) for n in self.cols)
+        plan = self._plans.get(sig)
+        if plan is not None:
+            return plan
+        cache_key = (self._key, sig)
+        plan = _plan_cache_get(cache_key)
+        if plan is not None:
+            self._plans[sig] = plan
+            return plan
+        import jax
+        import jax.numpy as jnp
+        lowering = _Lowering(kinds)
+        lows: List[_Low] = []
+        out_str_cols: List[Optional[str]] = []
+        for e in self.exprs:
+            low = lowering.lower(e)
+            if low.tag[0] == "str":
+                out_str_cols.append(low.tag[1])
+            elif low.tag[0] == "ndict":
+                # bare numeric-dict column as an output: decode fused at
+                # the boundary (dictionary gather inside the traced fn)
+                name = low.tag[1]
+                di = lowering._const_idx(
+                    lambda ctx, name=name: ctx[name].block.code_space()[1])
+                inner = low
+                low = _Low(lambda env, c, xp, inner=inner, di=di:
+                           xp.asarray(c[di])[inner.fn(env, c, xp)], ("num",))
+                out_str_cols.append(None)
+            else:
+                out_str_cols.append(None)
+            lows.append(low)
+
+        def traced(env, consts, lows=tuple(lows)):
+            return tuple(low.fn(env, consts, jnp) for low in lows)
+
+        plan = _ExprPlan(jax.jit(traced), lowering.extractors, out_str_cols)
+        self._plans[sig] = plan
+        _plan_cache_put(cache_key, plan)
+        return plan
+
+    # -- execution -------------------------------------------------------------
+
+    def __call__(self, ctx: Dict[str, ColumnVal]) -> List[ColumnVal]:
+        kinds = self.kinds_for(ctx)
+        plan = self._plan_for(kinds)
+        env = {}
+        for n in self.cols:
+            if kinds[n] == "ndict":
+                env[n] = np.asarray(ctx[n].block.code_space()[0])
+            else:
+                env[n] = np.asarray(ctx[n].arr)
+        consts = tuple(np.asarray(f(ctx)) for f in plan.extractors)
+        with _x64():
+            outs = plan.jitfn(env, consts)
+        results: List[ColumnVal] = []
+        for out, str_col in zip(outs, plan.out_str_cols):
+            arr = np.asarray(out)
+            if str_col is not None:
+                src = ctx[str_col]
+                results.append(ColumnVal(arr, src.sdict, src.sorted_dict))
+            else:
+                results.append(ColumnVal(arr))
+        return results
+
+
+class CompiledExpr(CompiledExprSet):
+    """`compile_expr(e)`: a one-expression CompiledExprSet returning the
+    single ColumnVal directly."""
+
+    def __init__(self, expr: Expr):
+        super().__init__([expr])
+        self.expr = expr
+
+    def __call__(self, ctx: Dict[str, ColumnVal]) -> ColumnVal:
+        return super().__call__(ctx)[0]
+
+
+def _structurally_compilable(e: Expr) -> bool:
+    if isinstance(e, Func) and e.name in STRING_FUNCS:
+        return False
+    return all(_structurally_compilable(ch) for ch in e.children())
+
+
+def compile_expr(e: Expr) -> CompiledExpr:
+    """Compile an expression to a traced columnar function.  Raises
+    ExprCompileError eagerly for trees the lowering can never express
+    (string-transforming functions); partition-layout-dependent failures
+    surface at call time instead and the caller falls back to evaluate()."""
+    return CompiledExpr(e)
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,20 @@ class PDEConfig:
     max_reducers: int = 4096
     # skew: a bucket this many times the mean is "skewed"
     skew_factor: float = 4.0
+    # -- compiled pipeline segments (DESIGN.md §10) --------------------------
+    # below this row count the jit/XLA dispatch overhead outweighs the fused
+    # kernel: evaluate the partition with the numpy oracle instead
+    segment_min_compiled_rows: int = 64
+    # Pallas kernels (colscan / fused_decode_scan / groupby_mxu) only beat
+    # the generic jitted segment on partitions at least this large
+    segment_kernel_min_rows: int = 4096
+    # group-by keys with more distinct values than this stay on the
+    # sort/segment-sum path (one-hot matmul tiles scale with NDV)
+    segment_groupby_max_ndv: int = 512
+    # Pallas interpret mode on CPU is a correctness tool, not a fast path:
+    # kernels are only routed to on a real TPU unless forced (tests force
+    # this to exercise the kernel route under interpret mode)
+    segment_force_kernels: bool = False
 
 
 @dataclasses.dataclass
@@ -209,6 +223,62 @@ def decide_skew_join(left_stats: StageStats, right_stats: StageStats,
               f"{len(splits)} reducers; {len(skewed)} skewed bucket(s) "
               f"split" + (f" (hot keys {hot[:4]})" if skewed and hot else ""))
     return SkewJoinDecision(splits, skewed, len(splits), hot, reason)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-segment backend selection (DESIGN.md §10).
+#
+# Every pipeline segment executes per partition, and each partition picks
+# its evaluation engine at run time from what the columnar store knows about
+# it: row count, per-column encodings, and group-key NDV — the same
+# piggybacked statistics map pruning uses (§3.3/§3.5).  Pure function of its
+# inputs, so unit-testable and replayable, like the join/parallelism
+# decisions above.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SegmentBackendDecision:
+    route: str        # numpy | jit | colscan | fused_decode_scan | groupby_mxu
+    reason: str
+
+
+def decide_segment_backend(num_rows: int,
+                           kernel_eligible: Optional[str] = None,
+                           group_ndv: Optional[int] = None,
+                           on_tpu: bool = False,
+                           cfg: PDEConfig = PDEConfig()
+                           ) -> SegmentBackendDecision:
+    """Choose how one partition of a pipeline segment executes.
+
+    `kernel_eligible` names the Pallas kernel the segment's shape could
+    lower to (decided by the executor from the plan: range-filter+aggregate
+    -> colscan / fused_decode_scan, small-group aggregate -> groupby_mxu);
+    this function decides whether the partition should actually take it."""
+    if num_rows < cfg.segment_min_compiled_rows:
+        return SegmentBackendDecision(
+            "numpy", f"{num_rows} rows < {cfg.segment_min_compiled_rows} "
+            "compiled threshold")
+    if kernel_eligible is not None:
+        if (kernel_eligible == "groupby_mxu" and group_ndv is not None
+                and group_ndv > cfg.segment_groupby_max_ndv):
+            return SegmentBackendDecision(
+                "jit", f"group NDV {group_ndv} > "
+                f"{cfg.segment_groupby_max_ndv}: sort/segment-sum path")
+        if num_rows < cfg.segment_kernel_min_rows:
+            return SegmentBackendDecision(
+                "jit", f"{num_rows} rows < {cfg.segment_kernel_min_rows} "
+                "kernel threshold")
+        if on_tpu or cfg.segment_force_kernels:
+            return SegmentBackendDecision(
+                kernel_eligible,
+                f"{num_rows} rows, kernel-shaped segment -> "
+                f"{kernel_eligible}"
+                + ("" if on_tpu else " (forced interpret mode)"))
+        return SegmentBackendDecision(
+            "jit", "kernel-shaped but no TPU: Pallas interpret mode is a "
+            "correctness tool, XLA-fused jit is the CPU fast path")
+    return SegmentBackendDecision("jit", f"{num_rows} rows -> fused jit")
 
 
 def likely_small_side(left_hint_bytes: Optional[float],

@@ -29,19 +29,25 @@ from .aggregate import merge_aggregate, partial_aggregate
 from .batch import PartitionBatch
 from .catalog import Catalog
 from .columnar import Table
-from .expr import ColumnVal, Expr, evaluate
+from .expr import (_FLIP_CMP, Between, Cmp, Col, ColumnVal, CompiledExprSet,
+                   Expr, ExprCompileError, Lit, _x64, evaluate,
+                   split_conjuncts)
 from .joins import broadcast_join, join_local
 from .pde import (JoinChoice, PDEConfig, SkewShard, decide_join,
-                  decide_parallelism, decide_skew_join, likely_small_side)
+                  decide_parallelism, decide_segment_backend,
+                  decide_skew_join, likely_small_side)
 from .plan import (AggFunc, AggregateNode, AggSpec, FilterNode, JoinNode,
-                   JoinStrategy, LimitNode, Node, ProjectNode, ScanNode,
-                   SortNode, optimize, required_columns)
+                   JoinStrategy, LimitNode, Node, PipelineSegment,
+                   ProjectNode, ScanNode, SortNode, fold_pipeline, optimize,
+                   required_columns)
 from .pruning import may_match
 from .rdd import (RDD, MapPartitionsRDD, ShuffleDependency, ShuffledRDD,
                   TaskContext, ZipPartitionsRDD)
 from .runtime import SharkContext
 from .shuffle import bucket_by_composite, bucket_by_hash, single_bucket
-from .stats import (HeavyHitterAccumulator, SizeAccumulator, StageStats)
+from .stats import (HeavyHitterAccumulator, SizeAccumulator, StageStats,
+                    block_ndv)
+from .types import DType
 
 
 @dataclasses.dataclass
@@ -92,6 +98,36 @@ class JoinBoundaryDecision:
 
 
 @dataclasses.dataclass
+class SegmentRecord:
+    """Runtime record of ONE PipelineSegment: which logical operators were
+    fused, and — per executed partition — which backend route ran it
+    (`numpy` oracle, generic fused `jit`, or a Pallas kernel).  Updated by
+    worker threads; counters are guarded by the owning runner's lock."""
+    table: str
+    depth: int                      # logical operators folded into the segment
+    consumer: str                   # collect | aggregate | sort | limit
+    outputs: List[str]
+    pred: Optional[str]             # repr of the folded predicate
+    partitions: int = 0
+    rows_in: int = 0
+    rows_out: int = 0
+    bytes_in: float = 0.0
+    routes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    fallbacks: int = 0              # ExprCompileError -> numpy fallbacks
+    kept_code_cols: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def compiled_partitions(self) -> int:
+        return sum(n for r, n in self.routes.items() if r != "numpy")
+
+    def describe(self) -> str:
+        routes = ",".join(f"{r}:{n}" for r, n in sorted(self.routes.items()))
+        return (f"segment[{self.table}->{self.consumer} depth={self.depth}] "
+                f"parts={self.partitions} rows={self.rows_in}->"
+                f"{self.rows_out} routes={{{routes}}}")
+
+
+@dataclasses.dataclass
 class ExecMetrics:
     """Observable decisions, for tests and EXPERIMENTS.md."""
     pruned_partitions: int = 0
@@ -102,11 +138,529 @@ class ExecMetrics:
         default_factory=list)
     shuffled_bytes: float = 0.0
     broadcast_bytes: float = 0.0
+    # compiled vectorized execution (DESIGN.md §10)
+    segments: List[SegmentRecord] = dataclasses.field(default_factory=list)
+    # standalone interpreted filter/project operators, split by whether the
+    # operator chain bottoms out at a table scan (the tentpole invariant:
+    # the scan path never runs interpreted operator-at-a-time)
+    interpreted_ops: int = 0
+    interpreted_scan_ops: int = 0
 
     def describe_joins(self) -> str:
         """One line per join boundary, execution order — the runtime twin of
         the static explain() output."""
         return "\n".join(b.describe() for b in self.join_boundaries)
+
+    def describe_segments(self) -> str:
+        return "\n".join(s.describe() for s in self.segments)
+
+    def segment_routes(self) -> Dict[str, int]:
+        """Aggregate partition counts per backend route across segments."""
+        out: Dict[str, int] = {}
+        for s in self.segments:
+            for r, n in s.routes.items():
+                out[r] = out.get(r, 0) + n
+        return out
+
+    def compiled_partitions(self) -> int:
+        return sum(s.compiled_partitions for s in self.segments)
+
+
+def _on_tpu() -> bool:
+    from ..kernels.ops import on_tpu
+    return on_tpu()
+
+
+_FUSED_COLSCAN_JIT = None
+
+
+def _fused_colscan_fns():
+    """XLA-fused filter+aggregate for the CPU jit route — the same
+    [count, sum, min, max] contract as the Pallas colscan/fused_decode_scan
+    kernels, traced once per process and shared across queries.  float64
+    accumulation, so it matches the numpy oracle to rounding."""
+    global _FUSED_COLSCAN_JIT
+    if _FUSED_COLSCAN_JIT is None:
+        import jax
+        import jax.numpy as jnp
+
+        def scan(f, a, lo, hi):
+            a = a.astype(jnp.float64)
+            mask = (f >= lo) & (f <= hi)
+            cnt = jnp.sum(mask.astype(jnp.float64))
+            s = jnp.sum(jnp.where(mask, a, 0.0))
+            mn = jnp.min(jnp.where(mask, a, jnp.inf))
+            mx = jnp.max(jnp.where(mask, a, -jnp.inf))
+            return jnp.stack([cnt, s, mn, mx])
+
+        def scan_dict(codes, d, a, lo, hi):
+            return scan(d[codes], a, lo, hi)
+
+        _FUSED_COLSCAN_JIT = (jax.jit(scan), jax.jit(scan_dict))
+    return _FUSED_COLSCAN_JIT
+
+
+def _range_of_pred(pred: Optional[Expr], schema) -> Optional[Tuple]:
+    """Normalize a predicate to a single-column closed range (col, lo, hi)
+    when every conjunct is a literal comparison / BETWEEN on ONE numeric
+    column — the shape the fused colscan kernel evaluates.  Strict bounds
+    tighten to closed ones (next representable value / next integer)."""
+    if pred is None:
+        return None
+    col: Optional[str] = None
+    lo, hi = -np.inf, np.inf
+
+    def col_of(name: str) -> bool:
+        nonlocal col
+        if col is None:
+            col = name
+        return col == name
+
+    def is_int(name: str) -> bool:
+        return schema.dtype(name) in (DType.INT32, DType.INT64)
+
+    for c in split_conjuncts(pred):
+        if isinstance(c, Between):
+            if not (isinstance(c.child, Col) and _is_num(c.lo)
+                    and _is_num(c.hi) and col_of(c.child.name)):
+                return None
+            lo, hi = max(lo, c.lo), min(hi, c.hi)
+            continue
+        if not isinstance(c, Cmp):
+            return None
+        if isinstance(c.left, Col) and isinstance(c.right, Lit):
+            name, op, v = c.left.name, c.op, c.right.value
+        elif isinstance(c.right, Col) and isinstance(c.left, Lit):
+            if c.op not in _FLIP_CMP or c.op == "!=":
+                return None
+            name, op, v = c.right.name, _FLIP_CMP[c.op], c.left.value
+        else:
+            return None
+        if not (_is_num(v) and col_of(name)):
+            return None
+        if op == "=":
+            lo, hi = max(lo, v), min(hi, v)
+        elif op == ">=":
+            lo = max(lo, v)
+        elif op == "<=":
+            hi = min(hi, v)
+        elif op == ">":
+            lo = max(lo, float(np.floor(v)) + 1 if is_int(name)
+                     else float(np.nextafter(v, np.inf)))
+        elif op == "<":
+            hi = min(hi, float(np.ceil(v)) - 1 if is_int(name)
+                     else float(np.nextafter(v, -np.inf)))
+        else:
+            return None
+    if col is None or schema.dtype(col) == DType.STRING:
+        return None
+    return col, float(lo), float(hi)
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float, np.integer, np.floating)) \
+        and not isinstance(v, bool)
+
+
+class SegmentRunner:
+    """Executes one PipelineSegment per partition.
+
+    The whole scan→filter→project chain is ONE function of the scan batch:
+      * `jit` route — predicate + computed projections trace into a single
+        jitted columnar program (expr.CompiledExprSet); dictionary-coded
+        columns are evaluated on int32 codes and only decoded at the
+        segment boundary, after the filter, when logical values are needed;
+      * kernel routes — filter+aggregate segments lower to the Pallas
+        colscan / fused_decode_scan kernels, small-group aggregates to
+        groupby_mxu (interpret mode on CPU, float64 accumulation so the
+        oracle parity holds to rounding);
+      * `numpy` route — the evaluate()-based oracle, used for tiny
+        partitions, `backend="numpy"` sessions, and ExprCompileError
+        fallbacks.
+    Per-partition choices are recorded in the shared SegmentRecord."""
+
+    def __init__(self, seg: PipelineSegment, schema, backend: str,
+                 cfg: PDEConfig, record: SegmentRecord):
+        self.seg = seg
+        self.schema = schema              # scan schema (dtype lookups)
+        self.backend = backend
+        self.cfg = cfg
+        self.record = record
+        self._lock = threading.Lock()
+        self._exprset: Optional[CompiledExprSet] = None
+        self._exprset_failed = False
+        self._agg_shape_cache: Dict[Tuple, Optional[Tuple]] = {}
+        # outputs: None = all scan columns pass through
+        self.outputs = seg.exprs
+
+    # -- bookkeeping -----------------------------------------------------------
+
+    def _note(self, route: str, rows_in: int, rows_out: int,
+              bytes_in: float, fallback: bool = False,
+              kept_codes: Sequence[str] = ()) -> None:
+        rec = self.record
+        with self._lock:
+            rec.partitions += 1
+            rec.rows_in += rows_in
+            rec.rows_out += rows_out
+            rec.bytes_in += bytes_in
+            rec.routes[route] = rec.routes.get(route, 0) + 1
+            rec.fallbacks += int(fallback)
+            for n in kept_codes:
+                if n not in rec.kept_code_cols:
+                    rec.kept_code_cols.append(n)
+
+    # -- compiled expression set ----------------------------------------------
+
+    def _computed_exprs(self) -> List[Expr]:
+        exprs: List[Expr] = []
+        if self.seg.pred is not None:
+            exprs.append(self.seg.pred)
+        if self.outputs is not None:
+            exprs.extend(e for _, e in self.outputs
+                         if not isinstance(e, Col))
+        return exprs
+
+    def _get_exprset(self) -> Optional[CompiledExprSet]:
+        if self._exprset_failed:
+            raise ExprCompileError("segment marked uncompilable")
+        if self._exprset is None:
+            exprs = self._computed_exprs()
+            if not exprs:
+                return None
+            try:
+                self._exprset = CompiledExprSet(exprs)
+            except ExprCompileError:
+                self._exprset_failed = True
+                raise
+        return self._exprset
+
+    # -- routes ----------------------------------------------------------------
+
+    def run(self, batch: PartitionBatch) -> PartitionBatch:
+        """Plain narrow segment: filter + project, one fused step."""
+        rows = batch.num_rows
+        nbytes = float(batch.nbytes)
+        if self.backend == "numpy":
+            out = self._run_numpy(batch)
+            self._note("numpy", rows, out.num_rows, nbytes)
+            return out
+        decision = decide_segment_backend(rows, None, None, _on_tpu(),
+                                          self.cfg)
+        if decision.route == "numpy":
+            out = self._run_numpy(batch)
+            self._note("numpy", rows, out.num_rows, nbytes)
+            return out
+        try:
+            out, kept = self._run_jit(batch)
+            self._note("jit", rows, out.num_rows, nbytes, kept_codes=kept)
+            return out
+        except ExprCompileError:
+            self._exprset_failed = True
+            out = self._run_numpy(batch)
+            self._note("numpy", rows, out.num_rows, nbytes, fallback=True)
+            return out
+
+    def _run_numpy(self, batch: PartitionBatch) -> PartitionBatch:
+        """The evaluate()-based oracle — operator semantics identical to the
+        pre-segmentation interpreted executor."""
+        if self.seg.pred is not None:
+            ctx = {n: batch.col(n) for n in batch.names()}
+            mask = np.asarray(evaluate(self.seg.pred, ctx).arr)
+            if mask.ndim == 0:
+                mask = np.full(batch.num_rows, bool(mask))
+            batch = batch.mask(mask)
+        if self.outputs is None:
+            return batch
+        ctx = {n: batch.col(n) for n in batch.names()}
+        out: Dict[str, ColumnVal] = {}
+        for name, e in self.outputs:
+            v = evaluate(e, ctx)
+            arr = v.arr
+            if np.isscalar(arr) or (hasattr(arr, "shape")
+                                    and arr.shape == ()):
+                arr = np.full(batch.num_rows, arr)
+                v = ColumnVal(arr, v.sdict, v.sorted_dict)
+            out[name] = v
+        return PartitionBatch(out)
+
+    def _run_jit(self, batch: PartitionBatch
+                 ) -> Tuple[PartitionBatch, List[str]]:
+        ctx = {n: batch.col(n) for n in batch.names()}
+        exprset = self._get_exprset()
+        results = exprset(ctx) if exprset is not None else []
+        i = 0
+        mask = None
+        if self.seg.pred is not None:
+            mask = np.asarray(results[0].arr)
+            if mask.ndim == 0:
+                mask = np.full(batch.num_rows, bool(mask))
+            i = 1
+        kept: List[str] = []
+        out: Dict[str, ColumnVal] = {}
+        n_out = int(mask.sum()) if mask is not None else batch.num_rows
+        if self.outputs is None:
+            for name in batch.names():
+                out[name] = self._mask_source(batch.col(name), mask, name,
+                                              kept)
+        else:
+            for name, e in self.outputs:
+                if isinstance(e, Col):
+                    out[name] = self._mask_source(batch.col(e.name), mask,
+                                                  name, kept)
+                    continue
+                v = results[i]
+                i += 1
+                arr = v.arr
+                if np.isscalar(arr) or (hasattr(arr, "shape")
+                                        and arr.shape == ()):
+                    out[name] = ColumnVal(np.full(n_out, arr), v.sdict,
+                                          v.sorted_dict)
+                    continue
+                arr = np.asarray(arr)
+                if mask is not None:
+                    arr = arr[mask]
+                out[name] = ColumnVal(arr, v.sdict, v.sorted_dict)
+        return PartitionBatch(out), kept
+
+    def _mask_source(self, v: ColumnVal, mask: Optional[np.ndarray],
+                     out_name: str, kept: List[str]) -> ColumnVal:
+        """Filter a pass-through column.  Strings stay dictionary codes
+        (sdict shared, so a projection that merely renames a dict-encoded
+        column never forces decode); DICT-encoded numerics are filtered in
+        code space and decoded at the boundary (gather after the mask —
+        `dictdecode` fused where logical values are first required)."""
+        if mask is None:
+            return v        # pass through, lazily decoded if never touched
+        if v.is_string:
+            kept.append(out_name)
+            return ColumnVal(np.asarray(v.arr)[mask], v.sdict, v.sorted_dict)
+        if v.block is not None and not v.materialized:
+            cs = v.block.code_space()
+            if cs is not None:
+                codes, d = cs
+                kept.append(out_name)
+                return ColumnVal(d[codes[mask]])
+        return ColumnVal(np.asarray(v.arr)[mask])
+
+    # -- fused aggregation -----------------------------------------------------
+
+    def _source_col(self, name: str) -> Optional[str]:
+        """Scan column behind segment output `name`, if it is a bare Col."""
+        if self.outputs is None:
+            return name if name in self.schema else None
+        for n, e in self.outputs:
+            if n == name:
+                return e.name if isinstance(e, Col) else None
+        return None
+
+    def _agg_kernel_shape(self, group_cols: Sequence[str],
+                          aggs: Sequence[AggSpec]) -> Optional[Tuple]:
+        """Plan-level kernel eligibility of this segment+aggregate shape.
+        Returns ("colscan", filter_col, lo, hi, value_col) or
+        ("groupby_mxu", group_col, value_col) or None."""
+        key = (tuple(group_cols), tuple(id(a) for a in aggs))
+        if key in self._agg_shape_cache:
+            return self._agg_shape_cache[key]
+        shape = self._agg_kernel_shape_uncached(list(group_cols), list(aggs))
+        self._agg_shape_cache[key] = shape
+        return shape
+
+    def _agg_kernel_shape_uncached(self, group_cols, aggs):
+        value_col: Optional[str] = None
+        for a in aggs:
+            if a.func == AggFunc.COUNT_DISTINCT:
+                return None
+            if a.func == AggFunc.COUNT and a.arg is None:
+                continue
+            if a.arg is None or not isinstance(a.arg, Col):
+                return None
+            src = self._source_col(a.arg.name)
+            if src is None or self.schema.dtype(src) == DType.STRING:
+                return None
+            if value_col is None:
+                value_col = src
+            elif value_col != src:
+                return None     # one value column per kernel pass
+        if not group_cols:
+            rng = _range_of_pred(self.seg.pred, self.schema)
+            if rng is None:
+                return None     # the kernel shape is filter+aggregate
+            fcol, lo, hi = rng
+            if value_col is None:
+                value_col = fcol    # COUNT-only: count the filter column
+            return ("colscan", fcol, lo, hi, value_col)
+        if len(group_cols) != 1 or self.seg.pred is not None:
+            return None
+        if any(a.func in (AggFunc.MIN, AggFunc.MAX) for a in aggs):
+            return None     # groupby_mxu produces [sum, count] only
+        gsrc = self._source_col(group_cols[0])
+        if gsrc is None:
+            return None
+        return ("groupby_mxu", gsrc, value_col)
+
+    def run_aggregate(self, batch: PartitionBatch,
+                      group_cols: Sequence[str],
+                      aggs: Sequence[AggSpec]) -> PartitionBatch:
+        """Fused map side of an aggregation: segment + partial aggregate in
+        one step, lowered to a Pallas kernel when the shape and the
+        partition statistics allow."""
+        rows = batch.num_rows
+        nbytes = float(batch.nbytes)
+        if self.backend == "numpy":
+            out = partial_aggregate(self._run_numpy(batch), group_cols, aggs)
+            self._note("numpy", rows, out.num_rows, nbytes)
+            return out
+        shape = self._agg_kernel_shape(group_cols, aggs)
+        ndv = None
+        if shape is not None and shape[0] == "groupby_mxu":
+            gblock = batch.col(shape[1]).block
+            ndv = block_ndv(gblock) if gblock is not None else None
+            if ndv is None:
+                shape = None
+        decision = decide_segment_backend(
+            rows, shape[0] if shape is not None else None, ndv, _on_tpu(),
+            self.cfg)
+        route = decision.route
+        try:
+            if route == "colscan":
+                out, route = self._run_colscan(batch, shape, aggs,
+                                               pallas=True)
+            elif route == "groupby_mxu":
+                out = self._run_groupby(batch, shape, group_cols, aggs, ndv)
+            elif route == "jit":
+                if shape is not None and shape[0] == "colscan":
+                    # CPU fast path: the same fused filter+aggregate as the
+                    # Pallas kernel, as one XLA program — no mask batch is
+                    # ever materialized
+                    out, route = self._run_colscan(batch, shape, aggs,
+                                                   pallas=False)
+                else:
+                    filtered, _ = self._run_jit(batch)
+                    out = partial_aggregate(filtered, group_cols, aggs)
+            else:
+                out = partial_aggregate(self._run_numpy(batch), group_cols,
+                                        aggs)
+        except ExprCompileError:
+            self._exprset_failed = True
+            out = partial_aggregate(self._run_numpy(batch), group_cols, aggs)
+            self._note("numpy", rows, out.num_rows, nbytes, fallback=True)
+            return out
+        self._note(route, rows, out.num_rows, nbytes)
+        return out
+
+    def _acc_dtype(self) -> str:
+        # float32 is the TPU-native accumulator; CPU interpret mode matches
+        # the numpy oracle to rounding with float64
+        return "float32" if _on_tpu() else "float64"
+
+    def _run_colscan(self, batch: PartitionBatch, shape, aggs,
+                     pallas: bool) -> Tuple[PartitionBatch, str]:
+        from ..kernels import ops as kernel_ops
+        _, fcol, lo, hi, vcol = shape
+        fv = batch.col(fcol)
+        vals = np.asarray(batch.col(vcol).arr)
+        coded = (fv.block is not None and not fv.materialized
+                 and fv.block.code_space() is not None)
+        with _x64():
+            if pallas and coded:
+                codes, d = fv.block.code_space()
+                # decode fused into the scan: the filter column is read as
+                # codes, its dictionary gathered inside the kernel
+                res = kernel_ops.fused_decode_scan(
+                    codes, d, vals, lo, hi, acc_dtype=self._acc_dtype())
+                route = "fused_decode_scan"
+            elif pallas:
+                res = kernel_ops.colscan(np.asarray(fv.arr), vals, lo, hi,
+                                         acc_dtype=self._acc_dtype())
+                route = "colscan"
+            elif coded:
+                codes, d = fv.block.code_space()
+                res = _fused_colscan_fns()[1](codes, d, vals,
+                                              np.float64(lo), np.float64(hi))
+                route = "jit-colscan"
+            else:
+                res = _fused_colscan_fns()[0](np.asarray(fv.arr), vals,
+                                              np.float64(lo), np.float64(hi))
+                route = "jit-colscan"
+            res = np.asarray(res)
+        cnt, s, mn, mx = (float(res[0]), float(res[1]), float(res[2]),
+                          float(res[3]))
+        int_sum = np.issubdtype(np.asarray(vals).dtype, np.integer)
+        out: Dict[str, ColumnVal] = {}
+        for spec in aggs:
+            sc = _agg_state_cols(spec)
+            if spec.func == AggFunc.COUNT:
+                out[sc[0]] = ColumnVal(np.array([cnt], np.int64))
+            elif spec.func == AggFunc.SUM:
+                arr = np.array([s], np.int64 if int_sum else np.float64)
+                out[sc[0]] = ColumnVal(arr)
+            elif spec.func == AggFunc.AVG:
+                out[sc[0]] = ColumnVal(np.array([s], np.float64))
+                out[sc[1]] = ColumnVal(np.array([cnt], np.int64))
+            elif spec.func == AggFunc.MIN:
+                out[sc[0]] = ColumnVal(np.array([mn], np.float64))
+            elif spec.func == AggFunc.MAX:
+                out[sc[0]] = ColumnVal(np.array([mx], np.float64))
+            else:
+                raise ExprCompileError(str(spec.func))
+        return PartitionBatch(out), route
+
+    def _run_groupby(self, batch: PartitionBatch, shape, group_cols, aggs,
+                     ndv: int) -> PartitionBatch:
+        from ..kernels import ops as kernel_ops
+        _, gsrc, vcol = shape
+        gv = batch.col(gsrc)
+        if gv.is_string:
+            codes = np.asarray(gv.arr)
+            reps: Optional[np.ndarray] = None      # group i == code i
+            num_groups = len(gv.sdict)
+        else:
+            cs = (gv.block.code_space()
+                  if gv.block is not None and not gv.materialized else None)
+            if cs is not None:
+                codes, reps = cs
+                num_groups = len(reps)
+            else:
+                reps, codes = np.unique(np.asarray(gv.arr),
+                                        return_inverse=True)
+                num_groups = len(reps)
+        vals = (np.asarray(batch.col(vcol).arr) if vcol is not None
+                else np.zeros(batch.num_rows))
+        int_sum = vcol is not None and np.issubdtype(
+            np.asarray(vals).dtype, np.integer)
+        with _x64():
+            res = np.asarray(kernel_ops.groupby_sum(
+                codes, vals, num_groups, acc_dtype=self._acc_dtype()))
+        sums = res[:, 0]
+        cnts = np.round(res[:, 1]).astype(np.int64)
+        sel = cnts > 0      # partial states carry only present groups
+        out: Dict[str, ColumnVal] = {}
+        gname = group_cols[0]
+        if gv.is_string:
+            out[gname] = ColumnVal(
+                np.flatnonzero(sel).astype(np.int32), gv.sdict, True)
+        else:
+            out[gname] = ColumnVal(reps[sel])
+        for spec in aggs:
+            sc = _agg_state_cols(spec)
+            if spec.func == AggFunc.COUNT:
+                out[sc[0]] = ColumnVal(cnts[sel])
+            elif spec.func == AggFunc.SUM:
+                arr = (np.round(sums[sel]).astype(np.int64) if int_sum
+                       else sums[sel].astype(np.float64))
+                out[sc[0]] = ColumnVal(arr)
+            elif spec.func == AggFunc.AVG:
+                out[sc[0]] = ColumnVal(sums[sel].astype(np.float64))
+                out[sc[1]] = ColumnVal(cnts[sel])
+            else:
+                raise ExprCompileError(str(spec.func))
+        return PartitionBatch(out)
+
+
+def _agg_state_cols(spec: AggSpec) -> List[str]:
+    from .aggregate import _state_cols
+    return _state_cols(spec)
 
 
 class JoinShuffledRDD(RDD):
@@ -204,7 +758,9 @@ class Executor:
                  pde: PDEConfig = PDEConfig(), enable_pde: bool = True,
                  enable_map_pruning: bool = True,
                  default_shuffle_buckets: int = 64,
-                 scan_cache: Optional[ScanCache] = None):
+                 scan_cache: Optional[ScanCache] = None,
+                 backend: str = "compiled"):
+        assert backend in ("compiled", "numpy"), backend
         self.ctx = ctx
         self.catalog = catalog
         self.pde = pde
@@ -212,6 +768,9 @@ class Executor:
         self.enable_map_pruning = enable_map_pruning
         self.default_shuffle_buckets = default_shuffle_buckets
         self.scan_cache = scan_cache
+        # "compiled": pipeline segments pick jit/Pallas routes per partition;
+        # "numpy": segments run the evaluate() oracle (differential testing)
+        self.backend = backend
         # shuffle ids this executor created: the server releases their map
         # outputs from the block store once the query completes
         self.created_shuffles: List[int] = []
@@ -237,6 +796,10 @@ class Executor:
     def _compile(self, node: Node) -> Compiled:
         if isinstance(node, ScanNode):
             return self._compile_scan(node, pred=None)
+        if isinstance(node, (FilterNode, ProjectNode)):
+            seg = fold_pipeline(node)
+            if seg is not None:
+                return self._compile_segment(seg)
         if isinstance(node, FilterNode):
             return self._compile_filter(node)
         if isinstance(node, ProjectNode):
@@ -273,8 +836,56 @@ class Executor:
                         scan_filtered=pred is not None,
                         size_hint=float(table.nbytes))
 
+    # -- compiled pipeline segments (DESIGN.md §10) ---------------------------
+
+    def _make_runner(self, seg: PipelineSegment, consumer: str
+                     ) -> Tuple[Compiled, SegmentRunner]:
+        """Compile the scan under a segment (map pruning against the folded
+        predicate, §3.5) and build its per-partition runner + metrics
+        record."""
+        scanc = self._compile_scan(seg.scan, seg.pred)
+        record = SegmentRecord(
+            table=seg.scan.table, depth=seg.depth, consumer=consumer,
+            outputs=seg.output_names(self.catalog),
+            pred=repr(seg.pred) if seg.pred is not None else None)
+        self.metrics.segments.append(record)
+        runner = SegmentRunner(seg, seg.scan.schema(self.catalog),
+                               self.backend, self.pde, record)
+        return scanc, runner
+
+    def _segment_source_rdd(self, scanc: Compiled, seg: PipelineSegment,
+                            ensure_nonempty: bool) -> RDD:
+        """The scan RDD a segment maps over; blocking consumers (aggregate /
+        sort / limit) need at least one partition even when map pruning
+        refuted all of them, so substitute a zero-row scan-schema batch."""
+        if scanc.rdd.num_partitions > 0 or not ensure_nonempty:
+            return scanc.rdd
+        schema = seg.scan.schema(self.catalog)
+        return self.ctx.parallelize([_empty_batch(list(schema.names),
+                                                  schema)])
+
+    def _compile_segment(self, seg: PipelineSegment,
+                         consumer: str = "collect") -> Compiled:
+        scanc, runner = self._make_runner(seg, consumer)
+        rdd = scanc.rdd.map_partitions(lambda s, b: runner.run(b))
+        return Compiled(rdd, seg.output_names(self.catalog), None,
+                        seg.pred is not None, scanc.size_hint)
+
+    # -- interpreted operators (only ever above shuffle boundaries now) -------
+
+    def _note_interpreted(self, node: Node) -> None:
+        self.metrics.interpreted_ops += 1
+        n = node
+        while isinstance(n, (FilterNode, ProjectNode)):
+            n = n.child
+        if isinstance(n, ScanNode):
+            # the tentpole invariant: this must never happen — scan-path
+            # chains always fold into a PipelineSegment
+            self.metrics.interpreted_scan_ops += 1
+
     def _compile_filter(self, node: FilterNode) -> Compiled:
         pred = node.pred
+        self._note_interpreted(node)
         if isinstance(node.child, ScanNode):
             child = self._compile_scan(node.child, pred)
         else:
@@ -291,6 +902,7 @@ class Executor:
         return Compiled(rdd, child.names, None, True, child.size_hint)
 
     def _compile_project(self, node: ProjectNode) -> Compiled:
+        self._note_interpreted(node)
         child = self._compile(node.child)
         exprs = node.exprs
 
@@ -326,16 +938,28 @@ class Executor:
     # -- aggregation ---------------------------------------------------------
 
     def _compile_aggregate(self, node: AggregateNode) -> Compiled:
-        child = self._materialize_empty(self._compile(node.child), node.child)
         group_cols = node.group_by
         aggs = node.aggs
         names = group_cols + [a.out_name for a in aggs]
 
-        def map_side(split: int, batch: PartitionBatch) -> PartitionBatch:
-            return partial_aggregate(batch, group_cols, aggs)
+        seg = fold_pipeline(node.child)
+        if seg is not None:
+            # fused map side: scan→filter→project→partial-aggregate is ONE
+            # function per partition, kernel-lowered when the shape allows
+            scanc, runner = self._make_runner(seg, "aggregate")
+            src = self._segment_source_rdd(scanc, seg, ensure_nonempty=True)
+            map_rdd = src.map_partitions(
+                lambda s, b: runner.run_aggregate(b, group_cols, aggs)
+            ).map_partitions(lambda s, b: b.decode_strings())
+        else:
+            child = self._materialize_empty(self._compile(node.child),
+                                            node.child)
 
-        map_rdd = child.rdd.map_partitions(map_side).map_partitions(
-            lambda s, b: b.decode_strings())
+            def map_side(split: int, batch: PartitionBatch) -> PartitionBatch:
+                return partial_aggregate(batch, group_cols, aggs)
+
+            map_rdd = child.rdd.map_partitions(map_side).map_partitions(
+                lambda s, b: b.decode_strings())
 
         if not group_cols:
             partitioner = single_bucket()
@@ -601,18 +1225,37 @@ class Executor:
     # -- sort / limit ----------------------------------------------------------
 
     def _compile_sort(self, node: SortNode, limit: Optional[int]) -> Compiled:
-        child = self._materialize_empty(self._compile(node.child), node.child)
         keys = node.keys
+        seg = fold_pipeline(node.child)
+        if seg is not None:
+            # fused sort prefix: segment + per-partition top-k in one step
+            scanc, runner = self._make_runner(seg, "sort")
+            src = self._segment_source_rdd(scanc, seg, ensure_nonempty=True)
+            names = seg.output_names(self.catalog)
 
-        def local_sort(split: int, batch: PartitionBatch) -> PartitionBatch:
-            idx = _sort_indices(batch, keys)
-            if limit is not None:
-                idx = idx[:limit]
-            return batch.take(idx)
+            def seg_sort(split: int, batch: PartitionBatch) -> PartitionBatch:
+                b = runner.run(batch)
+                idx = _sort_indices(b, keys)
+                if limit is not None:
+                    idx = idx[:limit]
+                return b.take(idx)
 
-        # per-partition top-k, then single merge task (ORDER BY ... LIMIT)
-        map_rdd = child.rdd.map_partitions(local_sort).map_partitions(
-            lambda s, b: b.decode_strings())
+            map_rdd = src.map_partitions(seg_sort).map_partitions(
+                lambda s, b: b.decode_strings())
+            child = Compiled(map_rdd, names)
+        else:
+            child = self._materialize_empty(self._compile(node.child),
+                                            node.child)
+
+            def local_sort(split: int, batch: PartitionBatch) -> PartitionBatch:
+                idx = _sort_indices(batch, keys)
+                if limit is not None:
+                    idx = idx[:limit]
+                return batch.take(idx)
+
+            # per-partition top-k, then single merge task (ORDER BY ... LIMIT)
+            map_rdd = child.rdd.map_partitions(local_sort).map_partitions(
+                lambda s, b: b.decode_strings())
         dep = self._new_shuffle(map_rdd, 1, single_bucket(),
                                 accumulators=lambda: [SizeAccumulator(1)])
         self.ctx.scheduler.run_map_stage(dep)
@@ -629,11 +1272,20 @@ class Executor:
     def _compile_limit(self, node: LimitNode) -> Compiled:
         if isinstance(node.child, SortNode):
             return self._compile_sort(node.child, node.n)
-        child = self._materialize_empty(self._compile(node.child), node.child)
         n = node.n
+        seg = fold_pipeline(node.child)
+        if seg is not None:
+            # fused pushed-down limit: segment + head(n) in one step
+            scanc, runner = self._make_runner(seg, "limit")
+            src = self._segment_source_rdd(scanc, seg, ensure_nonempty=True)
+            head_rdd = src.map_partitions(lambda s, b: runner.run(b).head(n))
+            child = Compiled(head_rdd, seg.output_names(self.catalog))
+        else:
+            child = self._materialize_empty(self._compile(node.child),
+                                            node.child)
 
-        # §2.4: LIMIT pushed to individual partitions, final limit at collect
-        head_rdd = child.rdd.map_partitions(lambda s, b: b.head(n))
+            # §2.4: LIMIT pushed to partitions, final limit at collect
+            head_rdd = child.rdd.map_partitions(lambda s, b: b.head(n))
 
         # wrap as a one-partition RDD via shuffle to a single bucket
         dep = self._new_shuffle(

@@ -574,6 +574,67 @@ def _schema_names_safe(node: Node, catalog) -> Tuple[str, ...]:
         return ()
 
 
+# ---------------------------------------------------------------------------
+# Pipeline segmentation (paper §2.4 narrow-chain pipelining + §5 compiled
+# evaluators).  A *physical-layer* pass: the logical plan, explain() output
+# and plan fingerprints are untouched — segmentation only describes how the
+# executor will run a maximal scan→filter→project chain, namely as ONE
+# compiled columnar function per partition instead of one interpreted
+# operator at a time.  Filters and projections are folded into scan-column
+# terms by substituting column references through intervening projections
+# (the same rewrite predicate pushdown uses), so the segment is fully
+# described by (scan, one conjunctive predicate, one output projection).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PipelineSegment:
+    """One maximal narrow chain over a scan, in scan-column terms."""
+    scan: ScanNode
+    pred: Optional[Expr]                        # conjunction, or None
+    exprs: Optional[List[Tuple[str, Expr]]]     # None = all scan columns
+    depth: int = 0                              # logical operators folded
+
+    def output_names(self, catalog) -> List[str]:
+        if self.exprs is None:
+            return list(self.scan.schema(catalog).names)
+        return [n for n, _ in self.exprs]
+
+
+def fold_pipeline(node: Node) -> Optional[PipelineSegment]:
+    """Fold a scan→filter→project chain into a PipelineSegment, or None if
+    `node` is not such a chain (joins, aggregates, sorts, limits and other
+    blocking/wide operators terminate the chain)."""
+    if isinstance(node, ScanNode):
+        return PipelineSegment(node, None, None, 0)
+    if isinstance(node, FilterNode):
+        seg = fold_pipeline(node.child)
+        if seg is None:
+            return None
+        pred = node.pred
+        if seg.exprs is not None:
+            mapping = {n: e for n, e in seg.exprs}
+            if not all(c in mapping for c in pred.columns()):
+                return None
+            pred = _substitute(pred, mapping)
+        merged = pred if seg.pred is None else And(seg.pred, pred)
+        return dataclasses.replace(seg, pred=merged, depth=seg.depth + 1)
+    if isinstance(node, ProjectNode):
+        seg = fold_pipeline(node.child)
+        if seg is None:
+            return None
+        if seg.exprs is None:
+            exprs = list(node.exprs)
+        else:
+            mapping = {n: e for n, e in seg.exprs}
+            if not all(c in mapping
+                       for _, e in node.exprs for c in e.columns()):
+                return None
+            exprs = [(n, _substitute(e, mapping)) for n, e in node.exprs]
+        return dataclasses.replace(seg, exprs=exprs, depth=seg.depth + 1)
+    return None
+
+
 def explain(node: Node, indent: int = 0) -> str:
     pad = "  " * indent
     lines = [pad + repr(node)]

@@ -254,6 +254,24 @@ def table_column_ndv(table, col: str) -> Optional[int]:
     return len(union) if union else None
 
 
+def block_ndv(block) -> Optional[int]:
+    """Distinct-value count of one partition's column block, from what the
+    store already holds: the string dictionary, the DICT-encoding
+    dictionary, or the piggybacked distinct set (§3.3).  None when unknown
+    — the caller (compiled-segment backend selection) then avoids the
+    one-hot-matmul group-by, whose tile width scales with NDV."""
+    sd = getattr(block, "str_dict", None)
+    if sd is not None:
+        return len(sd)
+    enc = getattr(block, "enc", None)
+    if enc is not None and getattr(enc, "dictionary", None) is not None:
+        return len(enc.dictionary)
+    stats = getattr(block, "stats", None)
+    if stats is not None and stats.distinct is not None:
+        return len(stats.distinct)
+    return None
+
+
 def surviving_partition_fraction(table, pred) -> float:
     """Fraction of partitions whose piggybacked stats could satisfy `pred`
     (the same refutation test map pruning uses, §3.5) — a second, data-aware

@@ -29,12 +29,13 @@ LANES = 128  # partial-result row width (TPU lane count)
 
 def _colscan_kernel(filt_ref, agg_ref, bounds_ref, out_ref):
     """One grid step: reduce a row tile to [count, sum, min, max] lanes."""
+    dt = out_ref.dtype
     lo = bounds_ref[0]
     hi = bounds_ref[1]
     f = filt_ref[...]
-    a = agg_ref[...].astype(jnp.float32)
+    a = agg_ref[...].astype(dt)
     mask = (f >= lo) & (f <= hi)
-    cnt = jnp.sum(mask.astype(jnp.float32))
+    cnt = jnp.sum(mask.astype(dt))
     s = jnp.sum(jnp.where(mask, a, 0.0))
     mn = jnp.min(jnp.where(mask, a, jnp.inf))
     mx = jnp.max(jnp.where(mask, a, -jnp.inf))
@@ -43,26 +44,32 @@ def _colscan_kernel(filt_ref, agg_ref, bounds_ref, out_ref):
                     jnp.where(lane == 1, s,
                               jnp.where(lane == 2, mn,
                                         jnp.where(lane == 3, mx, 0.0))))
-    out_ref[...] = row
+    out_ref[...] = row.astype(dt)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows",
+                                             "acc_dtype"))
 def colscan(filter_col: jnp.ndarray, agg_col: jnp.ndarray,
             lo, hi, *, interpret: bool = False,
-            block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+            block_rows: int = BLOCK_ROWS,
+            acc_dtype: str = "float32") -> jnp.ndarray:
     """Returns [count, sum, min, max] over rows with lo <= filter_col <= hi.
 
-    Inputs are padded to a whole number of tiles; the pad region is excluded
-    by forcing the filter column outside [lo, hi] there.
+    Inputs are padded to a whole number of tiles; the pad region is filled
+    with NaN in the filter column, which fails BOTH bound comparisons — so
+    padding is excluded even for one-sided ranges where lo or hi is ±inf
+    (an inf fill would satisfy `f <= inf`).  `acc_dtype` is the
+    accumulation dtype: float32 on TPU (MXU/VPU-native), float64 when the
+    engine runs the kernel in interpret mode on CPU and must match the
+    numpy oracle to rounding.
     """
+    dt = jnp.dtype(acc_dtype)
     n = filter_col.shape[0]
     num_blocks = max(1, -(-n // block_rows))
     padded = num_blocks * block_rows
-    f = jnp.full((padded,), jnp.inf, jnp.float32).at[:n].set(
-        filter_col.astype(jnp.float32))
-    a = jnp.zeros((padded,), jnp.float32).at[:n].set(
-        agg_col.astype(jnp.float32))
-    bounds = jnp.asarray([lo, hi], jnp.float32)
+    f = jnp.full((padded,), jnp.nan, dt).at[:n].set(filter_col.astype(dt))
+    a = jnp.zeros((padded,), dt).at[:n].set(agg_col.astype(dt))
+    bounds = jnp.asarray([lo, hi], dt)
 
     partials = pl.pallas_call(
         _colscan_kernel,
@@ -73,7 +80,7 @@ def colscan(filter_col: jnp.ndarray, agg_col: jnp.ndarray,
             pl.BlockSpec((2,), lambda i: (0,)),  # bounds replicated per tile
         ],
         out_specs=pl.BlockSpec((1, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_blocks, LANES), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, LANES), dt),
         interpret=interpret,
     )(f, a, bounds)
 

@@ -110,12 +110,13 @@ def rle_decode(run_values: jnp.ndarray, run_ends: jnp.ndarray, *, n: int,
 
 def _fused_decode_scan_kernel(codes_ref, dict_ref, agg_ref, bounds_ref,
                               out_ref):
+    dt = out_ref.dtype
     lo = bounds_ref[0]
     hi = bounds_ref[1]
-    vals = dict_ref[codes_ref[...]].astype(jnp.float32)
-    a = agg_ref[...].astype(jnp.float32)
+    vals = dict_ref[codes_ref[...]].astype(dt)
+    a = agg_ref[...].astype(dt)
     mask = (vals >= lo) & (vals <= hi)
-    cnt = jnp.sum(mask.astype(jnp.float32))
+    cnt = jnp.sum(mask.astype(dt))
     s = jnp.sum(jnp.where(mask, a, 0.0))
     mn = jnp.min(jnp.where(mask, a, jnp.inf))
     mx = jnp.max(jnp.where(mask, a, -jnp.inf))
@@ -124,27 +125,31 @@ def _fused_decode_scan_kernel(codes_ref, dict_ref, agg_ref, bounds_ref,
                              jnp.where(lane == 1, s,
                                        jnp.where(lane == 2, mn,
                                                  jnp.where(lane == 3, mx,
-                                                           0.0))))
+                                                           0.0)))).astype(dt)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+@functools.partial(jax.jit, static_argnames=("interpret", "block",
+                                             "acc_dtype"))
 def fused_decode_scan(codes: jnp.ndarray, dictionary: jnp.ndarray,
                       agg_col: jnp.ndarray, lo, hi, *,
-                      interpret: bool = False, block: int = BLOCK
-                      ) -> jnp.ndarray:
+                      interpret: bool = False, block: int = BLOCK,
+                      acc_dtype: str = "float32") -> jnp.ndarray:
     """Compressed (dict-coded) filter column + plain aggregate column ->
-    [count, sum, min, max]; decode fused into the scan."""
+    [count, sum, min, max]; decode fused into the scan.  `acc_dtype` is
+    float32 on TPU; the engine passes float64 in CPU interpret mode to
+    match the numpy oracle to rounding."""
+    dt = jnp.dtype(acc_dtype)
     n = codes.shape[0]
     d = dictionary.shape[0]
     num_blocks = max(1, -(-n // block))
     padded = num_blocks * block
-    # pad codes with an out-of-range sentinel value appended to the dict
-    dict_pad = jnp.concatenate([dictionary.astype(jnp.float32),
-                                jnp.asarray([jnp.inf], jnp.float32)])
+    # pad codes with a sentinel appended to the dict; NaN fails both bound
+    # comparisons, so padding stays excluded even when lo or hi is ±inf
+    dict_pad = jnp.concatenate([dictionary.astype(dt),
+                                jnp.asarray([jnp.nan], dt)])
     c = jnp.full((padded,), d, jnp.int32).at[:n].set(codes.astype(jnp.int32))
-    a = jnp.zeros((padded,), jnp.float32).at[:n].set(
-        agg_col.astype(jnp.float32))
-    bounds = jnp.asarray([lo, hi], jnp.float32)
+    a = jnp.zeros((padded,), dt).at[:n].set(agg_col.astype(dt))
+    bounds = jnp.asarray([lo, hi], dt)
     partials = pl.pallas_call(
         _fused_decode_scan_kernel,
         grid=(num_blocks,),
@@ -153,7 +158,7 @@ def fused_decode_scan(codes: jnp.ndarray, dictionary: jnp.ndarray,
                   pl.BlockSpec((block,), lambda i: (i,)),
                   pl.BlockSpec((2,), lambda i: (0,))],
         out_specs=pl.BlockSpec((1, 128), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_blocks, 128), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, 128), dt),
         interpret=interpret,
     )(c, dict_pad, a, bounds)
     return jnp.stack([jnp.sum(partials[:, 0]), jnp.sum(partials[:, 1]),

@@ -27,35 +27,39 @@ BLOCK_ROWS = 1024
 
 
 def _groupby_kernel(codes_ref, vals_ref, out_ref, *, num_groups_padded: int):
+    dt = out_ref.dtype
     codes = codes_ref[...]
-    vals = vals_ref[...].astype(jnp.float32)
+    vals = vals_ref[...].astype(dt)
     groups = jax.lax.broadcasted_iota(jnp.int32, (1, num_groups_padded), 1)
-    onehot = (codes[:, None] == groups).astype(jnp.float32)  # (B, Gp)
+    onehot = (codes[:, None] == groups).astype(dt)  # (B, Gp)
     stacked = jnp.stack([vals, jnp.ones_like(vals)], axis=0)  # (2, B)
     out_ref[...] = (stacked @ onehot)[None]  # (1, 2, Gp) on the MXU
 
 
 @functools.partial(jax.jit, static_argnames=("num_groups", "interpret",
-                                             "block_rows"))
+                                             "block_rows", "acc_dtype"))
 def groupby_sum(codes: jnp.ndarray, values: jnp.ndarray, *, num_groups: int,
                 interpret: bool = False,
-                block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
-    """Returns (num_groups, 2): per-group [sum, count]."""
+                block_rows: int = BLOCK_ROWS,
+                acc_dtype: str = "float32") -> jnp.ndarray:
+    """Returns (num_groups, 2): per-group [sum, count].  `acc_dtype` is
+    float32 on TPU (MXU-native); the engine passes float64 in interpret
+    mode on CPU to match the numpy oracle to rounding."""
+    dt = jnp.dtype(acc_dtype)
     n = codes.shape[0]
     gp = max(128, -(-num_groups // 128) * 128)
     num_blocks = max(1, -(-n // block_rows))
     padded = num_blocks * block_rows
     # pad codes to an out-of-range group so padding contributes nothing
     c = jnp.full((padded,), gp, jnp.int32).at[:n].set(codes.astype(jnp.int32))
-    v = jnp.zeros((padded,), jnp.float32).at[:n].set(
-        values.astype(jnp.float32))
+    v = jnp.zeros((padded,), dt).at[:n].set(values.astype(dt))
     partials = pl.pallas_call(
         functools.partial(_groupby_kernel, num_groups_padded=gp),
         grid=(num_blocks,),
         in_specs=[pl.BlockSpec((block_rows,), lambda i: (i,)),
                   pl.BlockSpec((block_rows,), lambda i: (i,))],
         out_specs=pl.BlockSpec((1, 2, gp), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_blocks, 2, gp), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, 2, gp), dt),
         interpret=interpret,
     )(c, v)
     summed = jnp.sum(partials, axis=0)  # (2, gp)

@@ -30,10 +30,11 @@ def _interp() -> bool:
     return not on_tpu()
 
 
-def colscan(filter_col, agg_col, lo, hi):
+def colscan(filter_col, agg_col, lo, hi, acc_dtype: str = "float32"):
     """[count, sum, min, max] of agg_col where lo <= filter_col <= hi."""
     return _colscan.colscan(jnp.asarray(filter_col), jnp.asarray(agg_col),
-                            lo, hi, interpret=_interp())
+                            lo, hi, interpret=_interp(),
+                            acc_dtype=acc_dtype)
 
 
 def dict_decode(codes, dictionary):
@@ -51,13 +52,15 @@ def rle_decode(run_values, run_ends, n: int):
                           n=n, interpret=_interp())
 
 
-def fused_decode_scan(codes, dictionary, agg_col, lo, hi):
+def fused_decode_scan(codes, dictionary, agg_col, lo, hi,
+                      acc_dtype: str = "float32"):
     return _dd.fused_decode_scan(jnp.asarray(codes), jnp.asarray(dictionary),
                                  jnp.asarray(agg_col), lo, hi,
-                                 interpret=_interp())
+                                 interpret=_interp(), acc_dtype=acc_dtype)
 
 
-def groupby_sum(codes, values, num_groups: int):
+def groupby_sum(codes, values, num_groups: int, acc_dtype: str = "float32"):
     """(num_groups, 2) per-group [sum, count] via MXU one-hot matmul."""
     return _gb.groupby_sum(jnp.asarray(codes), jnp.asarray(values),
-                           num_groups=num_groups, interpret=_interp())
+                           num_groups=num_groups, interpret=_interp(),
+                           acc_dtype=acc_dtype)

@@ -52,10 +52,34 @@ class MemoryManager:
         self.result_evictions = 0
         self.bypasses = 0
         self.over_budget_events = 0
+        self.decode_cache_drops = 0
+        self.decode_cache_dropped_bytes = 0
+        self._catalog = None
         self.bm.memory_manager = self
 
     def attach_result_cache(self, result_cache) -> None:
         self._result_cache = result_cache
+
+    def attach_catalog(self, catalog) -> None:
+        """Register the catalog whose tables' memoized decode caches
+        (`Encoded._decoded`, see core/compression.py) this manager may
+        release under pressure."""
+        self._catalog = catalog
+
+    def drop_decoded_caches(self) -> int:
+        """Release every catalog table's memoized decode cache — pure
+        derived state that re-materializes on the next decode.  Returns
+        bytes freed."""
+        cat = getattr(self, "_catalog", None)
+        if cat is None:
+            return 0
+        freed = 0
+        for table in list(cat._tables.values()):
+            freed += table.drop_decoded()
+        if freed:
+            self.decode_cache_drops += 1
+            self.decode_cache_dropped_bytes += freed
+        return freed
 
     # -- accounting ----------------------------------------------------------
 
@@ -109,6 +133,10 @@ class MemoryManager:
                     if rc.evict_lru() > 0:
                         self.result_evictions += 1
                         continue
+                # last resort before giving up: release the column store's
+                # memoized decode caches (derived state, unaccounted by the
+                # budget but real memory all the same)
+                self.drop_decoded_caches()
                 if (protect is not None and protect[0] == "part"
                         and protect in self.bm.sizes):
                     # the new block alone exceeds the budget: refuse
@@ -140,4 +168,6 @@ class MemoryManager:
             "result_evictions": self.result_evictions,
             "bypasses": self.bypasses,
             "over_budget_events": self.over_budget_events,
+            "decode_cache_drops": self.decode_cache_drops,
+            "decode_cache_dropped_bytes": self.decode_cache_dropped_bytes,
         }

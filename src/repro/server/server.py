@@ -62,7 +62,8 @@ class SharkServer:
                  default_shuffle_buckets: int = 64,
                  pde_config: Optional[PDEConfig] = None,
                  speculation: bool = True,
-                 task_launch_overhead_s: float = 0.0):
+                 task_launch_overhead_s: float = 0.0,
+                 backend: str = "compiled"):
         self.ctx = SharkContext(num_workers=num_workers,
                                 max_threads=max_threads,
                                 speculation=speculation,
@@ -75,12 +76,14 @@ class SharkServer:
                              if enable_result_cache else None)
         if self.result_cache is not None:
             self.memory.attach_result_cache(self.result_cache)
+        self.memory.attach_catalog(self.catalog)
         self.catalog.subscribe(self._on_catalog_change)
         self.default_partitions = default_partitions
         self._exec_kw = dict(
             pde=pde_config or PDEConfig(), enable_pde=enable_pde,
             enable_map_pruning=enable_map_pruning,
-            default_shuffle_buckets=default_shuffle_buckets)
+            default_shuffle_buckets=default_shuffle_buckets,
+            backend=backend)
         self.scheduler = FairScheduler(
             self._run_query, max_concurrent=max_concurrent_queries,
             max_queue_depth=max_queue_depth)

@@ -1,0 +1,354 @@
+"""Compiled vectorized execution (DESIGN.md §10): deterministic tests of
+the pipeline-segment executor — expression-compiler parity on encoded
+layouts, sdict sharing through renames, fused-aggregate segment metrics,
+decode memoization, and (kernels_interpret-marked) the Pallas kernel routes
+forced through the engine in interpret mode on CPU."""
+
+import numpy as np
+import pytest
+
+from repro.core import DType, Schema, SharkSession
+from repro.core.columnar import make_block
+from repro.core.compression import Encoding, decode_np, encode
+from repro.core.expr import (And, Between, BinOp, Cmp, Col, ColumnVal, Func,
+                             InList, Lit, Not, Or, compile_expr, evaluate)
+from repro.core.pde import PDEConfig, decide_segment_backend
+from repro.core.types import Field
+
+pytestmark = pytest.mark.tier1
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# compile_expr vs evaluate: deterministic sweep over encoded layouts
+# ---------------------------------------------------------------------------
+
+
+def _ctx():
+    n = 257
+    a = RNG.integers(-40, 40, n).astype(np.int64)
+    d_vals = RNG.choice(np.array([-7, -3, 0, 5, 11], np.int64), n)
+    bp_vals = RNG.integers(-37, 29, n).astype(np.int64)
+    s_vals = np.array([f"g{i}" for i in RNG.integers(0, 6, n)])
+    d_blk = make_block(Field("d", DType.INT64), d_vals, Encoding.DICT)
+    bp_blk = make_block(Field("bp", DType.INT64), bp_vals, Encoding.BITPACK)
+    s_blk = make_block(Field("s", DType.STRING), s_vals)
+    return {
+        "a": ColumnVal(a),
+        "d": ColumnVal(None, None, True, block=d_blk),
+        "bp": ColumnVal(None, None, True, block=bp_blk),
+        "s": ColumnVal(None, s_blk.str_dict, True, block=s_blk),
+    }
+
+
+SWEEP = [
+    Cmp(">", Col("a"), Lit(3)),
+    And(Cmp(">=", Col("d"), Lit(-3)), Cmp("<", Col("d"), Lit(11))),
+    Cmp("=", Col("s"), Lit("g3")),
+    Cmp("=", Col("s"), Lit("absent")),       # literal not in the dictionary
+    Cmp("!=", Col("s"), Lit("absent")),      # ... negation sees every row
+    InList(Col("s"), ("g1", "g5", "nope")),
+    Between(Col("d"), -3, 5),
+    Between(Col("bp"), -30, -1),             # negative BITPACK bias range
+    Or(Not(Cmp("=", Col("a"), Lit(0))), Cmp("<=", Col("s"), Lit("g2"))),
+    BinOp("+", Col("bp"), BinOp("*", Col("d"), Lit(2))),
+    BinOp("/", Col("a"), Lit(4)),
+    Func("ABS", (Col("bp"),)),
+    Func("LENGTH", (Col("s"),)),
+    Col("s"),
+    Cmp("<", Lit(5), Col("d")),
+]
+
+
+@pytest.mark.parametrize("idx", range(len(SWEEP)))
+def test_compile_expr_matches_evaluate(idx):
+    expr = SWEEP[idx]
+    ctx = _ctx()
+    want = evaluate(expr, ctx)
+    got = compile_expr(expr)(ctx)
+    assert got.is_string == want.is_string
+    if want.is_string:
+        np.testing.assert_array_equal(got.decoded(), want.decoded())
+        return
+    w, g = np.asarray(want.arr), np.asarray(got.arr)
+    if w.dtype.kind == "f" or g.dtype.kind == "f":
+        np.testing.assert_allclose(g.astype(np.float64),
+                                   w.astype(np.float64), rtol=1e-12)
+    else:
+        np.testing.assert_array_equal(g, w)
+
+
+def test_nan_dictionary_stays_off_code_space():
+    """Regression (code review): np.unique sorts NaN to the dictionary
+    tail, so code-bound `>` would include NaN rows that the value-space
+    oracle excludes.  NaN-bearing float dictionaries must refuse code
+    space, and the compiled result must match evaluate()."""
+    vals = np.array([1.0, 2.0, np.nan, 3.0, 2.0, np.nan])
+    blk = make_block(Field("x", DType.FLOAT64), vals, Encoding.DICT)
+    assert blk.code_space() is None
+    ctx = {"x": ColumnVal(None, None, True, block=blk)}
+    for expr in (Cmp(">", Col("x"), Lit(2.0)),
+                 Cmp(">=", Col("x"), Lit(2.0)),
+                 Between(Col("x"), 1.5, 3.5)):
+        want = np.asarray(evaluate(expr, ctx).arr)
+        got = np.asarray(compile_expr(expr)(ctx).arr)
+        np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        np.asarray(compile_expr(Cmp(">", Col("x"), Lit(2.0)))(ctx).arr),
+        [False, False, False, True, False, False])
+
+
+def test_code_space_predicate_never_decodes():
+    """A filter-only DICT-encoded column is evaluated on codes: the block
+    is never decoded."""
+    ctx = _ctx()
+    compile_expr(Between(Col("d"), -3, 5))(ctx)
+    assert not ctx["d"].materialized
+    assert ctx["d"].block.enc.decode_count == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: segments, metrics, sdict sharing, dual-backend parity
+# ---------------------------------------------------------------------------
+
+
+def _star_session(backend="compiled", pde_config=None, rows=3000,
+                  partitions=3):
+    rng = np.random.default_rng(0)
+    sess = SharkSession(num_workers=2, max_threads=4,
+                        default_partitions=partitions, backend=backend,
+                        pde_config=pde_config)
+    data = {
+        "fn": rng.integers(0, 100, rows).astype(np.int64),
+        "fv": rng.uniform(0, 10, rows),
+        # few distinct values -> the load task dictionary-encodes this one
+        "fd": rng.choice(np.round(np.linspace(0.0, 9.0, 37), 3), rows),
+        "fs": np.array([f"g{i}" for i in rng.integers(0, 8, rows)]),
+    }
+    sess.create_table("t", Schema.of(fn=DType.INT64, fv=DType.FLOAT64,
+                                     fd=DType.FLOAT64, fs=DType.STRING),
+                      data)
+    return sess, data
+
+
+def test_segment_fused_aggregate_metrics():
+    sess, data = _star_session()
+    got = sess.sql_np(
+        "SELECT fs, SUM(fv) AS s, COUNT(*) AS c FROM t "
+        "WHERE fn BETWEEN 20 AND 60 GROUP BY fs")
+    m = sess.metrics()
+    assert m.interpreted_scan_ops == 0
+    assert len(m.segments) == 1
+    seg = m.segments[0]
+    assert seg.consumer == "aggregate"
+    assert seg.pred is not None
+    assert seg.routes.get("jit", 0) == seg.partitions > 0
+    assert seg.rows_in == len(data["fn"])
+    # cross-check against pure numpy
+    mask = (data["fn"] >= 20) & (data["fn"] <= 60)
+    order = np.argsort(got["fs"])
+    for i, g in enumerate(np.asarray(got["fs"])[order]):
+        gm = mask & (data["fs"] == g)
+        np.testing.assert_allclose(np.asarray(got["s"])[order][i],
+                                   data["fv"][gm].sum(), rtol=1e-9)
+        assert np.asarray(got["c"])[order][i] == gm.sum()
+    sess.shutdown()
+
+
+def test_renamed_dict_column_keeps_sdict_order_by_limit():
+    """Regression (satellite): a projection that merely renames a
+    dict-encoded string column must keep (codes, sdict) sharing — no early
+    decode — and ORDER BY + LIMIT over the renamed column must still see
+    string order, under both backends."""
+    sess_c, data = _star_session(backend="compiled")
+    sess_n, _ = _star_session(backend="numpy")
+    sql = ("SELECT fs AS label, fn FROM t WHERE fn >= 10 "
+           "ORDER BY label DESC LIMIT 9")
+    got_c = sess_c.sql_np(sql)
+    got_n = sess_n.sql_np(sql)
+    assert got_c["label"].dtype.kind == "U", "renamed column lost stringness"
+    np.testing.assert_array_equal(got_c["label"], got_n["label"])
+    np.testing.assert_array_equal(got_c["fn"], got_n["fn"])
+    # reference: top-9 labels by string order
+    mask = data["fn"] >= 10
+    ref = np.sort(data["fs"][mask])[::-1][:9]
+    np.testing.assert_array_equal(np.sort(got_c["label"])[::-1], ref)
+    # the compiled segment filtered the column in code space and re-shared
+    # the dictionary instead of materializing strings
+    seg = sess_c.metrics().segments[0]
+    assert seg.consumer == "sort"
+    assert "label" in seg.kept_code_cols
+    sess_c.shutdown()
+    sess_n.shutdown()
+
+
+def test_segment_fallback_on_string_function():
+    """String-transforming functions are not traceable: the segment falls
+    back to the numpy evaluator (recorded), results stay correct."""
+    sess, data = _star_session()
+    got = sess.sql_np("SELECT UPPER(fs) AS u FROM t WHERE fn < 50")
+    m = sess.metrics()
+    assert len(m.segments) == 1
+    assert m.segments[0].fallbacks > 0
+    assert m.segments[0].routes.get("numpy", 0) == m.segments[0].partitions
+    mask = data["fn"] < 50
+    np.testing.assert_array_equal(np.sort(got["u"]),
+                                  np.sort(np.char.upper(data["fs"][mask])))
+    sess.shutdown()
+
+
+def test_backend_numpy_never_compiles():
+    sess, _ = _star_session(backend="numpy")
+    sess.sql_np("SELECT fn, fv FROM t WHERE fv > 5")
+    m = sess.metrics()
+    assert m.compiled_partitions() == 0
+    assert m.segment_routes() == {"numpy": m.segments[0].partitions}
+    sess.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Decode memoization (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_memoized_and_droppable():
+    vals = RNG.integers(-100, 100, 4096).astype(np.int64)
+    enc = encode(vals, Encoding.BITPACK)
+    a = decode_np(enc)
+    b = decode_np(enc)
+    assert a is b and enc.decode_count == 1
+    np.testing.assert_array_equal(a, vals)
+    freed = enc.drop_decoded()
+    assert freed == a.nbytes and enc.decoded_nbytes == 0
+    c = decode_np(enc)
+    assert enc.decode_count == 2
+    np.testing.assert_array_equal(c, vals)
+
+
+def test_query_decodes_each_block_once():
+    """Predicate + projection + aggregation over the same column must hit
+    the memoized decode, not re-decode per operator."""
+    sess, _ = _star_session()
+    sess.sql_np("SELECT SUM(fv) AS s, AVG(fv) AS a, MAX(fv) AS m FROM t "
+                "WHERE fv BETWEEN 2 AND 8")
+    table = sess.catalog.get("t")
+    for p in table.partitions:
+        assert p.columns["fv"].enc.decode_count <= 1
+    sess.shutdown()
+
+
+def test_memory_manager_drops_decode_caches():
+    from repro.server import MemoryManager
+    from repro.core.runtime import BlockManager
+    sess, _ = _star_session()
+    # no WHERE: fn is consumed as values, so its decode is memoized (a
+    # filtered dict column would be gathered post-mask and never cached)
+    sess.sql_np("SELECT SUM(fn) AS s FROM t")
+    mm = MemoryManager(BlockManager())
+    mm.attach_catalog(sess.catalog)
+    table = sess.catalog.get("t")
+    assert table.decoded_cache_nbytes > 0
+    freed = mm.drop_decoded_caches()
+    assert freed > 0 and table.decoded_cache_nbytes == 0
+    assert mm.stats()["decode_cache_drops"] == 1
+    sess.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel routes, forced through the engine in interpret mode
+# ---------------------------------------------------------------------------
+
+FORCE_KERNELS = PDEConfig(segment_force_kernels=True,
+                          segment_kernel_min_rows=256,
+                          segment_min_compiled_rows=1)
+
+
+@pytest.mark.kernels_interpret
+def test_colscan_route_matches_numpy_backend():
+    sess_k, data = _star_session(pde_config=FORCE_KERNELS)
+    sess_n, _ = _star_session(backend="numpy")
+    sql = ("SELECT COUNT(*) AS c, SUM(fv) AS s, MIN(fv) AS mn, "
+           "MAX(fv) AS mx, AVG(fv) AS av FROM t WHERE fn BETWEEN 25 AND 75")
+    got = sess_k.sql_np(sql)
+    want = sess_n.sql_np(sql)
+    routes = sess_k.metrics().segment_routes()
+    assert routes.get("colscan", 0) > 0, routes
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-12)
+    sess_k.shutdown()
+    sess_n.shutdown()
+
+
+@pytest.mark.kernels_interpret
+@pytest.mark.parametrize("op", [">", ">=", "<", "<=", "="])
+def test_colscan_one_sided_ranges_exclude_padding(op):
+    """Regression: one-sided ranges lower to lo/hi = ±inf; the kernel's
+    tile padding must not satisfy them (an inf pad fill once did — NaN
+    padding fails both comparisons)."""
+    import operator
+    np_ops = {">": operator.gt, ">=": operator.ge, "<": operator.lt,
+              "<=": operator.le, "=": operator.eq}
+    sess_k, data = _star_session(pde_config=FORCE_KERNELS, rows=5000)
+    got = sess_k.sql_np(f"SELECT COUNT(*) AS c FROM t WHERE fn {op} 47")
+    routes = sess_k.metrics().segment_routes()
+    assert routes.get("colscan", 0) > 0, routes
+    want = int(np_ops[op](data["fn"], 47).sum())
+    assert int(got["c"][0]) == want, (op, got["c"], want)
+    sess_k.shutdown()
+
+
+@pytest.mark.kernels_interpret
+def test_fused_decode_scan_route_on_dict_encoded_filter():
+    sess_k, data = _star_session(pde_config=FORCE_KERNELS)
+    sess_n, _ = _star_session(backend="numpy")
+    # fd has 37 distinct values: the load task dictionary-encoded it, so
+    # the filter column feeds the decode-fused kernel as codes
+    enc = sess_k.catalog.get("t").partitions[0].columns["fd"].enc
+    assert enc.encoding == Encoding.DICT
+    sql = ("SELECT COUNT(*) AS c, SUM(fv) AS s FROM t "
+           "WHERE fd BETWEEN 2.0 AND 7.5")
+    got = sess_k.sql_np(sql)
+    want = sess_n.sql_np(sql)
+    routes = sess_k.metrics().segment_routes()
+    assert routes.get("fused_decode_scan", 0) > 0, routes
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-12)
+    sess_k.shutdown()
+    sess_n.shutdown()
+
+
+@pytest.mark.kernels_interpret
+def test_groupby_mxu_route_matches_numpy_backend():
+    sess_k, data = _star_session(pde_config=FORCE_KERNELS)
+    sess_n, _ = _star_session(backend="numpy")
+    sql = "SELECT fs, SUM(fv) AS s, COUNT(*) AS c FROM t GROUP BY fs"
+    got = sess_k.sql_np(sql)
+    want = sess_n.sql_np(sql)
+    routes = sess_k.metrics().segment_routes()
+    assert routes.get("groupby_mxu", 0) > 0, routes
+    og, ow = np.argsort(got["fs"]), np.argsort(want["fs"])
+    np.testing.assert_array_equal(np.asarray(got["fs"])[og],
+                                  np.asarray(want["fs"])[ow])
+    np.testing.assert_allclose(np.asarray(got["s"])[og],
+                               np.asarray(want["s"])[ow], rtol=1e-12)
+    np.testing.assert_array_equal(np.asarray(got["c"])[og],
+                                  np.asarray(want["c"])[ow])
+    sess_k.shutdown()
+    sess_n.shutdown()
+
+
+@pytest.mark.kernels_interpret
+def test_groupby_ndv_guard_keeps_high_cardinality_off_kernel():
+    """Backend selection is stats-driven: a high-NDV group key must not
+    take the one-hot-matmul kernel."""
+    dec = decide_segment_backend(10_000, "groupby_mxu", group_ndv=5000,
+                                 on_tpu=False, cfg=FORCE_KERNELS)
+    assert dec.route == "jit"
+    dec = decide_segment_backend(10_000, "groupby_mxu", group_ndv=8,
+                                 on_tpu=False, cfg=FORCE_KERNELS)
+    assert dec.route == "groupby_mxu"
+    # default config: tiny partitions stay on the numpy evaluator
+    dec = decide_segment_backend(10, "colscan", on_tpu=False,
+                                 cfg=PDEConfig())
+    assert dec.route == "numpy"
