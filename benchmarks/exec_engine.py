@@ -47,6 +47,16 @@ SHAPES = [
      "GROUP BY l_mode"),
 ]
 
+# speedup floors asserted per shape: the fused/kernel-shaped aggregates
+# must WIN (the filter_agg_dict 0.46x regression is what the code-space
+# bound fix repaired); the pass-through projection shape is transfer-bound
+# on CPU, so it only has to not lose beyond timer noise
+ASSERT_FLOORS = {
+    "filter_agg_fused": 1.0,
+    "filter_agg_dict": 1.0,
+    "groupby_small_ndv": 1.0,
+    "scan_filter_project": 0.9,
+}
 ASSERT_SHAPE = "filter_agg_fused"
 
 
@@ -135,11 +145,12 @@ def main(argv=None) -> None:
         with open(args.json_out, "w") as f:
             json.dump(out, f, indent=2)
 
-    fused = out["shapes"][ASSERT_SHAPE]
-    assert fused["speedup"] >= 1.0, (
-        f"compiled path lost to interpreted on {ASSERT_SHAPE}: "
-        f"{fused['speedup']:.2f}x")
-    routes = fused["compiled"]["routes"]
+    for name, floor in ASSERT_FLOORS.items():
+        entry = out["shapes"][name]
+        assert entry["speedup"] >= floor, (
+            f"compiled path lost to interpreted on {name}: "
+            f"{entry['speedup']:.2f}x < {floor}x floor")
+    routes = out["shapes"][ASSERT_SHAPE]["compiled"]["routes"]
     assert any(r != "numpy" for r in routes), \
         f"fused shape never took a compiled route: {routes}"
 

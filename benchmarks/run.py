@@ -11,9 +11,10 @@ import sys
 import time
 import traceback
 
-SUITES = ["loading", "kernels_bench", "exec_engine", "pavlo", "tpch_micro",
-          "join_pde", "join_bench", "fault_tolerance", "warehouse",
-          "ml_bench", "task_overhead", "concurrent_bench", "frame_overhead"]
+SUITES = ["loading", "kernels_bench", "exec_engine", "shuffle_bench",
+          "pavlo", "tpch_micro", "join_pde", "join_bench",
+          "fault_tolerance", "warehouse", "ml_bench", "task_overhead",
+          "concurrent_bench", "frame_overhead"]
 
 
 def main() -> None:

@@ -5,9 +5,14 @@
 # concurrent server benchmark (emits BENCH_concurrent.json), the frame-vs-SQL
 # plan-build micro-benchmark (emits BENCH_frame_api.json), the multi-way
 # star-join PDE-on/off benchmark (emits BENCH_joins.json; asserts PDE-on
-# beats PDE-off on the skewed star join), and the compiled-vs-interpreted
+# beats PDE-off on the uniform star join and stays above a 2-core noise
+# floor on the skewed one), the compiled-vs-interpreted
 # execution benchmark (emits BENCH_exec_engine.json; asserts the fused
-# compiled path beats the interpreted path on the filter+aggregate shape).
+# compiled path beats the interpreted path on the filter+aggregate shapes,
+# including the repaired dictionary-coded one), and the compiled-exchange
+# benchmark (emits BENCH_shuffle.json; asserts the dictionary-preserving
+# shuffle is decode-free and beats the legacy decoded exchange on
+# string-keyed group-by/join shapes).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -35,3 +40,7 @@ echo "wrote BENCH_joins.json"
 echo "== compiled vectorized execution: compiled vs interpreted =="
 python -m benchmarks.exec_engine --quick --json-out BENCH_exec_engine.json
 echo "wrote BENCH_exec_engine.json"
+
+echo "== compiled exchange: dictionary-preserving vs decoded shuffle =="
+python -m benchmarks.shuffle_bench --quick --json-out BENCH_shuffle.json
+echo "wrote BENCH_shuffle.json"

@@ -6,20 +6,31 @@ key and a final merge on the reduce side.  Spark's hash-based distributed
 aggregation (no sort before shuffle, §7.1) is reproduced: grouping is
 hash/unique-based, never a global sort.
 
-On TPU, the partial phase is the Pallas `groupby_mxu` kernel for small group
-cardinality (group-by as a one-hot matmul on the systolic array) and a
-sort/segment-sum for large cardinality; this module is the engine-level
-(host/numpy) implementation and the oracle for those kernels.
+Integer aggregates stay integer end to end: SUM/MIN/MAX over integer
+columns accumulate in int64 (value-exact above 2^53, where a float64
+round-trip silently loses precision); float aggregates accumulate in
+float64.  String group keys are dictionary codes throughout — with the
+dictionary-preserving exchange (DESIGN.md §11) the reduce side groups on
+codes into the unified dictionary and never materializes strings.
+
+`partial_aggregate` / `merge_aggregate` are the interpreted (numpy) oracle.
+`CompiledMerge` lowers the reduce-side merge into ONE jitted segmented-
+reduce program over all aggregate states (cached per state signature,
+power-of-two padded so re-traces stay bounded), mirroring what
+expr.compile_expr does for scan-side expressions; the reduce router
+(physical.ReduceRunner) picks between them per reduce task.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .batch import PartitionBatch
-from .expr import ColumnVal, Evaluator, evaluate
+from .expr import (ColumnVal, Evaluator, ExprCompileError, evaluate,
+                   next_pow2 as _next_pow2)
 from .plan import AggFunc, AggSpec
 
 
@@ -43,6 +54,39 @@ def group_indices(keys: Sequence[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
     return first, inverse
 
 
+# -- integer-exact segmented reductions (the numpy oracle) -------------------
+
+INT64_MIN_IDENT = np.iinfo(np.int64).max   # MIN identity for empty groups
+INT64_MAX_IDENT = np.iinfo(np.int64).min
+
+
+def seg_sum(inverse: np.ndarray, val: np.ndarray,
+            num_groups: int) -> np.ndarray:
+    """Per-group sum; int64 accumulation for integer inputs (bincount's
+    float64 weights would round above 2^53), float64 otherwise."""
+    if np.issubdtype(val.dtype, np.integer) or val.dtype.kind == "b":
+        acc = np.zeros(num_groups, np.int64)
+        np.add.at(acc, inverse, val.astype(np.int64))
+        return acc
+    return np.bincount(inverse, weights=val.astype(np.float64),
+                       minlength=num_groups)
+
+
+def seg_minmax(inverse: np.ndarray, val: np.ndarray, num_groups: int,
+               is_min: bool) -> np.ndarray:
+    """Per-group min/max with dtype-preserving accumulators: int64 with
+    iinfo sentinels for integer inputs, float64 with ±inf otherwise."""
+    if np.issubdtype(val.dtype, np.integer):
+        fill = INT64_MIN_IDENT if is_min else INT64_MAX_IDENT
+        acc = np.full(num_groups, fill, np.int64)
+        v = val.astype(np.int64)
+    else:
+        acc = np.full(num_groups, np.inf if is_min else -np.inf, np.float64)
+        v = val.astype(np.float64)
+    (np.minimum if is_min else np.maximum).at(acc, inverse, v)
+    return acc
+
+
 # State columns per aggregate: AVG keeps (sum, count); COUNT_DISTINCT defers
 # to the reduce side (map side emits distinct (group, value) pairs).
 
@@ -56,21 +100,54 @@ def _state_cols(spec: AggSpec) -> List[str]:
     return [f"__{spec.out_name}__acc"]
 
 
+def _group_key_cols(batch: PartitionBatch, group_cols: Sequence[str],
+                    first: np.ndarray) -> Dict[str, ColumnVal]:
+    """Representative group-key columns (codes stay codes) — shared by
+    every merge/partial output assembly."""
+    out: Dict[str, ColumnVal] = {}
+    for g in group_cols:
+        v = batch.col(g)
+        out[g] = ColumnVal(np.asarray(v.arr)[first], v.sdict, v.sorted_dict)
+    return out
+
+
+def _partial_states(spec: AggSpec, inverse: np.ndarray,
+                    val: Optional[np.ndarray], num_groups: int,
+                    out: Dict[str, ColumnVal]) -> None:
+    """One spec's partial state columns for a pre-grouped partition."""
+    if spec.func == AggFunc.COUNT:
+        acc = np.bincount(inverse, minlength=num_groups).astype(np.int64)
+        out[_state_cols(spec)[0]] = ColumnVal(acc)
+    elif spec.func == AggFunc.SUM:
+        out[_state_cols(spec)[0]] = ColumnVal(seg_sum(inverse, val,
+                                                      num_groups))
+    elif spec.func == AggFunc.AVG:
+        s = np.bincount(inverse, weights=val.astype(np.float64),
+                        minlength=num_groups)
+        c = np.bincount(inverse, minlength=num_groups).astype(np.int64)
+        sc, cc = _state_cols(spec)
+        out[sc] = ColumnVal(s)
+        out[cc] = ColumnVal(c)
+    elif spec.func in (AggFunc.MIN, AggFunc.MAX):
+        out[_state_cols(spec)[0]] = ColumnVal(
+            seg_minmax(inverse, val, num_groups,
+                       spec.func == AggFunc.MIN))
+    else:
+        raise NotImplementedError(spec.func)
+
+
 def partial_aggregate(batch: PartitionBatch, group_cols: Sequence[str],
                       aggs: Sequence[AggSpec]) -> PartitionBatch:
     """Task-local aggregation: one output row per group in this partition."""
     n = batch.num_rows
     keys = [np.asarray(batch.col(g).arr) for g in group_cols]
-    # string group keys: group locally on codes (cheap), decode only the
-    # representative rows below.
+    # string group keys: group locally on codes (cheap), the reduce side
+    # unifies dictionaries — representative rows stay codes end to end.
     first, inverse = group_indices(keys) if group_cols else \
         (np.zeros(1, np.int64), np.zeros(n, np.int64))
     num_groups = len(first)
 
-    out: Dict[str, ColumnVal] = {}
-    for g in group_cols:
-        v = batch.col(g)
-        out[g] = ColumnVal(np.asarray(v.arr)[first], v.sdict, v.sorted_dict)
+    out: Dict[str, ColumnVal] = _group_key_cols(batch, group_cols, first)
 
     distinct_specs = [a for a in aggs if a.func == AggFunc.COUNT_DISTINCT]
     plain_specs = [a for a in aggs if a.func != AggFunc.COUNT_DISTINCT]
@@ -81,30 +158,7 @@ def partial_aggregate(batch: PartitionBatch, group_cols: Sequence[str],
             val = np.asarray(evaluate(spec.arg, ctx).arr)
         else:
             val = None
-        if spec.func == AggFunc.COUNT:
-            acc = np.bincount(inverse, minlength=num_groups).astype(np.int64)
-            out[_state_cols(spec)[0]] = ColumnVal(acc)
-        elif spec.func == AggFunc.SUM:
-            acc = np.bincount(inverse, weights=val.astype(np.float64),
-                              minlength=num_groups)
-            acc = acc.astype(np.int64) if np.issubdtype(val.dtype, np.integer) \
-                else acc
-            out[_state_cols(spec)[0]] = ColumnVal(acc)
-        elif spec.func == AggFunc.AVG:
-            s = np.bincount(inverse, weights=val.astype(np.float64),
-                            minlength=num_groups)
-            c = np.bincount(inverse, minlength=num_groups).astype(np.int64)
-            sc, cc = _state_cols(spec)
-            out[sc] = ColumnVal(s)
-            out[cc] = ColumnVal(c)
-        elif spec.func in (AggFunc.MIN, AggFunc.MAX):
-            fill = np.inf if spec.func == AggFunc.MIN else -np.inf
-            acc = np.full(num_groups, fill, np.float64)
-            ufunc = np.minimum if spec.func == AggFunc.MIN else np.maximum
-            ufunc.at(acc, inverse, val.astype(np.float64))
-            out[_state_cols(spec)[0]] = ColumnVal(acc)
-        else:
-            raise NotImplementedError(spec.func)
+        _partial_states(spec, inverse, val, num_groups, out)
 
     if distinct_specs:
         # Exact distinct: partial rows become per-(group, value) instead of
@@ -119,10 +173,7 @@ def partial_aggregate(batch: PartitionBatch, group_cols: Sequence[str],
         pair_keys = keys + [np.asarray(val.arr)]
         pfirst, pinverse = group_indices(pair_keys)
         num_pairs = len(pfirst)
-        out = {}
-        for g in group_cols:
-            v = batch.col(g)
-            out[g] = ColumnVal(np.asarray(v.arr)[pfirst], v.sdict, v.sorted_dict)
+        out = _group_key_cols(batch, group_cols, pfirst)
         out[_state_cols(spec)[0]] = ColumnVal(
             np.asarray(val.arr)[pfirst], val.sdict, val.sorted_dict)
         for pspec in plain_specs:
@@ -130,45 +181,22 @@ def partial_aggregate(batch: PartitionBatch, group_cols: Sequence[str],
                 pval = np.asarray(evaluate(pspec.arg, ctx).arr)
             else:
                 pval = None
-            if pspec.func == AggFunc.COUNT:
-                out[_state_cols(pspec)[0]] = ColumnVal(
-                    np.bincount(pinverse, minlength=num_pairs).astype(np.int64))
-            elif pspec.func == AggFunc.SUM:
-                acc = np.bincount(pinverse, weights=pval.astype(np.float64),
-                                  minlength=num_pairs)
-                if np.issubdtype(pval.dtype, np.integer):
-                    acc = acc.astype(np.int64)
-                out[_state_cols(pspec)[0]] = ColumnVal(acc)
-            elif pspec.func == AggFunc.AVG:
-                s = np.bincount(pinverse, weights=pval.astype(np.float64),
-                                minlength=num_pairs)
-                c = np.bincount(pinverse, minlength=num_pairs).astype(np.int64)
-                sc, cc = _state_cols(pspec)
-                out[sc] = ColumnVal(s)
-                out[cc] = ColumnVal(c)
-            elif pspec.func in (AggFunc.MIN, AggFunc.MAX):
-                fill = np.inf if pspec.func == AggFunc.MIN else -np.inf
-                acc = np.full(num_pairs, fill, np.float64)
-                ufunc = np.minimum if pspec.func == AggFunc.MIN else np.maximum
-                ufunc.at(acc, pinverse, pval.astype(np.float64))
-                out[_state_cols(pspec)[0]] = ColumnVal(acc)
+            _partial_states(pspec, pinverse, pval, num_pairs, out)
 
     return PartitionBatch(out)
 
 
 def merge_aggregate(batch: PartitionBatch, group_cols: Sequence[str],
                     aggs: Sequence[AggSpec]) -> PartitionBatch:
-    """Reduce-side final merge of partial states (one row per group)."""
+    """Reduce-side final merge of partial states (one row per group) — the
+    interpreted oracle for CompiledMerge."""
     keys = [np.asarray(batch.col(g).arr) for g in group_cols]
     n = batch.num_rows
     first, inverse = group_indices(keys) if group_cols else \
         (np.zeros(1, np.int64), np.zeros(n, np.int64))
     num_groups = len(first)
 
-    out: Dict[str, ColumnVal] = {}
-    for g in group_cols:
-        v = batch.col(g)
-        out[g] = ColumnVal(np.asarray(v.arr)[first], v.sdict, v.sorted_dict)
+    out: Dict[str, ColumnVal] = _group_key_cols(batch, group_cols, first)
 
     for spec in aggs:
         if spec.func == AggFunc.COUNT_DISTINCT:
@@ -183,18 +211,12 @@ def merge_aggregate(batch: PartitionBatch, group_cols: Sequence[str],
             continue
         cols = _state_cols(spec)
         if spec.func == AggFunc.COUNT:
-            acc = np.bincount(inverse,
-                              weights=np.asarray(batch.col(cols[0]).arr,
-                                                 dtype=np.float64),
-                              minlength=num_groups)
-            out[spec.out_name] = ColumnVal(acc.astype(np.int64))
+            v = np.asarray(batch.col(cols[0]).arr)
+            out[spec.out_name] = ColumnVal(
+                seg_sum(inverse, v, num_groups).astype(np.int64))
         elif spec.func == AggFunc.SUM:
             v = np.asarray(batch.col(cols[0]).arr)
-            acc = np.bincount(inverse, weights=v.astype(np.float64),
-                              minlength=num_groups)
-            acc = acc.astype(np.int64) if np.issubdtype(v.dtype, np.integer) \
-                else acc
-            out[spec.out_name] = ColumnVal(acc)
+            out[spec.out_name] = ColumnVal(seg_sum(inverse, v, num_groups))
         elif spec.func == AggFunc.AVG:
             s = np.bincount(inverse,
                             weights=np.asarray(batch.col(cols[0]).arr,
@@ -206,12 +228,165 @@ def merge_aggregate(batch: PartitionBatch, group_cols: Sequence[str],
                             minlength=num_groups)
             out[spec.out_name] = ColumnVal(s / np.maximum(c, 1))
         elif spec.func in (AggFunc.MIN, AggFunc.MAX):
-            v = np.asarray(batch.col(cols[0]).arr, dtype=np.float64)
-            fill = np.inf if spec.func == AggFunc.MIN else -np.inf
-            acc = np.full(num_groups, fill, np.float64)
-            ufunc = np.minimum if spec.func == AggFunc.MIN else np.maximum
-            ufunc.at(acc, inverse, v)
-            out[spec.out_name] = ColumnVal(acc)
+            v = np.asarray(batch.col(cols[0]).arr)
+            out[spec.out_name] = ColumnVal(
+                seg_minmax(inverse, v, num_groups,
+                           spec.func == AggFunc.MIN))
         else:
             raise NotImplementedError(spec.func)
+    return PartitionBatch(out)
+
+
+# ---------------------------------------------------------------------------
+# Compiled reduce-side merge (DESIGN.md §11).
+#
+# The grouping itself (np.unique over the, typically few, partial-state
+# rows) stays host-side: its output shape is data-dependent.  Everything
+# after it — every aggregate's segmented reduction — lowers into ONE jitted
+# XLA program over (inverse, state columns), cached process-wide per state
+# signature.  Rows and group counts pad to powers of two (padding rows map
+# to a discarded extra group slot), so each signature re-traces O(log n)
+# times, the same discipline as expr._PLAN_CACHE and joins.CompiledProbe.
+# ---------------------------------------------------------------------------
+
+
+_MERGE_FNS: Dict[Tuple, Callable] = {}
+_MERGE_FNS_LOCK = threading.Lock()
+
+
+def _merge_fn(sig: Tuple) -> Callable:
+    with _MERGE_FNS_LOCK:
+        fn = _MERGE_FNS.get(sig)
+        if fn is not None:
+            return fn
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        def traced(inv, cols, gp):
+            outs = []
+            i = 0
+            for kind, is_int in sig:
+                if kind in ("count", "sum"):
+                    dt = jnp.int64 if is_int else jnp.float64
+                    acc = jnp.zeros(gp + 1, dt).at[inv].add(
+                        cols[i].astype(dt))
+                    i += 1
+                    outs.append(acc[:gp])
+                elif kind == "avg":
+                    s = jnp.zeros(gp + 1, jnp.float64).at[inv].add(
+                        cols[i].astype(jnp.float64))
+                    c = jnp.zeros(gp + 1, jnp.float64).at[inv].add(
+                        cols[i + 1].astype(jnp.float64))
+                    i += 2
+                    outs.append((s / jnp.maximum(c, 1.0))[:gp])
+                elif kind in ("min", "max"):
+                    if is_int:
+                        fill = (INT64_MIN_IDENT if kind == "min"
+                                else INT64_MAX_IDENT)
+                        acc = jnp.full(gp + 1, fill, jnp.int64)
+                        v = cols[i].astype(jnp.int64)
+                    else:
+                        fill = jnp.inf if kind == "min" else -jnp.inf
+                        acc = jnp.full(gp + 1, fill, jnp.float64)
+                        v = cols[i].astype(jnp.float64)
+                    acc = (acc.at[inv].min(v) if kind == "min"
+                           else acc.at[inv].max(v))
+                    i += 1
+                    outs.append(acc[:gp])
+                else:
+                    raise ValueError(kind)
+            return tuple(outs)
+
+        fn = functools.partial(jax.jit, static_argnames=("gp",))(traced)
+        _MERGE_FNS[sig] = fn
+        return fn
+
+
+_KIND_OF = {AggFunc.COUNT: "count", AggFunc.SUM: "sum", AggFunc.AVG: "avg",
+            AggFunc.MIN: "min", AggFunc.MAX: "max"}
+
+
+class CompiledMerge:
+    """`merge_aggregate` lowered to one fused jitted program per reduce
+    task.  Bit-exact with the oracle on integer states (int64 segment
+    adds); float reductions agree to rounding (XLA may reorder)."""
+
+    def __init__(self, group_cols: Sequence[str], aggs: Sequence[AggSpec]):
+        if any(a.func == AggFunc.COUNT_DISTINCT for a in aggs):
+            raise ExprCompileError(
+                "COUNT(DISTINCT) merge is pair-regrouping, not a segmented "
+                "reduce — interpreted path")
+        self.group_cols = list(group_cols)
+        self.aggs = list(aggs)
+
+    def _signature(self, batch: PartitionBatch) -> Tuple:
+        sig = []
+        for spec in self.aggs:
+            kind = _KIND_OF[spec.func]
+            state = np.asarray(batch.col(_state_cols(spec)[0]).arr)
+            is_int = bool(np.issubdtype(state.dtype, np.integer))
+            sig.append((kind, is_int))
+        return tuple(sig)
+
+    def __call__(self, batch: PartitionBatch) -> PartitionBatch:
+        from .expr import _x64
+        keys = [np.asarray(batch.col(g).arr) for g in self.group_cols]
+        n = batch.num_rows
+        first, inverse = group_indices(keys) if self.group_cols else \
+            (np.zeros(1, np.int64), np.zeros(n, np.int64))
+        num_groups = len(first)
+        gp = _next_pow2(num_groups)
+        npad = _next_pow2(max(n, 1))
+        inv = np.full(npad, gp, np.int64)   # padding -> discarded slot gp
+        inv[:n] = inverse
+
+        cols: List[np.ndarray] = []
+        for spec in self.aggs:
+            for sc in _state_cols(spec):
+                state = np.asarray(batch.col(sc).arr)
+                pad = np.zeros(npad, state.dtype)
+                pad[:n] = state
+                cols.append(pad)
+
+        sig = self._signature(batch)
+        fn = _merge_fn(sig)
+        with _x64():
+            outs = fn(inv, tuple(cols), gp=gp)
+
+        out = _group_key_cols(batch, self.group_cols, first)
+        for spec, o in zip(self.aggs, outs):
+            arr = np.asarray(o)[:num_groups]
+            if spec.func == AggFunc.COUNT:
+                arr = arr.astype(np.int64)
+            out[spec.out_name] = ColumnVal(arr)
+        return PartitionBatch(out)
+
+
+def merge_from_lanes(batch: PartitionBatch, group_cols: Sequence[str],
+                     aggs: Sequence[AggSpec], first: np.ndarray,
+                     lanes: Dict[str, np.ndarray]) -> PartitionBatch:
+    """Assemble the final merge output from per-state-column (G, 4)
+    [sum, count, min, max] lanes — the shape the Pallas `segmented_merge`
+    kernel produces.  Lives here (next to merge_aggregate and
+    CompiledMerge) so the per-AggFunc output policy has one home."""
+    out = _group_key_cols(batch, group_cols, first)
+    for spec in aggs:
+        cols = _state_cols(spec)
+        if spec.func == AggFunc.COUNT:
+            out[spec.out_name] = ColumnVal(
+                np.round(lanes[cols[0]][:, 0]).astype(np.int64))
+        elif spec.func == AggFunc.SUM:
+            out[spec.out_name] = ColumnVal(lanes[cols[0]][:, 0])
+        elif spec.func == AggFunc.AVG:
+            s = lanes[cols[0]][:, 0]
+            c = lanes[cols[1]][:, 0]
+            out[spec.out_name] = ColumnVal(s / np.maximum(c, 1.0))
+        elif spec.func == AggFunc.MIN:
+            out[spec.out_name] = ColumnVal(lanes[cols[0]][:, 2])
+        elif spec.func == AggFunc.MAX:
+            out[spec.out_name] = ColumnVal(lanes[cols[0]][:, 3])
+        else:
+            raise ExprCompileError(str(spec.func))
     return PartitionBatch(out)

@@ -210,6 +210,24 @@ def infer_dtype(e: Expr, schema: Schema) -> DType:
 # ---------------------------------------------------------------------------
 
 
+# Row-level string materialization counter.  The dictionary-preserving
+# exchange (DESIGN.md §11) promises that shuffle/join/group paths never
+# decode string columns to raw values; every ColumnVal.decoded() of a
+# string column bumps this, so tests and benchmarks/shuffle_bench.py can
+# assert the promise (counter delta == 0 across execute()).  Plain dict
+# mutation under the GIL — a diagnostic counter, not an exact statistic.
+DECODE_COUNTERS = {"string_cols": 0, "string_rows": 0}
+
+
+def reset_decode_counters() -> None:
+    DECODE_COUNTERS["string_cols"] = 0
+    DECODE_COUNTERS["string_rows"] = 0
+
+
+def string_decode_events() -> int:
+    return DECODE_COUNTERS["string_cols"]
+
+
 class ColumnVal:
     """Evaluated column value: either numeric array, or (codes, dictionary).
 
@@ -248,7 +266,10 @@ class ColumnVal:
     def decoded(self) -> np.ndarray:
         if self.sdict is None:
             return np.asarray(self.arr)
-        return self.sdict[np.asarray(self.arr)]
+        arr = np.asarray(self.arr)
+        DECODE_COUNTERS["string_cols"] += 1
+        DECODE_COUNTERS["string_rows"] += int(arr.shape[0]) if arr.ndim else 1
+        return self.sdict[arr]
 
     def __repr__(self):
         backing = "lazy" if self._arr is None else "materialized"
@@ -455,6 +476,14 @@ class ExprCompileError(Exception):
 def _x64():
     from jax.experimental import enable_x64
     return enable_x64()
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1).  The compiled exchange pads rows,
+    groups, and pair counts to powers of two so every jitted reduce program
+    re-traces O(log n) times per signature — the shared discipline of
+    _PLAN_CACHE, aggregate.CompiledMerge, and joins.CompiledProbe."""
+    return 1 << max(0, (int(n) - 1).bit_length())
 
 
 def literal_compare_columns(*exprs: Expr) -> set:

@@ -63,6 +63,14 @@ class PDEConfig:
     # kernels are only routed to on a real TPU unless forced (tests force
     # this to exercise the kernel route under interpret mode)
     segment_force_kernels: bool = False
+    # -- compiled exchange / reduce side (DESIGN.md §11) ---------------------
+    # below this many partial-state rows the reduce-side merge / join probe
+    # runs the interpreted numpy oracle (jit dispatch dominates tiny bucket
+    # groups); at or above it, the compiled (jitted) reduce kernels
+    reduce_min_compiled_rows: int = 2048
+    # force the compiled reduce path regardless of size (differential tests
+    # drive the oracle grid with this on and off)
+    reduce_force_compiled: bool = False
 
 
 @dataclasses.dataclass
@@ -279,6 +287,48 @@ def decide_segment_backend(num_rows: int,
             "jit", "kernel-shaped but no TPU: Pallas interpret mode is a "
             "correctness tool, XLA-fused jit is the CPU fast path")
     return SegmentBackendDecision("jit", f"{num_rows} rows -> fused jit")
+
+
+def decide_reduce_backend(num_rows: int,
+                          kernel_eligible: Optional[str] = None,
+                          group_ndv: Optional[int] = None,
+                          on_tpu: bool = False,
+                          cfg: PDEConfig = PDEConfig()
+                          ) -> SegmentBackendDecision:
+    """Reduce-side twin of `decide_segment_backend` (DESIGN.md §11): choose
+    how one reduce task's merge-aggregate or join probe executes.
+
+    `num_rows` is the task's fetched input size (partial-state rows for a
+    merge, combined build+probe rows for a join).  `kernel_eligible` names
+    the Pallas kernel the shape could lower to (`segmented_merge` for
+    float-state merges with modest group cardinality).  Routing: tiny
+    bucket groups always stay on the numpy oracle; on TPU (or forced) the
+    jitted/kernel reduce runs, but on CPU numpy IS the fast path — after
+    dictionary compaction the reduce states are small host-resident
+    arrays, and measured XLA dispatch costs ~2ms against a ~0.2ms
+    interpreted merge (DESIGN.md §11), the reduce-side analogue of 'Pallas
+    interpret mode is a correctness tool, not a fast path'."""
+    if not cfg.reduce_force_compiled \
+            and num_rows < cfg.reduce_min_compiled_rows:
+        return SegmentBackendDecision(
+            "numpy", f"{num_rows} rows < {cfg.reduce_min_compiled_rows} "
+            "reduce compiled threshold")
+    if not (on_tpu or cfg.reduce_force_compiled):
+        return SegmentBackendDecision(
+            "numpy", "no TPU: host numpy is the reduce fast path "
+            "(compiled reduce engages on TPU or when forced)")
+    if kernel_eligible is not None and (on_tpu or cfg.segment_force_kernels):
+        if (group_ndv is not None
+                and group_ndv > cfg.segment_groupby_max_ndv):
+            return SegmentBackendDecision(
+                "jit", f"group NDV {group_ndv} > "
+                f"{cfg.segment_groupby_max_ndv}: jitted segmented reduce")
+        return SegmentBackendDecision(
+            kernel_eligible,
+            f"{num_rows} rows, kernel-shaped reduce -> {kernel_eligible}"
+            + ("" if on_tpu else " (forced interpret mode)"))
+    return SegmentBackendDecision(
+        "jit", f"{num_rows} rows -> compiled reduce")
 
 
 def likely_small_side(left_hint_bytes: Optional[float],

@@ -25,17 +25,19 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .aggregate import merge_aggregate, partial_aggregate
+from .aggregate import (CompiledMerge, group_indices, merge_aggregate,
+                        partial_aggregate)
 from .batch import PartitionBatch
 from .catalog import Catalog
 from .columnar import Table
 from .expr import (_FLIP_CMP, Between, Cmp, Col, ColumnVal, CompiledExprSet,
                    Expr, ExprCompileError, Lit, _x64, evaluate,
                    split_conjuncts)
-from .joins import broadcast_join, join_local
+from .joins import broadcast_join, compile_probe, join_local
 from .pde import (JoinChoice, PDEConfig, SkewShard, decide_join,
-                  decide_parallelism, decide_segment_backend,
-                  decide_skew_join, likely_small_side)
+                  decide_parallelism, decide_reduce_backend,
+                  decide_segment_backend, decide_skew_join,
+                  likely_small_side)
 from .plan import (AggFunc, AggregateNode, AggSpec, FilterNode, JoinNode,
                    JoinStrategy, LimitNode, Node, PipelineSegment,
                    ProjectNode, ScanNode, SortNode, fold_pipeline, optimize,
@@ -178,7 +180,10 @@ def _fused_colscan_fns():
     """XLA-fused filter+aggregate for the CPU jit route — the same
     [count, sum, min, max] contract as the Pallas colscan/fused_decode_scan
     kernels, traced once per process and shared across queries.  float64
-    accumulation, so it matches the numpy oracle to rounding."""
+    accumulation, so it matches the numpy oracle to rounding.  DICT-coded
+    filter columns take this same function on their int32 codes (value
+    bounds translate to code bounds host-side), so there is no separate
+    dict-gather variant."""
     global _FUSED_COLSCAN_JIT
     if _FUSED_COLSCAN_JIT is None:
         import jax
@@ -193,11 +198,21 @@ def _fused_colscan_fns():
             mx = jnp.max(jnp.where(mask, a, -jnp.inf))
             return jnp.stack([cnt, s, mn, mx])
 
-        def scan_dict(codes, d, a, lo, hi):
-            return scan(d[codes], a, lo, hi)
-
-        _FUSED_COLSCAN_JIT = (jax.jit(scan), jax.jit(scan_dict))
+        _FUSED_COLSCAN_JIT = jax.jit(scan)
     return _FUSED_COLSCAN_JIT
+
+
+def _code_groupby(codes: np.ndarray, vals: np.ndarray,
+                  num_groups: int) -> np.ndarray:
+    """Code-space small-NDV group-by for the CPU route: per-group
+    [sum, count] by direct bincount on dictionary codes — the same contract
+    as the Pallas groupby_mxu kernel, without the np.unique pass the
+    interpreted path pays (codes ARE group ids when the dictionary is the
+    group space).  float64 accumulation (numpy-oracle parity)."""
+    sums = np.bincount(codes, weights=np.asarray(vals, np.float64),
+                       minlength=num_groups)
+    cnts = np.bincount(codes, minlength=num_groups).astype(np.float64)
+    return np.stack([sums, cnts], axis=1)
 
 
 def _range_of_pred(pred: Optional[Expr], schema) -> Optional[Tuple]:
@@ -478,6 +493,11 @@ class SegmentRunner:
             src = self._source_col(a.arg.name)
             if src is None or self.schema.dtype(src) == DType.STRING:
                 return None
+            if (self.schema.dtype(src) == DType.INT64
+                    and a.func in (AggFunc.SUM, AggFunc.MIN, AggFunc.MAX)):
+                # int64 aggregates keep integer accumulators (exact above
+                # 2^53); the float-accumulating kernel shapes would round
+                return None
             if value_col is None:
                 value_col = src
             elif value_col != src:
@@ -527,7 +547,8 @@ class SegmentRunner:
                 out, route = self._run_colscan(batch, shape, aggs,
                                                pallas=True)
             elif route == "groupby_mxu":
-                out = self._run_groupby(batch, shape, group_cols, aggs, ndv)
+                out, route = self._run_groupby(batch, shape, group_cols,
+                                               aggs, ndv, kernel=True)
             elif route == "jit":
                 if shape is not None and shape[0] == "colscan":
                     # CPU fast path: the same fused filter+aggregate as the
@@ -535,6 +556,11 @@ class SegmentRunner:
                     # ever materialized
                     out, route = self._run_colscan(batch, shape, aggs,
                                                    pallas=False)
+                elif shape is not None and shape[0] == "groupby_mxu":
+                    # CPU fast path for the small-NDV group-by shape: group
+                    # directly on dictionary codes — no np.unique pass
+                    out, route = self._run_groupby(batch, shape, group_cols,
+                                                   aggs, ndv, kernel=False)
                 else:
                     filtered, _ = self._run_jit(batch)
                     out = partial_aggregate(filtered, group_cols, aggs)
@@ -575,12 +601,20 @@ class SegmentRunner:
                                          acc_dtype=self._acc_dtype())
                 route = "colscan"
             elif coded:
+                # value bounds translate to CODE bounds host-side (sorted
+                # dictionary, same trick as expr._Lowering._dict_cmp): the
+                # scan compares int32 codes — no per-row dictionary gather,
+                # which is what made this route lose to numpy (the
+                # BENCH_exec_engine filter_agg_dict regression)
                 codes, d = fv.block.code_space()
-                res = _fused_colscan_fns()[1](codes, d, vals,
-                                              np.float64(lo), np.float64(hi))
+                clo = float(np.searchsorted(d, lo, side="left"))
+                chi = float(np.searchsorted(d, hi, side="right") - 1)
+                res = _fused_colscan_fns()(codes, vals,
+                                              np.float64(clo),
+                                              np.float64(chi))
                 route = "jit-colscan"
             else:
-                res = _fused_colscan_fns()[0](np.asarray(fv.arr), vals,
+                res = _fused_colscan_fns()(np.asarray(fv.arr), vals,
                                               np.float64(lo), np.float64(hi))
                 route = "jit-colscan"
             res = np.asarray(res)
@@ -607,7 +641,8 @@ class SegmentRunner:
         return PartitionBatch(out), route
 
     def _run_groupby(self, batch: PartitionBatch, shape, group_cols, aggs,
-                     ndv: int) -> PartitionBatch:
+                     ndv: int, kernel: bool = True
+                     ) -> Tuple[PartitionBatch, str]:
         from ..kernels import ops as kernel_ops
         _, gsrc, vcol = shape
         gv = batch.col(gsrc)
@@ -630,8 +665,13 @@ class SegmentRunner:
         int_sum = vcol is not None and np.issubdtype(
             np.asarray(vals).dtype, np.integer)
         with _x64():
-            res = np.asarray(kernel_ops.groupby_sum(
-                codes, vals, num_groups, acc_dtype=self._acc_dtype()))
+            if kernel:
+                res = np.asarray(kernel_ops.groupby_sum(
+                    codes, vals, num_groups, acc_dtype=self._acc_dtype()))
+                route = "groupby_mxu"
+            else:
+                res = _code_groupby(np.asarray(codes), vals, num_groups)
+                route = "code-groupby"
         sums = res[:, 0]
         cnts = np.round(res[:, 1]).astype(np.int64)
         sel = cnts > 0      # partial states carry only present groups
@@ -655,12 +695,164 @@ class SegmentRunner:
                 out[sc[1]] = ColumnVal(cnts[sel])
             else:
                 raise ExprCompileError(str(spec.func))
-        return PartitionBatch(out)
+        return PartitionBatch(out), route
 
 
 def _agg_state_cols(spec: AggSpec) -> List[str]:
     from .aggregate import _state_cols
     return _state_cols(spec)
+
+
+class ReduceRunner:
+    """Routes ONE reduce-side operator — the final aggregation merge or the
+    local join probe — per reduce task (DESIGN.md §11), mirroring what
+    SegmentRunner does for scan-side segments:
+
+      * `numpy` route — merge_aggregate / _match_pairs, the interpreted
+        oracle (tiny bucket groups, `backend="numpy"` sessions, fallbacks);
+      * `jit` route — aggregate.CompiledMerge (one fused segmented-reduce
+        program over all aggregate states) / joins.CompiledProbe (the
+        sort-searchsorted probe as two cached jitted programs);
+      * `segmented_merge` route — the Pallas kernel, per float state
+        column, on TPU/forced routes.
+
+    Every per-task choice lands in the shared SegmentRecord, so
+    ExecMetrics.segments exposes the reduce side exactly like the scan
+    side."""
+
+    def __init__(self, backend: str, cfg: PDEConfig, record: SegmentRecord):
+        self.backend = backend
+        self.cfg = cfg
+        self.record = record
+        self._lock = threading.Lock()
+        self._merge: Optional[CompiledMerge] = None
+        self._merge_failed = False
+
+    def _note(self, route: str, rows_in: int, rows_out: int,
+              bytes_in: float, fallback: bool = False) -> None:
+        rec = self.record
+        with self._lock:
+            rec.partitions += 1
+            rec.rows_in += rows_in
+            rec.rows_out += rows_out
+            rec.bytes_in += bytes_in
+            rec.routes[route] = rec.routes.get(route, 0) + 1
+            rec.fallbacks += int(fallback)
+
+    # -- final aggregation merge ----------------------------------------------
+
+    def _kernel_merge_eligible(self, batch: PartitionBatch,
+                               aggs: Sequence[AggSpec]) -> bool:
+        """The Pallas segmented_merge accumulates in float: only merges
+        whose every state column is float-typed (and present) qualify —
+        integer states stay on the int64-exact jitted route."""
+        for spec in aggs:
+            if spec.func == AggFunc.COUNT_DISTINCT:
+                return False
+            for sc in _agg_state_cols(spec):
+                if sc not in batch.cols:
+                    return False
+                if not np.issubdtype(
+                        np.asarray(batch.col(sc).arr).dtype, np.floating):
+                    return False
+        return True
+
+    def merge(self, batch: PartitionBatch, group_cols: Sequence[str],
+              aggs: Sequence[AggSpec]) -> PartitionBatch:
+        rows = batch.num_rows
+        nbytes = float(batch.nbytes)
+        if self.backend == "numpy":
+            out = merge_aggregate(batch, group_cols, aggs)
+            self._note("numpy", rows, out.num_rows, nbytes)
+            return out
+        kernel_eligible = ("segmented_merge"
+                           if self._kernel_merge_eligible(batch, aggs)
+                           else None)
+        decision = decide_reduce_backend(rows, kernel_eligible, None,
+                                         _on_tpu(), self.cfg)
+        route = decision.route
+        try:
+            if route == "segmented_merge":
+                out, route = self._merge_kernel(batch, group_cols, aggs)
+            elif route == "jit":
+                out = self._merge_jit(batch, group_cols, aggs)
+            else:
+                out = merge_aggregate(batch, group_cols, aggs)
+        except ExprCompileError:
+            out = merge_aggregate(batch, group_cols, aggs)
+            self._note("numpy", rows, out.num_rows, nbytes, fallback=True)
+            return out
+        self._note(route, rows, out.num_rows, nbytes)
+        return out
+
+    def _merge_jit(self, batch: PartitionBatch, group_cols, aggs
+                   ) -> PartitionBatch:
+        if self._merge_failed:
+            raise ExprCompileError("merge marked uncompilable")
+        if self._merge is None:
+            try:
+                self._merge = CompiledMerge(group_cols, aggs)
+            except ExprCompileError:
+                self._merge_failed = True
+                raise
+        return self._merge(batch)
+
+    def _merge_kernel(self, batch: PartitionBatch, group_cols, aggs
+                      ) -> Tuple[PartitionBatch, str]:
+        """Host grouping + one Pallas segmented_merge pass per state
+        column; each spec consumes the lane(s) it needs (assembly shared
+        with the oracle in aggregate.merge_from_lanes)."""
+        from ..kernels import ops as kernel_ops
+        from .aggregate import merge_from_lanes
+        keys = [np.asarray(batch.col(g).arr) for g in group_cols]
+        n = batch.num_rows
+        first, inverse = group_indices(keys) if group_cols else \
+            (np.zeros(1, np.int64), np.zeros(n, np.int64))
+        num_groups = len(first)
+        # re-decide with the NOW-KNOWN group cardinality: the NDV policy
+        # lives in decide_reduce_backend, not here
+        redecide = decide_reduce_backend(n, "segmented_merge", num_groups,
+                                         _on_tpu(), self.cfg)
+        if num_groups == 0 or redecide.route != "segmented_merge":
+            return self._merge_jit(batch, group_cols, aggs), "jit"
+        acc = "float32" if _on_tpu() else "float64"
+        lanes: Dict[str, np.ndarray] = {}
+        with _x64():
+            for spec in aggs:
+                for sc in _agg_state_cols(spec):
+                    if sc in lanes:
+                        continue
+                    lanes[sc] = np.asarray(kernel_ops.segmented_merge(
+                        inverse, np.asarray(batch.col(sc).arr),
+                        num_groups, acc_dtype=acc))
+        return (merge_from_lanes(batch, group_cols, aggs, first, lanes),
+                "segmented_merge")
+
+    # -- local join probe -----------------------------------------------------
+
+    def join(self, lbatch: PartitionBatch, rbatch: PartitionBatch,
+             lkey: str, rkey: str, how: str) -> PartitionBatch:
+        rows = lbatch.num_rows + rbatch.num_rows
+        nbytes = float(lbatch.nbytes + rbatch.nbytes)
+        if self.backend == "numpy":
+            out = join_local(lbatch, rbatch, lkey, rkey, how)
+            self._note("numpy", rows, out.num_rows, nbytes)
+            return out
+        decision = decide_reduce_backend(rows, None, None, _on_tpu(),
+                                         self.cfg)
+        if decision.route == "numpy":
+            out = join_local(lbatch, rbatch, lkey, rkey, how)
+            self._note("numpy", rows, out.num_rows, nbytes)
+            return out
+        try:
+            out = join_local(lbatch, rbatch, lkey, rkey, how,
+                             matcher=compile_probe())
+            self._note("jit", rows, out.num_rows, nbytes)
+        except TypeError:
+            # non-numeric key layout the probe cannot take: oracle fallback
+            out = join_local(lbatch, rbatch, lkey, rkey, how)
+            self._note("numpy", rows, out.num_rows, nbytes, fallback=True)
+        return out
 
 
 class JoinShuffledRDD(RDD):
@@ -676,10 +868,11 @@ class JoinShuffledRDD(RDD):
 
     def __init__(self, ldep: ShuffleDependency, rdep: ShuffleDependency,
                  bucket_groups: List[object], lkey: str, rkey: str,
-                 how: str = "inner"):
+                 how: str = "inner", runner: Optional["ReduceRunner"] = None):
         self.ldep, self.rdep = ldep, rdep
         self.bucket_groups = bucket_groups
         self.lkey, self.rkey, self.how = lkey, rkey, how
+        self.runner = runner
         super().__init__(ldep.parent.ctx, len(bucket_groups), [ldep, rdep])
 
     def _fetch(self, dep: ShuffleDependency, buckets: List[int],
@@ -687,6 +880,11 @@ class JoinShuffledRDD(RDD):
         pieces = self.ctx.block_manager.fetch_shuffle(
             dep.shuffle_id, dep.parent.num_partitions, buckets, maps)
         return PartitionBatch.concat(pieces)
+
+    def _join(self, l: PartitionBatch, r: PartitionBatch) -> PartitionBatch:
+        if self.runner is not None:
+            return self.runner.join(l, r, self.lkey, self.rkey, self.how)
+        return join_local(l, r, self.lkey, self.rkey, self.how)
 
     def compute(self, split: int, tc: TaskContext) -> PartitionBatch:
         spec = self.bucket_groups[split]
@@ -700,10 +898,10 @@ class JoinShuffledRDD(RDD):
             other = self._fetch(odep, [spec.bucket])
             l, r = ((sharded, other) if spec.shard_side == "left"
                     else (other, sharded))
-            return join_local(l, r, self.lkey, self.rkey, self.how)
+            return self._join(l, r)
         l = self._fetch(self.ldep, spec)
         r = self._fetch(self.rdep, spec)
-        return join_local(l, r, self.lkey, self.rkey, self.how)
+        return self._join(l, r)
 
 
 @dataclasses.dataclass
@@ -759,8 +957,9 @@ class Executor:
                  enable_map_pruning: bool = True,
                  default_shuffle_buckets: int = 64,
                  scan_cache: Optional[ScanCache] = None,
-                 backend: str = "compiled"):
+                 backend: str = "compiled", exchange: str = "coded"):
         assert backend in ("compiled", "numpy"), backend
+        assert exchange in ("coded", "decoded"), exchange
         self.ctx = ctx
         self.catalog = catalog
         self.pde = pde
@@ -771,10 +970,39 @@ class Executor:
         # "compiled": pipeline segments pick jit/Pallas routes per partition;
         # "numpy": segments run the evaluate() oracle (differential testing)
         self.backend = backend
+        # "coded": dictionary-preserving exchange — string columns cross
+        # shuffles as (codes, partition dictionary) and the reduce side
+        # merge-remaps dictionaries (DESIGN.md §11); "decoded": the legacy
+        # exchange that materializes raw strings before hashing, kept as
+        # the semantic oracle for differential tests and shuffle_bench
+        self.exchange = exchange
+        # map-side radix bucketing through the Pallas kernel (TPU/forced);
+        # fixed per executor so every map task of a shuffle agrees
+        self._radix_kernel = (backend == "compiled"
+                              and (pde.segment_force_kernels or _on_tpu()))
         # shuffle ids this executor created: the server releases their map
         # outputs from the block store once the query completes
         self.created_shuffles: List[int] = []
         self.metrics = ExecMetrics()
+
+    def _prep_exchange(self, rdd: RDD) -> RDD:
+        """Map-side exchange prep.  The legacy ('decoded') exchange
+        materializes raw strings so the shuffle hashes raw values; the
+        dictionary-preserving exchange ships (codes, partition-local
+        dictionary) through the shuffle block untouched — hashing runs on
+        the dictionary (one crc32 per distinct value) and the reduce side
+        unifies dictionaries instead of decoding."""
+        if self.exchange == "decoded":
+            return rdd.map_partitions(lambda s, b: b.decode_strings())
+        return rdd
+
+    def _reduce_runner(self, consumer: str, outputs: List[str]
+                       ) -> ReduceRunner:
+        """Reduce-side runner + metrics record for one shuffle boundary."""
+        record = SegmentRecord(table="<exchange>", depth=1,
+                               consumer=consumer, outputs=outputs, pred=None)
+        self.metrics.segments.append(record)
+        return ReduceRunner(self.backend, self.pde, record)
 
     def _new_shuffle(self, parent: RDD, num_buckets: int, partitioner,
                      **kw) -> ShuffleDependency:
@@ -948,9 +1176,8 @@ class Executor:
             # function per partition, kernel-lowered when the shape allows
             scanc, runner = self._make_runner(seg, "aggregate")
             src = self._segment_source_rdd(scanc, seg, ensure_nonempty=True)
-            map_rdd = src.map_partitions(
-                lambda s, b: runner.run_aggregate(b, group_cols, aggs)
-            ).map_partitions(lambda s, b: b.decode_strings())
+            map_rdd = self._prep_exchange(src.map_partitions(
+                lambda s, b: runner.run_aggregate(b, group_cols, aggs)))
         else:
             child = self._materialize_empty(self._compile(node.child),
                                             node.child)
@@ -958,8 +1185,7 @@ class Executor:
             def map_side(split: int, batch: PartitionBatch) -> PartitionBatch:
                 return partial_aggregate(batch, group_cols, aggs)
 
-            map_rdd = child.rdd.map_partitions(map_side).map_partitions(
-                lambda s, b: b.decode_strings())
+            map_rdd = self._prep_exchange(child.rdd.map_partitions(map_side))
 
         if not group_cols:
             partitioner = single_bucket()
@@ -967,7 +1193,8 @@ class Executor:
         else:
             num_buckets = max(self.default_shuffle_buckets,
                               map_rdd.num_partitions)
-            partitioner = bucket_by_composite(group_cols, num_buckets)
+            partitioner = bucket_by_composite(group_cols, num_buckets,
+                                              kernel=self._radix_kernel)
 
         dep = self._new_shuffle(
             map_rdd, num_buckets, partitioner,
@@ -984,7 +1211,8 @@ class Executor:
         else:
             groups = [[b] for b in range(num_buckets)]
 
-        reduce_fn = lambda split, b: merge_aggregate(b, group_cols, aggs)
+        rrunner = self._reduce_runner("merge_aggregate", names)
+        reduce_fn = lambda split, b: rrunner.merge(b, group_cols, aggs)
         rdd = ShuffledRDD(dep, groups, reduce_fn)
         return Compiled(rdd, names)
 
@@ -1081,9 +1309,10 @@ class Executor:
                 "copartition", None, left.size_hint or 0.0,
                 right.size_hint or 0.0, left.rdd.num_partitions,
                 "co-partitioned zip, no shuffle")
+            zrunner = self._reduce_runner("join_probe", names)
             rdd = ZipPartitionsRDD(
                 left.rdd, right.rdd,
-                lambda s, l, r: join_local(l, r, lkey, rkey, node.how))
+                lambda s, l, r: zrunner.join(l, r, lkey, rkey, node.how))
             return Compiled(rdd, names, size_hint=hint, scan_filtered=filtered)
 
         if node.strategy == JoinStrategy.BROADCAST:
@@ -1105,8 +1334,8 @@ class Executor:
         akey, bkey = (lkey, rkey) if first == "left" else (rkey, lkey)
 
         adep = self._new_shuffle(
-            a.rdd.map_partitions(lambda s, x: x.decode_strings()),
-            num_buckets, bucket_by_hash(akey, num_buckets),
+            self._prep_exchange(a.rdd), num_buckets,
+            bucket_by_hash(akey, num_buckets, kernel=self._radix_kernel),
             accumulators=lambda: [SizeAccumulator(num_buckets),
                                   HeavyHitterAccumulator(akey)])
         astats = self.ctx.scheduler.run_map_stage(adep)
@@ -1129,14 +1358,15 @@ class Executor:
             self._record_boundary(
                 "broadcast", first, lb, rb, b.rdd.num_partitions,
                 decision.reason)
+            brunner = self._reduce_runner("join_probe", names)
             if first == "left":
                 # inner join is symmetric; emit left-major column order
                 rdd = b.rdd.map_partitions(
-                    lambda s, big: _reorder(join_local(
+                    lambda s, big: _reorder(brunner.join(
                         small, big, akey, bkey, node.how), names))
             else:
                 rdd = b.rdd.map_partitions(
-                    lambda s, big: _reorder(join_local(
+                    lambda s, big: _reorder(brunner.join(
                         big, small, bkey, akey, node.how), names))
             return Compiled(rdd, names, size_hint=hint, scan_filtered=filtered)
 
@@ -1146,8 +1376,8 @@ class Executor:
             f"> threshold; shuffling both")
         self.metrics.shuffled_bytes += astats.total_output_bytes()
         bdep = self._new_shuffle(
-            b.rdd.map_partitions(lambda s, x: x.decode_strings()),
-            num_buckets, bucket_by_hash(bkey, num_buckets),
+            self._prep_exchange(b.rdd), num_buckets,
+            bucket_by_hash(bkey, num_buckets, kernel=self._radix_kernel),
             accumulators=lambda: [SizeAccumulator(num_buckets),
                                   HeavyHitterAccumulator(bkey)])
         bstats = self.ctx.scheduler.run_map_stage(bdep)
@@ -1169,7 +1399,8 @@ class Executor:
             hot_keys=sdecision.hot_keys)
 
         rdd = JoinShuffledRDD(ldep, rdep, sdecision.splits, lkey, rkey,
-                              node.how)
+                              node.how,
+                              runner=self._reduce_runner("join_probe", names))
         return Compiled(rdd, names, size_hint=hint, scan_filtered=filtered)
 
     def _broadcast(self, left: Compiled, right: Compiled, lkey: str,
@@ -1180,7 +1411,7 @@ class Executor:
         self.metrics.join_decisions.append(note)
         collected = PartitionBatch.concat(
             self.ctx.scheduler.run_result_stage(
-                small.rdd.map_partitions(lambda s, x: x.decode_strings())))
+                self._prep_exchange(small.rdd)))
         self.metrics.broadcast_bytes += collected.nbytes
         observed = float(collected.nbytes)
         lb, rb = ((observed, big.size_hint or 0.0)
@@ -1188,14 +1419,15 @@ class Executor:
                   else (big.size_hint or 0.0, observed))
         self._record_boundary("broadcast", broadcast_side, lb, rb,
                               big.rdd.num_partitions, note)
+        brunner = self._reduce_runner("join_probe", names)
         if broadcast_side == "right":
             rdd = big.rdd.map_partitions(
                 lambda s, part: _reorder(
-                    broadcast_join(part, collected, bkey, skey, how), names))
+                    brunner.join(part, collected, bkey, skey, how), names))
         else:
             rdd = big.rdd.map_partitions(
                 lambda s, part: _reorder(
-                    join_local(collected, part, skey, bkey, how), names))
+                    brunner.join(collected, part, skey, bkey, how), names))
         return Compiled(rdd, names)
 
     def _shuffle_join(self, left: Compiled, right: Compiled, lkey: str,
@@ -1205,12 +1437,12 @@ class Executor:
                           left.rdd.num_partitions, right.rdd.num_partitions)
         self.metrics.join_decisions.append(note)
         ldep = self._new_shuffle(
-            left.rdd.map_partitions(lambda s, x: x.decode_strings()),
-            num_buckets, bucket_by_hash(lkey, num_buckets),
+            self._prep_exchange(left.rdd), num_buckets,
+            bucket_by_hash(lkey, num_buckets, kernel=self._radix_kernel),
             accumulators=lambda: [SizeAccumulator(num_buckets)])
         rdep = self._new_shuffle(
-            right.rdd.map_partitions(lambda s, x: x.decode_strings()),
-            num_buckets, bucket_by_hash(rkey, num_buckets),
+            self._prep_exchange(right.rdd), num_buckets,
+            bucket_by_hash(rkey, num_buckets, kernel=self._radix_kernel),
             accumulators=lambda: [SizeAccumulator(num_buckets)])
         ls = self.ctx.scheduler.run_map_stage(ldep)
         rs = self.ctx.scheduler.run_map_stage(rdep)
@@ -1219,7 +1451,8 @@ class Executor:
         self._record_boundary("shuffle", None, ls.total_output_bytes(),
                               rs.total_output_bytes(), num_buckets, note)
         groups = [[b] for b in range(num_buckets)]
-        rdd = JoinShuffledRDD(ldep, rdep, groups, lkey, rkey, how)
+        rdd = JoinShuffledRDD(ldep, rdep, groups, lkey, rkey, how,
+                              runner=self._reduce_runner("join_probe", names))
         return Compiled(rdd, names)
 
     # -- sort / limit ----------------------------------------------------------
@@ -1240,8 +1473,7 @@ class Executor:
                     idx = idx[:limit]
                 return b.take(idx)
 
-            map_rdd = src.map_partitions(seg_sort).map_partitions(
-                lambda s, b: b.decode_strings())
+            map_rdd = self._prep_exchange(src.map_partitions(seg_sort))
             child = Compiled(map_rdd, names)
         else:
             child = self._materialize_empty(self._compile(node.child),
@@ -1254,8 +1486,8 @@ class Executor:
                 return batch.take(idx)
 
             # per-partition top-k, then single merge task (ORDER BY ... LIMIT)
-            map_rdd = child.rdd.map_partitions(local_sort).map_partitions(
-                lambda s, b: b.decode_strings())
+            map_rdd = self._prep_exchange(
+                child.rdd.map_partitions(local_sort))
         dep = self._new_shuffle(map_rdd, 1, single_bucket(),
                                 accumulators=lambda: [SizeAccumulator(1)])
         self.ctx.scheduler.run_map_stage(dep)
@@ -1288,9 +1520,8 @@ class Executor:
             head_rdd = child.rdd.map_partitions(lambda s, b: b.head(n))
 
         # wrap as a one-partition RDD via shuffle to a single bucket
-        dep = self._new_shuffle(
-            head_rdd.map_partitions(lambda s, b: b.decode_strings()), 1,
-            single_bucket())
+        dep = self._new_shuffle(self._prep_exchange(head_rdd), 1,
+                                single_bucket())
         self.ctx.scheduler.run_map_stage(dep)
         rdd = ShuffledRDD(dep, [[0]], lambda s, b: b.head(n))
         return Compiled(rdd, child.names)
@@ -1330,7 +1561,15 @@ def _sort_indices(batch: PartitionBatch, keys: List[Tuple[str, bool]]
     arrays = []
     for name, desc in reversed(keys):
         v = batch.col(name)
-        a = v.decoded() if v.is_string else np.asarray(v.arr)
+        if v.is_string and v.sorted_dict:
+            # sorted dictionaries make code order string order: ORDER BY on
+            # a dict-coded column never decodes (dictionary-preserving
+            # exchange keeps this true across the shuffle)
+            a = np.asarray(v.arr)
+        elif v.is_string:
+            a = v.decoded()
+        else:
+            a = np.asarray(v.arr)
         if desc:
             if a.dtype.kind in ("U", "S"):
                 # lexsort has no descending: sort by negated rank

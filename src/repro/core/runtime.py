@@ -182,7 +182,18 @@ class BlockManager:
         """All pieces of `buckets` from every map task (or the subset in
         `maps` — used by skew-split reducers, each of which owns a disjoint
         stripe of map outputs); FetchFailed lists the missing map splits so
-        the scheduler can recompute exactly those."""
+        the scheduler can recompute exactly those.
+
+        Pieces are zero-copy views of the stored blocks, returned in
+        deterministic (map, bucket) order: the reduce task sizes its output
+        once from the piece offsets and assembles each column with a single
+        preallocated concat (`PartitionBatch.concat`).  The block format is
+        dictionary-preserving (DESIGN.md §11): a string column travels as
+        (int32 codes, partition-local dictionary) — the dictionary rides in
+        the block as the column's header — and the reduce side unifies
+        dictionaries with a vectorized merge-remap instead of decoding.
+        Recomputed-from-lineage blocks carry byte-identical dictionaries
+        because map tasks are deterministic."""
         pieces, missing = [], set()
         with self.lock:
             for m in (range(num_maps) if maps is None else maps):
@@ -378,7 +389,46 @@ class Scheduler:
     def run_map_stage(self, dep: ShuffleDependency) -> StageStats:
         """Materialize the map side of a shuffle in worker memory, gathering
         PDE statistics while doing so.  Returns the aggregated stats the
-        optimizer uses to re-plan the downstream DAG (§3.1)."""
+        optimizer uses to re-plan the downstream DAG (§3.1).
+
+        Recovers from lost UPSTREAM shuffle output mid-stage: when the map
+        tasks themselves read a parent shuffle (e.g. the sort boundary above
+        an aggregation) and a worker died since that shuffle materialized,
+        the missing parent map outputs recompute from lineage and the stage
+        retries — the same policy run_result_stage applies (§2.3)."""
+        for retry in range(self.max_stage_retries):
+            try:
+                return self._run_map_stage_attempt(dep)
+            except FetchFailed as ff:
+                self._recover_lineage(dep.parent, ff)
+        raise RuntimeError("exceeded max stage retries (map stage)")
+
+    def _recover_lineage(self, rdd: "RDD", ff: FetchFailed) -> None:
+        """Recompute the map outputs `ff` reported missing; when the
+        recovery tasks themselves hit a lost shuffle further up the chain,
+        recover that one first, then CLIMB BACK DOWN and finish the
+        original recovery — a stack of pending levels, so one call repairs
+        a whole multi-level chain instead of burning one outer stage retry
+        per level.  Bounded walk: the lineage DAG is finite; the budget
+        covers a chain of max_stage_retries levels each re-lost a few
+        times."""
+        pending = [ff]
+        for _ in range(self.max_stage_retries * 4):
+            cur = pending[-1]
+            dep = _find_shuffle_dep(rdd, cur.shuffle_id)
+            if dep is None:
+                raise cur
+            try:
+                self._recover_map_outputs(dep, cur.missing_maps)
+            except FetchFailed as deeper:
+                pending.append(deeper)
+                continue
+            pending.pop()
+            if not pending:
+                return
+        raise ff
+
+    def _run_map_stage_attempt(self, dep: ShuffleDependency) -> StageStats:
         stage_id = next(_stage_counter)
         parent = dep.parent
         stats = StageStats(stage_id)
@@ -451,10 +501,7 @@ class Scheduler:
                     lambda split, tc: rdd.iterator(split, tc))
                 return [results[i] for i in range(rdd.num_partitions)]
             except FetchFailed as ff:
-                dep = _find_shuffle_dep(rdd, ff.shuffle_id)
-                if dep is None:
-                    raise
-                self._recover_map_outputs(dep, ff.missing_maps)
+                self._recover_lineage(rdd, ff)
         raise RuntimeError("exceeded max stage retries")
 
     def run_job(self, rdd: RDD) -> List[PartitionBatch]:

@@ -96,8 +96,15 @@ class HeavyHitterAccumulator(Accumulator):
     def update(self, bucket: int, batch) -> None:
         if self.key_col not in batch.cols:
             return
-        keys, counts = np.unique(batch.col(self.key_col).decoded(),
-                                 return_counts=True)
+        v = batch.col(self.key_col)
+        if v.is_string:
+            # sketch on codes, decode only the (few) DISTINCT values — the
+            # map side of the dictionary-preserving exchange never
+            # materializes a string column row-wise
+            codes, counts = np.unique(np.asarray(v.arr), return_counts=True)
+            keys = v.sdict[codes]
+        else:
+            keys, counts = np.unique(np.asarray(v.arr), return_counts=True)
         for key, c in zip(keys.tolist(), counts.tolist()):
             if key in self.counters:
                 self.counters[key] += c

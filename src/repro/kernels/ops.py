@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from . import colscan as _colscan
 from . import dictdecode as _dd
 from . import groupby_mxu as _gb
+from . import radix_partition as _rp
+from . import segmented_merge as _sm
 
 
 @functools.lru_cache(maxsize=1)
@@ -64,3 +66,22 @@ def groupby_sum(codes, values, num_groups: int, acc_dtype: str = "float32"):
     return _gb.groupby_sum(jnp.asarray(codes), jnp.asarray(values),
                            num_groups=num_groups, interpret=_interp(),
                            acc_dtype=acc_dtype)
+
+
+def segmented_merge(codes, values, num_groups: int,
+                    acc_dtype: str = "float32"):
+    """(num_groups, 4) per-group [sum, count, min, max] — the reduce-side
+    merge of one aggregate state column (DESIGN.md §11)."""
+    return _sm.segmented_merge(jnp.asarray(codes), jnp.asarray(values),
+                               num_groups=num_groups, interpret=_interp(),
+                               acc_dtype=acc_dtype)
+
+
+def radix_partition(keys_u32, num_buckets: int, with_counts: bool = True):
+    """(bucket_ids, per-bucket counts) for folded uint32 key hashes — the
+    map side of the memory-based shuffle as one fused pass.
+    `with_counts=False` skips the histogram matmul (ids-only callers)."""
+    return _rp.radix_partition(jnp.asarray(keys_u32),
+                               num_buckets=num_buckets,
+                               interpret=_interp(),
+                               with_counts=with_counts)

@@ -1,0 +1,135 @@
+"""Map-side shuffle bucketing (radix partition) — Pallas TPU kernel.
+
+The map half of the memory-based shuffle (paper §5) assigns every row to a
+reduce bucket: hash-mix the (pre-folded) key, take it modulo the bucket
+count, and histogram the buckets so the scheduler knows each bucket's size
+without a second pass.  Host numpy does this with three full-column passes;
+the kernel fuses mix + modulo + histogram into one HBM->VMEM stream: the
+VPU computes bucket ids for a row tile while the MXU one-hot-matmuls the
+same tile into per-tile bucket counts.
+
+TPU has no 64-bit integer lanes, so keys are folded to uint32 host-side
+(`fold_keys_u32`: xor of the int64 halves — value-deterministic, which is
+all a partitioner needs) and mixed with the 32-bit golden-ratio constant.
+The bucket assignment therefore differs from the host partitioner's 64-bit
+mix — that is fine: any deterministic assignment is a correct shuffle
+partition, and both sides of one shuffle always use the same partitioner
+(`shuffle.bucket_by_hash(..., kernel=...)` fixes the route per shuffle, not
+per task, so equal keys land in equal buckets everywhere).
+
+Buckets pad to a multiple of 128 for MXU alignment; padding rows take an
+out-of-range bucket id so they vanish from the histogram.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 1024
+
+_GOLDEN32 = np.uint32(2654435761)       # 2^32 / phi, Knuth's constant
+
+
+def fold_keys_u32(keys: np.ndarray) -> np.ndarray:
+    """Host-side fold of int64 key hashes into uint32 lanes the kernel can
+    mix: xor of the two 32-bit halves (value-deterministic)."""
+    k = np.asarray(keys).astype(np.int64, copy=False).view(np.uint64)
+    return ((k ^ (k >> np.uint64(32))) & np.uint64(0xFFFFFFFF)).astype(
+        np.uint32)
+
+
+def _bucket_ids(keys_ref, *, num_buckets: int, num_buckets_padded: int,
+                valid_rows: int, block: int, prog_id):
+    k = keys_ref[...]
+    h = k * _GOLDEN32                                   # uint32 wrap-around
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    b = (h % jnp.uint32(num_buckets)).astype(jnp.int32)
+    # padding rows -> out-of-range bucket: excluded from the histogram and
+    # sliced off the per-row ids by the wrapper
+    pos = jax.lax.broadcasted_iota(jnp.int32, (block,), 0) + prog_id * block
+    return jnp.where(pos < valid_rows, b, num_buckets_padded)
+
+
+def _radix_kernel(keys_ref, bucket_ref, counts_ref, *, num_buckets: int,
+                  num_buckets_padded: int, valid_rows: int):
+    block = keys_ref.shape[0]
+    b = _bucket_ids(keys_ref, num_buckets=num_buckets,
+                    num_buckets_padded=num_buckets_padded,
+                    valid_rows=valid_rows, block=block,
+                    prog_id=pl.program_id(0))
+    bucket_ref[...] = b
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, num_buckets_padded), 1)
+    onehot = (b[:, None] == lanes).astype(counts_ref.dtype)
+    ones = jnp.ones((1, block), counts_ref.dtype)
+    counts_ref[...] = (ones @ onehot)[None]             # MXU: (1, 1, Bp)
+
+
+def _radix_ids_kernel(keys_ref, bucket_ref, *, num_buckets: int,
+                      num_buckets_padded: int, valid_rows: int):
+    bucket_ref[...] = _bucket_ids(
+        keys_ref, num_buckets=num_buckets,
+        num_buckets_padded=num_buckets_padded, valid_rows=valid_rows,
+        block=keys_ref.shape[0], prog_id=pl.program_id(0))
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "interpret",
+                                             "block_rows", "with_counts"))
+def radix_partition(keys_u32: jnp.ndarray, *, num_buckets: int,
+                    interpret: bool = False,
+                    block_rows: int = BLOCK_ROWS,
+                    with_counts: bool = True):
+    """Returns (bucket_ids[int32, n], counts[int32, num_buckets]) for the
+    folded uint32 key hashes; `with_counts=False` skips the histogram
+    matmul and returns (bucket_ids, None) — the shuffle partitioner path,
+    whose caller only consumes the ids (per-bucket sizes come from the
+    materialized pieces via SizeAccumulator)."""
+    n = keys_u32.shape[0]
+    bp = max(128, -(-num_buckets // 128) * 128)
+    num_blocks = max(1, -(-n // block_rows))
+    padded = num_blocks * block_rows
+    k = jnp.zeros((padded,), jnp.uint32).at[:n].set(keys_u32)
+    if not with_counts:
+        buckets = pl.pallas_call(
+            functools.partial(_radix_ids_kernel, num_buckets=num_buckets,
+                              num_buckets_padded=bp, valid_rows=n),
+            grid=(num_blocks,),
+            in_specs=[pl.BlockSpec((block_rows,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((padded,), jnp.int32),
+            interpret=interpret,
+        )(k)
+        return buckets[:n], None
+    buckets, counts = pl.pallas_call(
+        functools.partial(_radix_kernel, num_buckets=num_buckets,
+                          num_buckets_padded=bp, valid_rows=n),
+        grid=(num_blocks,),
+        in_specs=[pl.BlockSpec((block_rows,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block_rows,), lambda i: (i,)),
+                   pl.BlockSpec((1, 1, bp), lambda i: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((padded,), jnp.int32),
+                   jax.ShapeDtypeStruct((num_blocks, 1, bp), jnp.float32)],
+        interpret=interpret,
+    )(k)
+    # per-tile partials are exact small floats (<= block_rows); cast to
+    # int32 BEFORE the cross-block sum so totals stay exact past the
+    # float32 2^24 integer limit on huge skewed buckets
+    total = jnp.sum(counts[:, 0, :num_buckets].astype(jnp.int32), axis=0)
+    return buckets[:n], total
+
+
+def radix_partition_ref(keys_u32: np.ndarray, num_buckets: int):
+    """Numpy oracle for the kernel's hash-mix and histogram."""
+    k = np.asarray(keys_u32, np.uint32)
+    h = (k * _GOLDEN32).astype(np.uint32)
+    h = h ^ (h >> np.uint32(15))
+    h = (h * np.uint32(0x85EBCA6B)).astype(np.uint32)
+    h = h ^ (h >> np.uint32(13))
+    b = (h % np.uint32(num_buckets)).astype(np.int32)
+    return b, np.bincount(b, minlength=num_buckets).astype(np.int32)

@@ -63,7 +63,7 @@ class SharkServer:
                  pde_config: Optional[PDEConfig] = None,
                  speculation: bool = True,
                  task_launch_overhead_s: float = 0.0,
-                 backend: str = "compiled"):
+                 backend: str = "compiled", exchange: str = "coded"):
         self.ctx = SharkContext(num_workers=num_workers,
                                 max_threads=max_threads,
                                 speculation=speculation,
@@ -83,7 +83,7 @@ class SharkServer:
             pde=pde_config or PDEConfig(), enable_pde=enable_pde,
             enable_map_pruning=enable_map_pruning,
             default_shuffle_buckets=default_shuffle_buckets,
-            backend=backend)
+            backend=backend, exchange=exchange)
         self.scheduler = FairScheduler(
             self._run_query, max_concurrent=max_concurrent_queries,
             max_queue_depth=max_queue_depth)

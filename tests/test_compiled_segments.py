@@ -139,12 +139,16 @@ def test_segment_fused_aggregate_metrics():
         "WHERE fn BETWEEN 20 AND 60 GROUP BY fs")
     m = sess.metrics()
     assert m.interpreted_scan_ops == 0
-    assert len(m.segments) == 1
+    # one scan-side segment + one reduce-side merge record (DESIGN.md §11)
+    assert len(m.segments) == 2
     seg = m.segments[0]
     assert seg.consumer == "aggregate"
     assert seg.pred is not None
     assert seg.routes.get("jit", 0) == seg.partitions > 0
     assert seg.rows_in == len(data["fn"])
+    merge = m.segments[1]
+    assert merge.consumer == "merge_aggregate"
+    assert merge.partitions > 0
     # cross-check against pure numpy
     mask = (data["fn"] >= 20) & (data["fn"] <= 60)
     order = np.argsort(got["fs"])

@@ -42,9 +42,11 @@ def _make_server() -> SharkServer:
         {"sk": rng.integers(0, 8, N_FACT).astype(np.int64),
          "mk": rng.integers(0, 300, N_FACT).astype(np.int64),
          "rev": rng.uniform(0, 10, N_FACT)})
-    srv.create_table("small_d", Schema.of(skey=DType.INT64, sval=DType.INT64),
+    srv.create_table("small_d", Schema.of(skey=DType.INT64, sval=DType.INT64,
+                                          sname=DType.STRING),
                      {"skey": np.arange(8, dtype=np.int64),
-                      "sval": np.arange(8, dtype=np.int64) % 3})
+                      "sval": np.arange(8, dtype=np.int64) % 3,
+                      "sname": np.array([f"grp-{i % 3}" for i in range(8)])})
     srv.create_table("mid_d", Schema.of(mkey=DType.INT64, mval=DType.INT64),
                      {"mkey": np.arange(300, dtype=np.int64),
                       "mval": np.arange(300, dtype=np.int64) % 9})
@@ -70,6 +72,72 @@ def _run_concurrent(srv, n_clients: int = 2):
 def _assert_shuffles_released(srv):
     leaked = [k for k in srv.ctx.block_manager.blocks if k[0] == "shuf"]
     assert not leaked, f"shuffle blocks leaked: {leaked[:5]}"
+
+
+QUERY_DICT = ("SELECT sname, COUNT(*) AS c, SUM(rev) AS total FROM fact "
+              "JOIN small_d ON fact.sk = small_d.skey "
+              "GROUP BY sname ORDER BY sname")
+
+
+def test_worker_loss_with_dictionary_preserving_shuffle():
+    """The dictionary-preserving shuffle block format survives recompute-
+    from-lineage: a STRING group key crosses both join and aggregate
+    boundaries as (codes, partition dictionary); killing a worker after
+    each map stage forces lost blocks — including their dictionaries — to
+    be recomputed, and the merged result must be identical to the
+    failure-free run."""
+    srv = _make_server()
+    try:
+        scheduler = srv.ctx.scheduler
+        orig_map_stage = scheduler.run_map_stage
+        calls = []
+        scheduler.run_map_stage = lambda dep: (calls.append(dep),
+                                               orig_map_stage(dep))[1]
+        sess = srv.session("dict-chaos")
+        baseline = sess.sql_np(QUERY_DICT)
+        scheduler.run_map_stage = orig_map_stage
+        n_boundaries = len(calls)
+        assert n_boundaries >= 2
+        base_rows = list(zip(baseline["sname"].tolist(),
+                             baseline["c"].tolist(),
+                             [round(float(t), 6)
+                              for t in baseline["total"].tolist()]))
+        assert base_rows and all(isinstance(s, str) and s
+                                 for s, _, _ in base_rows)
+        _assert_shuffles_released(srv)
+
+        def kill_one():
+            w = sorted(scheduler.alive)[0]
+            scheduler.kill_worker(w)
+            scheduler.add_worker()
+
+        for k in range(n_boundaries):
+            state = {"i": 0}
+            lock = threading.Lock()
+
+            def chaotic_map_stage(dep, _k=k):
+                stats = orig_map_stage(dep)
+                with lock:
+                    fire = state["i"] == _k
+                    state["i"] += 1
+                if fire:
+                    kill_one()
+                return stats
+
+            scheduler.run_map_stage = chaotic_map_stage
+            try:
+                got = sess.sql_np(QUERY_DICT)
+            finally:
+                scheduler.run_map_stage = orig_map_stage
+            got_rows = list(zip(got["sname"].tolist(), got["c"].tolist(),
+                                [round(float(t), 6)
+                                 for t in got["total"].tolist()]))
+            assert got_rows == base_rows, \
+                f"boundary {k}: dict-shuffle result diverged after recompute"
+            _assert_shuffles_released(srv)
+        assert scheduler.tasks_recomputed > 0
+    finally:
+        srv.shutdown()
 
 
 def test_worker_loss_at_each_shuffle_boundary_and_during_reduce():

@@ -139,6 +139,48 @@ def test_compiled_path_taken_per_archetype(env):
             f"archetype {arch!r} never took the compiled path: {coverage}"
 
 
+N_EXCHANGE_SEEDS = 60
+
+
+@pytest.fixture(scope="module")
+def exchange_env(env):
+    """Two more executors over the SAME data: the compiled reduce path
+    FORCED ON over the dictionary-preserving exchange, and the legacy
+    decoded exchange with the numpy backend (compiled reduce forced off) —
+    the two extremes of the new exchange surface (DESIGN.md §11)."""
+    from repro.core.pde import PDEConfig
+    _, _, data, dfs, _ = env
+    sess_f = SharkSession(backend="compiled", exchange="coded",
+                          pde_config=PDEConfig(reduce_force_compiled=True),
+                          **SESSION_KW)
+    sess_l = SharkSession(backend="numpy", exchange="decoded", **SESSION_KW)
+    register_star_tables(sess_f, data)
+    register_star_tables(sess_l, data)
+    yield sess_f, sess_l, data, dfs
+    sess_f.shutdown()
+    sess_l.shutdown()
+
+
+@pytest.mark.parametrize("seed", range(N_EXCHANGE_SEEDS))
+def test_compiled_reduce_forced_on_off_parity(exchange_env, seed):
+    """Row-identical parity between the forced compiled reduce path (coded
+    exchange) and the fully interpreted legacy path (decoded exchange,
+    numpy backend), both checked against pandas."""
+    sess_f, sess_l, data, dfs = exchange_env
+    query = QueryGen(data, seed).gen()
+    sql = query.sql()
+    got_f = sess_f.sql_np(sql)
+    got_l = sess_l.sql_np(sql)
+    ref = query.pandas(dfs)
+    compare(query, got_f, ref)
+    compare(query, got_l, ref)
+    assert_backend_parity(query, got_f, got_l, sql)
+    # the forced session must never take a numpy reduce route
+    for s in sess_f.metrics().segments:
+        if s.consumer in ("merge_aggregate", "join_probe"):
+            assert s.routes.get("numpy", 0) == s.fallbacks, s.describe()
+
+
 def test_oracle_grid_covers_multiway_joins(env):
     """The seeded grid must actually exercise the tentpole surface: 3-way
     and 4-way joins, both join styles, grouping, having, and limits."""
