@@ -1,0 +1,198 @@
+"""Out-of-core storage tier benchmark (DESIGN.md §12) — spill vs recompute.
+
+A TPC-H-micro lineitem lives behind an ExternalSource whose loader is
+deliberately non-trivial (generate + sort, the stand-in for deserializing
+HDFS files).  The server's cache budget is a quarter of the working set, so
+the memory manager is under pressure for the whole run.  Two configurations
+race the same concurrent workload:
+
+  * ``spill``  — COLD partitions go to disk as compressed segments and
+    fault back in with one read + decode;
+  * ``drop``   — COLD partitions are discarded and fault back through
+    partition lineage (re-run the loader, re-slice, re-encode) — the
+    paper's recompute-only §3.2 behavior.
+
+Every result is checked against an unlimited-budget reference; zero wrong
+results is part of the acceptance bar.  The headline assertion: the spill
+tier finishes the workload in less wall clock than recompute-from-lineage.
+
+    PYTHONPATH=src python -m benchmarks.spill_bench \
+        [--rows 600000] [--clients 3] [--rounds 3] \
+        [--json-out BENCH_spill.json] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import DType, Schema
+from repro.core.catalog import ExternalSource
+from repro.server import SharkServer
+
+from .common import report
+
+LINEITEM_SCHEMA = Schema.of(
+    L_ORDERKEY=DType.INT64, L_SUPPKEY=DType.INT64, L_QUANTITY=DType.INT32,
+    L_EXTENDEDPRICE=DType.FLOAT64, L_RECEIPTDATE=DType.INT32)
+
+
+def lineitem_loader(n: int):
+    """Deterministic, deliberately non-free loader: the cost of re-running
+    it is exactly what the drop-mode baseline pays per lineage fault."""
+    def load() -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(2)
+        return {
+            "L_ORDERKEY": np.sort(rng.integers(0, n // 4, n)).astype(
+                np.int64),
+            "L_SUPPKEY": rng.integers(0, 10_000, n).astype(np.int64),
+            "L_QUANTITY": rng.integers(1, 50, n).astype(np.int32),
+            "L_EXTENDEDPRICE": rng.uniform(900, 100_000, n),
+            "L_RECEIPTDATE": rng.integers(8000, 10500, n).astype(np.int32),
+        }
+    return load
+
+
+def round_queries(r: int) -> List[str]:
+    """Distinct thresholds per round: every query has its own plan
+    fingerprint, so rounds execute instead of hitting the result cache and
+    the memory manager stays under pressure throughout."""
+    t = 20_000 + 7_000 * r
+    return [
+        f"SELECT COUNT(*) AS c, AVG(L_EXTENDEDPRICE) AS m FROM lineitem "
+        f"WHERE L_EXTENDEDPRICE BETWEEN {t} AND {t + 40_000}",
+        "SELECT L_RECEIPTDATE, COUNT(*) AS c FROM lineitem "
+        f"WHERE L_RECEIPTDATE < {9_000 + 100 * r} GROUP BY L_RECEIPTDATE",
+        f"SELECT SUM(L_QUANTITY) AS s FROM lineitem "
+        f"WHERE L_ORDERKEY < {(r + 1) * 10_000}",
+    ]
+
+
+def canonical(res: Dict[str, np.ndarray]):
+    rows = []
+    names = sorted(res)
+    for tup in zip(*(np.asarray(res[n]).tolist() for n in names)):
+        rows.append(tuple(round(v, 6) if isinstance(v, float) else v
+                          for v in tup))
+    return tuple(sorted(rows))
+
+
+def make_server(n_rows: int, parts: int, budget: Optional[int],
+                spill_mode: Optional[str],
+                spill_dir: Optional[str]) -> SharkServer:
+    srv = SharkServer(num_workers=4, max_threads=4,
+                      cache_budget_bytes=budget,
+                      max_concurrent_queries=2, default_partitions=parts,
+                      default_shuffle_buckets=8,
+                      spill_mode=spill_mode, spill_dir=spill_dir)
+    srv.register_external(ExternalSource("lineitem", LINEITEM_SCHEMA,
+                                         lineitem_loader(n_rows), parts))
+    return srv
+
+
+def run_workload(srv: SharkServer, clients: int, rounds: int,
+                 answers: Dict[str, tuple]) -> Dict[str, object]:
+    wrong = [0]
+
+    def one_client(idx: int):
+        sess = srv.session(f"spill-bench-{idx}")
+        for r in range(rounds):
+            for q in round_queries(r):
+                if canonical(sess.sql_np(q)) != answers[q]:
+                    wrong[0] += 1
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=clients) as pool:
+        futs = [pool.submit(one_client, i) for i in range(clients)]
+        for f in futs:
+            f.result()
+    wall = time.perf_counter() - t0
+    mem = srv.stats()["memory"]
+    return {"wall_s": round(wall, 4), "wrong": wrong[0],
+            "evictions": mem["evictions"], "recomputes": mem["recomputes"],
+            "spills": mem["spills"],
+            "spill_bytes": mem["spill_bytes"],
+            "spill_reads": mem["spill_reads"],
+            "recompressions": mem["recompressions"],
+            "lineage_faults": mem["lineage_faults"]}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=600_000)
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--partitions", type=int, default=8)
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller table (CI smoke)")
+    args = ap.parse_args(argv)
+    n_rows = min(args.rows, 150_000) if args.quick else args.rows
+    rounds = min(args.rounds, 2) if args.quick else args.rounds
+
+    # ---- unlimited-budget reference: answers + working-set size ----
+    ref = make_server(n_rows, args.partitions, None, None, None)
+    sess = ref.session("ref")
+    answers = {q: canonical(sess.sql_np(q))
+               for r in range(rounds) for q in round_queries(r)}
+    working_set = sum(t.nbytes for t in ref.catalog.tables().values())
+    ref.shutdown()
+
+    budget = working_set // 4        # acceptance bar: working set >= 4x
+    results = {}
+    for mode in ("spill", "drop"):
+        with tempfile.TemporaryDirectory(prefix="shark-bench-") as d:
+            srv = make_server(n_rows, args.partitions, budget, mode, d)
+            try:
+                results[mode] = run_workload(srv, args.clients, rounds,
+                                             answers)
+            finally:
+                srv.shutdown()
+        assert results[mode]["wrong"] == 0, \
+            f"{mode}: {results[mode]['wrong']} wrong results"
+
+    sp, dr = results["spill"], results["drop"]
+    assert sp["spills"] > 0, "budget never forced a spill"
+    assert dr["lineage_faults"] > 0, \
+        "drop baseline never recomputed from lineage"
+    speedup = dr["wall_s"] / max(sp["wall_s"], 1e-9)
+    spill_beats_recompute = sp["wall_s"] < dr["wall_s"]
+    assert spill_beats_recompute, \
+        (f"spill ({sp['wall_s']}s) did not beat recompute-from-lineage "
+         f"({dr['wall_s']}s)")
+
+    report("spill_tier_wall", sp["wall_s"],
+           f"spills={sp['spills']} reads={sp['spill_reads']} "
+           f"speedup={speedup:.1f}x")
+    report("recompute_wall", dr["wall_s"],
+           f"lineage_faults={dr['lineage_faults']}")
+
+    payload = {
+        "rows": n_rows,
+        "working_set_bytes": int(working_set),
+        "budget_bytes": int(budget),
+        "working_set_over_budget": round(working_set / budget, 2),
+        "clients": args.clients,
+        "rounds": rounds,
+        "spill": sp,
+        "drop": dr,
+        "speedup_vs_recompute": round(speedup, 2),
+        "spill_beats_recompute": spill_beats_recompute,
+        "zero_wrong_results": sp["wrong"] == 0 and dr["wrong"] == 0,
+    }
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+    print(f"# spill_bench: spill={sp['wall_s']}s drop={dr['wall_s']}s "
+          f"speedup={speedup:.2f}x spills={sp['spills']} "
+          f"lineage_faults={dr['lineage_faults']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,10 @@
 # including the repaired dictionary-coded one), and the compiled-exchange
 # benchmark (emits BENCH_shuffle.json; asserts the dictionary-preserving
 # shuffle is decode-free and beats the legacy decoded exchange on
-# string-keyed group-by/join shapes).
+# string-keyed group-by/join shapes), and the out-of-core storage tier
+# benchmark (emits BENCH_spill.json; asserts that with a working set 4x the
+# cache budget the spill tier finishes with zero wrong results and less
+# wall clock than eviction + recompute-from-lineage).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -44,3 +47,7 @@ echo "wrote BENCH_exec_engine.json"
 echo "== compiled exchange: dictionary-preserving vs decoded shuffle =="
 python -m benchmarks.shuffle_bench --quick --json-out BENCH_shuffle.json
 echo "wrote BENCH_shuffle.json"
+
+echo "== out-of-core storage tier: spill vs recompute-from-lineage =="
+python -m benchmarks.spill_bench --quick --json-out BENCH_spill.json
+echo "wrote BENCH_spill.json"

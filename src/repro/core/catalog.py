@@ -22,7 +22,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from .columnar import Table, from_arrays
+from .columnar import Table, build_partition, from_arrays
 from .types import Schema
 
 
@@ -35,6 +35,24 @@ class ExternalSource:
     schema: Schema
     loader: Callable[[], Dict[str, np.ndarray]]
     num_partitions: int = 8
+
+
+def _external_partition_lineage(src: ExternalSource, index: int):
+    """Recompute-from-lineage closure for ONE partition of a materialized
+    external table (storage tier, DESIGN.md §12): re-run the deterministic
+    loader and rebuild exactly the contiguous slice `from_arrays` assigned
+    to this partition.  A spilled partition whose segment is lost or corrupt
+    restores from here — same content, because loader and split edges are
+    both deterministic."""
+    def rebuild():
+        data = src.loader()
+        n = len(next(iter(data.values()))) if data else 0
+        edges = np.linspace(0, n, src.num_partitions + 1, dtype=np.int64)
+        lo, hi = int(edges[index]), int(edges[index + 1])
+        sliced = {f.name: np.asarray(data[f.name])[lo:hi]
+                  for f in src.schema.fields}
+        return build_partition(index, src.schema, sliced).columns
+    return rebuild
 
 
 class Catalog:
@@ -107,6 +125,8 @@ class Catalog:
                 # (deterministic loader -> logical content unchanged, no bump)
                 table = from_arrays(name, src.schema, src.loader(),
                                     src.num_partitions)
+                for part in table.partitions:
+                    part.lineage = _external_partition_lineage(src, part.index)
                 self._tables[name] = table
                 return table, self._versions.get(name, 0)
         raise KeyError(f"unknown table {name!r}")

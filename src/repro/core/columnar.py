@@ -19,11 +19,12 @@ codes and only materializes strings at the result boundary.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence
+import itertools
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
-from .compression import Encoded, Encoding, decode_np, encode
+from .compression import Encoded, Encoding, decode_np, encode, recompress
 from .types import DType, Field, Schema
 
 ENUM_DISTINCT_LIMIT = 64  # paper: keep distinct values "if the number is small"
@@ -90,6 +91,44 @@ class ColumnBlock:
             return None
         return self.enc.codes, d
 
+    def frame_space(self):
+        """Encoded-aware access for frame-of-reference blocks: (codes, bias)
+        where `value = code + bias` exactly (integer columns only), so the
+        code stream is order-preserving and range/equality predicates
+        translate to code-bound compares on the narrow resident lane —
+        the FOR twin of `code_space()` (DESIGN.md §12).  None for every
+        other encoding."""
+        enc = self.enc
+        if enc.encoding != Encoding.FOR or self.str_dict is not None:
+            return None
+        return enc.codes, enc.bias
+
+    def run_space(self):
+        """Encoded-aware access for RLE blocks: (run_values, run_lengths) in
+        stored-value space, for run-level predicate/aggregate evaluation
+        without expanding the runs.  None for every other encoding."""
+        enc = self.enc
+        if enc.encoding != Encoding.RLE:
+            return None
+        return enc.run_values, enc.run_lengths
+
+    def recompress(self) -> int:
+        """Adaptive WARM-tier recompression (pressure hook): re-encode with
+        the scheme `choose_recompression` picks from run-length/span/NDV
+        signals; keeps the block only if strictly smaller.  Returns bytes
+        freed (encoded delta plus any decoded cache released)."""
+        old = self.enc
+        pre_decoded = old.decoded_nbytes
+        new = recompress(old)
+        old.drop_decoded()
+        new.drop_decoded()
+        freed = pre_decoded
+        if new is not old:
+            freed += old.nbytes - new.nbytes
+            self.enc = new
+            self.stats.nbytes = new.nbytes
+        return freed
+
     def drop_decoded(self) -> int:
         return self.enc.drop_decoded()
 
@@ -147,44 +186,119 @@ def make_block(field: Field, values: np.ndarray,
                        str_dict)
 
 
-@dataclasses.dataclass
+# Monotonic access clock for the storage tier's coldest-first spill policy
+# (DESIGN.md §12): the scan path stamps partitions on every read.
+_ACCESS_CLOCK = itertools.count(1)
+
+
 class Partition:
-    """One horizontal slice of a table, held in the memory store."""
-    index: int
-    columns: Dict[str, ColumnBlock]
+    """One horizontal slice of a table, held in the memory store.
+
+    Storage-tier states (DESIGN.md §12): a partition is *resident* (HOT with
+    decoded caches, WARM once recompressed/caches dropped) or *cold* — its
+    column blocks spilled to disk (or dropped outright) by the server's
+    StorageManager under memory pressure.  `columns` faults a cold partition
+    back in transparently: spill-file read first, recompute-from-lineage on
+    a lost or corrupt file.  Stats are snapshotted at build time so map
+    pruning and byte accounting never fault a cold partition."""
+
+    def __init__(self, index: int, columns: Dict[str, ColumnBlock]):
+        self.index = index
+        self._columns: Optional[Dict[str, ColumnBlock]] = columns
+        self._stats = {n: b.stats for n, b in columns.items()}
+        self._num_rows = next(iter(columns.values())).n if columns else 0
+        self.last_access = 0        # _ACCESS_CLOCK stamp (0 = never scanned)
+        # cold-tier bookkeeping, owned by storage.StorageManager
+        self.spill_ref = None       # storage.SpillRef while cold-on-disk
+        self.storage = None         # StorageManager once it ever evicted us
+        self.lineage: Optional[Callable[[], Dict[str, ColumnBlock]]] = None
+
+    # -- tier state -----------------------------------------------------------
+
+    @property
+    def resident(self) -> bool:
+        return self._columns is not None
+
+    @property
+    def columns(self) -> Dict[str, ColumnBlock]:
+        if self._columns is None:
+            self.storage.fault_in(self)
+        return self._columns
+
+    def touch(self) -> None:
+        self.last_access = next(_ACCESS_CLOCK)
+
+    def release_columns(self) -> int:
+        """Go cold: drop the resident column blocks (the StorageManager has
+        already serialized them if this is a spill, not a drop).  Returns
+        resident bytes freed (encoded + decoded caches)."""
+        if self._columns is None:
+            return 0
+        freed = sum(b.nbytes + b.enc.decoded_nbytes
+                    for b in self._columns.values())
+        self._columns = None
+        return freed
+
+    def restore_columns(self, columns: Dict[str, ColumnBlock]) -> None:
+        self._columns = columns
+        self._stats = {n: b.stats for n, b in columns.items()}
+
+    # -- sizes / stats (never fault) -----------------------------------------
 
     @property
     def num_rows(self) -> int:
-        if not self.columns:
-            return 0
-        return next(iter(self.columns.values())).n
+        return self._num_rows
 
     @property
     def nbytes(self) -> int:
-        return sum(b.nbytes for b in self.columns.values())
+        """Logical encoded size: the last known resident footprint while
+        cold (size hints must not fault a spilled partition back in)."""
+        if self._columns is None:
+            return sum(s.nbytes for s in self._stats.values())
+        return sum(b.nbytes for b in self._columns.values())
+
+    @property
+    def resident_nbytes(self) -> int:
+        """Encoded bytes actually held in memory (0 while cold)."""
+        if self._columns is None:
+            return 0
+        return sum(b.nbytes for b in self._columns.values())
 
     def column(self, name: str) -> ColumnBlock:
         return self.columns[name]
 
     def drop_decoded(self) -> int:
         """Release all memoized decode caches in this partition."""
-        return sum(b.drop_decoded() for b in self.columns.values())
+        if self._columns is None:
+            return 0
+        return sum(b.drop_decoded() for b in self._columns.values())
+
+    def recompress(self) -> int:
+        """WARM transition: adaptively recompress every resident block;
+        returns bytes freed."""
+        if self._columns is None:
+            return 0
+        return sum(b.recompress() for b in self._columns.values())
 
     @property
     def decoded_cache_nbytes(self) -> int:
-        return sum(b.enc.decoded_nbytes for b in self.columns.values())
+        if self._columns is None:
+            return 0
+        return sum(b.enc.decoded_nbytes for b in self._columns.values())
 
     def arrays(self, names: Optional[Sequence[str]] = None) -> Dict[str, np.ndarray]:
-        names = names if names is not None else list(self.columns)
-        return {n: self.columns[n].values() for n in names}
+        cols = self.columns
+        names = names if names is not None else list(cols)
+        return {n: cols[n].values() for n in names}
 
     def decoded_arrays(self, names: Optional[Sequence[str]] = None
                        ) -> Dict[str, np.ndarray]:
-        names = names if names is not None else list(self.columns)
-        return {n: self.columns[n].decoded() for n in names}
+        cols = self.columns
+        names = names if names is not None else list(cols)
+        return {n: cols[n].decoded() for n in names}
 
     def stats(self) -> Dict[str, ColumnStats]:
-        return {n: b.stats for n, b in self.columns.items()}
+        return dict(self._stats)
 
 
 def build_partition(index: int, schema: Schema,
@@ -225,6 +339,11 @@ class Table:
     @property
     def decoded_cache_nbytes(self) -> int:
         return sum(p.decoded_cache_nbytes for p in self.partitions)
+
+    @property
+    def resident_nbytes(self) -> int:
+        """Encoded bytes currently held in memory (cold partitions count 0)."""
+        return sum(p.resident_nbytes for p in self.partitions)
 
     def column_np(self, name: str) -> np.ndarray:
         """Materialize a full column, logically decoded (testing / results)."""

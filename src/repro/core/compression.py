@@ -31,6 +31,7 @@ class Encoding(enum.Enum):
     DICT = "dict"        # code stream + value dictionary
     RLE = "rle"          # (run value, run length) streams
     BITPACK = "bitpack"  # ints packed to minimal bit width in uint32 words
+    FOR = "for"          # frame of reference: (value - bias) in a narrow uint lane
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +114,68 @@ def choose_encoding(values: np.ndarray) -> Encoding:
     return Encoding.PLAIN
 
 
+def _for_lane_dtype(span: int) -> Optional[np.dtype]:
+    """Narrowest unsigned lane that holds codes in [0, span]."""
+    if span < (1 << 8):
+        return np.dtype(np.uint8)
+    if span < (1 << 16):
+        return np.dtype(np.uint16)
+    if span < (1 << 32):
+        return np.dtype(np.uint32)
+    return None
+
+
+def choose_recompression(values: np.ndarray,
+                         ndv: Optional[int] = None) -> Encoding:
+    """Adaptive scheme selection for the storage tier's WARM transition
+    (DESIGN.md §12): unlike the load-time `choose_encoding`, this ranks
+    candidate schemes by *projected encoded size* so a pressure-driven
+    recompression only ever shrinks the block.  Signals are the same
+    piggybacked statistics the store already keeps: run length (RLE),
+    value span (frame-of-reference / bit packing), and NDV (dictionary).
+    """
+    n = len(values)
+    if n == 0:
+        return Encoding.PLAIN
+    itemsize = values.dtype.itemsize
+    sizes = {Encoding.PLAIN: n * itemsize}
+    changes = int(np.count_nonzero(values[1:] != values[:-1])) + 1
+    if n / changes >= RLE_MIN_AVG_RUN:
+        sizes[Encoding.RLE] = changes * (itemsize + 4)
+    if np.issubdtype(values.dtype, np.integer):
+        span = int(values.max()) - int(values.min())
+        lane = _for_lane_dtype(span)
+        if lane is not None:
+            sizes[Encoding.FOR] = n * lane.itemsize
+        if 0 <= span < (1 << BITPACK_MAX_BITS):
+            width = max(1, span.bit_length())
+            sizes[Encoding.BITPACK] = -(-n // (32 // width)) * 4
+    if ndv is None:
+        ndv = len(np.unique(values[: 65536]))
+    if ndv <= DICT_DISTINCT_THRESHOLD:
+        sizes[Encoding.DICT] = n * 4 + ndv * itemsize
+    # ties break toward schemes the engine can execute on directly without
+    # widening (run-level RLE scans, FOR/DICT code-bound predicates) —
+    # BITPACK must be unpacked before any compare
+    pref = {Encoding.RLE: 0, Encoding.FOR: 1, Encoding.DICT: 2,
+            Encoding.BITPACK: 3, Encoding.PLAIN: 4}
+    return min(sizes, key=lambda e: (sizes[e], pref[e]))
+
+
+def recompress(enc: Encoded) -> Encoded:
+    """Re-encode a block with the adaptively chosen scheme.  Returns a NEW
+    Encoded strictly smaller than the input, or the input unchanged when no
+    candidate wins.  Never changes decoded content (round-trip property,
+    tests/test_storage_property.py)."""
+    values = decode_np(enc)
+    ndv = len(enc.dictionary) if enc.dictionary is not None else None
+    target = choose_recompression(values, ndv=ndv)
+    if target == enc.encoding:
+        return enc
+    out = encode(values, target)
+    return out if out.nbytes < enc.nbytes else enc
+
+
 # ---------------------------------------------------------------------------
 # Encoders (host side, run inside data-loading tasks)
 # ---------------------------------------------------------------------------
@@ -137,6 +200,15 @@ def encode(values: np.ndarray, encoding: Optional[Encoding] = None) -> Encoded:
         ends = np.concatenate([boundaries, [n]])
         return Encoded(Encoding.RLE, run_values=values[starts],
                        run_lengths=(ends - starts).astype(np.int32), n=n,
+                       orig_dtype=values.dtype)
+    if encoding == Encoding.FOR:
+        assert np.issubdtype(values.dtype, np.integer), "frame-of-reference needs ints"
+        lo = int(values.min()) if n else 0
+        span = (int(values.max()) - lo) if n else 0
+        lane = _for_lane_dtype(span)
+        assert lane is not None, f"span {span} too wide for frame-of-reference"
+        codes = (values.astype(np.int64) - lo).astype(lane)
+        return Encoded(Encoding.FOR, codes=codes, bias=lo, n=n,
                        orig_dtype=values.dtype)
     if encoding == Encoding.BITPACK:
         assert np.issubdtype(values.dtype, np.integer), "bitpack needs ints"
@@ -174,6 +246,8 @@ def decode_np(enc: Encoded) -> np.ndarray:
     enc.decode_count += 1
     if enc.encoding == Encoding.DICT:
         out = enc.dictionary[enc.codes]
+    elif enc.encoding == Encoding.FOR:
+        out = (enc.codes.astype(np.int64) + enc.bias).astype(enc.orig_dtype)
     elif enc.encoding == Encoding.RLE:
         out = np.repeat(enc.run_values, enc.run_lengths)
     elif enc.encoding == Encoding.BITPACK:
@@ -194,6 +268,9 @@ def decode_jnp(enc: Encoded) -> jnp.ndarray:
         return jnp.asarray(enc.data)
     if enc.encoding == Encoding.DICT:
         return jnp.asarray(enc.dictionary)[jnp.asarray(enc.codes)]
+    if enc.encoding == Encoding.FOR:
+        codes = jnp.asarray(enc.codes)
+        return (codes.astype(jnp.int64) + enc.bias).astype(enc.orig_dtype)
     if enc.encoding == Encoding.RLE:
         # searchsorted-based repeat with static total length.
         lengths = jnp.asarray(enc.run_lengths)

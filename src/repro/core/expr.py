@@ -21,6 +21,7 @@ CPU-wise" (§3.2).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -519,7 +520,8 @@ def literal_compare_columns(*exprs: Expr) -> set:
 class _Low:
     """One lowered subtree: fn(env, consts, xp) -> array, plus a tag saying
     what space the result lives in: ("num",) for plain value arrays,
-    ("str", col) / ("ndict", col) for dictionary codes of `col`."""
+    ("str", col) / ("ndict", col) for dictionary codes of `col`, and
+    ("for", col) for frame-of-reference codes (value - bias) of `col`."""
     fn: Callable
     tag: Tuple
 
@@ -537,14 +539,38 @@ class _Lowering:
         return len(self.extractors) - 1
 
     def _bound_idx(self, name: str, kind: str, value, side: str) -> int:
-        """Per-partition searchsorted bound of `value` in the column's
-        sorted dictionary (string dict or numeric DICT-encoding dict)."""
+        """Per-partition bound of `value` in the column's code space: a
+        searchsorted index into the sorted dictionary (string dict / numeric
+        DICT dict), or for frame-of-reference codes the identity-map bound
+        `ceil(v) - bias` (left) / `floor(v) + 1 - bias` (right) — FOR codes
+        are order-preserving integers, so the same `code >= left-bound`
+        compare semantics apply without any dictionary."""
         if kind == "str":
             value = str(value)
+        if kind == "for":
+            if isinstance(value, str):
+                raise ExprCompileError("numeric column vs string literal")
+            v = float(value)
+            if not math.isfinite(v):
+                raise ExprCompileError("non-finite literal vs FOR codes")
+            offs = math.ceil(v) if side == "left" else math.floor(v) + 1
+
+            def extract(ctx, name=name, offs=offs):
+                fs = ctx[name].block.frame_space()
+                if fs is None:   # block recompressed since kinds_for()
+                    raise ExprCompileError("FOR frame gone (recompressed)")
+                return np.int64(offs - int(fs[1]))
+
+            return self._const_idx(extract)
 
         def extract(ctx, name=name, kind=kind, value=value, side=side):
-            d = (ctx[name].sdict if kind == "str"
-                 else ctx[name].block.code_space()[1])
+            if kind == "str":
+                d = ctx[name].sdict
+            else:
+                cs = ctx[name].block.code_space()
+                if cs is None:   # block recompressed since kinds_for()
+                    raise ExprCompileError("dict codes gone (recompressed)")
+                d = cs[1]
             return np.int64(np.searchsorted(d, value, side=side))
 
         return self._const_idx(extract)
@@ -561,7 +587,7 @@ class _Lowering:
         kind, name = tag
         if kind == "str" and not isinstance(value, str):
             raise ExprCompileError("string column vs non-string literal")
-        if kind == "ndict" and isinstance(value, str):
+        if kind in ("ndict", "for") and isinstance(value, str):
             raise ExprCompileError("numeric column vs string literal")
         lo = self._bound_idx(name, kind, value, "left")
         ri = self._bound_idx(name, kind, value, "right")
@@ -595,6 +621,8 @@ class _Lowering:
                 return _Low(fn, ("str", name))
             if kind == "ndict":
                 return _Low(fn, ("ndict", name))
+            if kind == "for":
+                return _Low(fn, ("for", name))
             return _Low(fn, ("num",))
         if isinstance(e, Lit):
             v = e.value
@@ -629,11 +657,11 @@ class _Lowering:
             # lowered (string literals only exist as host-resolved bounds)
             if isinstance(e.right, Lit):
                 l = self.lower(e.left)
-                if l.tag[0] in ("str", "ndict"):
+                if l.tag[0] in ("str", "ndict", "for"):
                     return self._dict_cmp(e.op, l.tag, e.right.value)
             if isinstance(e.left, Lit):
                 r = self.lower(e.right)
-                if r.tag[0] in ("str", "ndict"):
+                if r.tag[0] in ("str", "ndict", "for"):
                     return self._dict_cmp(_FLIP_CMP[e.op], r.tag,
                                           e.left.value)
             l, r = self.lower(e.left), self.lower(e.right)
@@ -675,7 +703,7 @@ class _Lowering:
                         xp.logical_not(ch.fn(env, c, xp)), ("num",))
         if isinstance(e, InList):
             ch = self.lower(e.child)
-            if ch.tag[0] in ("str", "ndict"):
+            if ch.tag[0] in ("str", "ndict", "for"):
                 parts = [self._dict_cmp("=", ch.tag, v) for v in e.values]
 
                 def fn(env, c, xp, parts=parts):
@@ -702,7 +730,7 @@ class _Lowering:
             return _Low(fn, ("num",))
         if isinstance(e, Between):
             ch = self.lower(e.child)
-            if ch.tag[0] in ("str", "ndict"):
+            if ch.tag[0] in ("str", "ndict", "for"):
                 kind, name = ch.tag
                 lo = self._bound_idx(name, kind, e.lo, "left")
                 ri = self._bound_idx(name, kind, e.hi, "right")
@@ -794,8 +822,9 @@ class CompiledExprSet:
     chosen per partition (§3.2) — so every partition with the same layout
     reuses one compiled function."""
 
-    def __init__(self, exprs: Sequence[Expr]):
+    def __init__(self, exprs: Sequence[Expr], compressed_domain: bool = True):
         self.exprs = list(exprs)
+        self.compressed_domain = compressed_domain
         for e in self.exprs:
             if not _structurally_compilable(e):
                 raise ExprCompileError("string-transforming function in tree")
@@ -824,6 +853,12 @@ class CompiledExprSet:
             elif (name in self.code_candidates and v.block is not None
                     and v.block.code_space() is not None):
                 kinds[name] = "ndict"
+            elif (self.compressed_domain and name in self.code_candidates
+                    and v.block is not None
+                    and v.block.frame_space() is not None):
+                # frame-of-reference codes: range predicates run on the
+                # narrow (value - bias) lane without widening (§12)
+                kinds[name] = "for"
             else:
                 kinds[name] = "vals"
         return kinds
@@ -851,11 +886,35 @@ class CompiledExprSet:
                 # bare numeric-dict column as an output: decode fused at
                 # the boundary (dictionary gather inside the traced fn)
                 name = low.tag[1]
-                di = lowering._const_idx(
-                    lambda ctx, name=name: ctx[name].block.code_space()[1])
+
+                def _dict_of(ctx, name=name):
+                    cs = ctx[name].block.code_space()
+                    if cs is None:   # recompressed since kinds_for()
+                        raise ExprCompileError("dict codes gone")
+                    return cs[1]
+
+                di = lowering._const_idx(_dict_of)
                 inner = low
                 low = _Low(lambda env, c, xp, inner=inner, di=di:
                            xp.asarray(c[di])[inner.fn(env, c, xp)], ("num",))
+                out_str_cols.append(None)
+            elif low.tag[0] == "for":
+                # bare FOR column as an output: un-bias fused at the
+                # boundary (add the frame base in the original dtype)
+                name = low.tag[1]
+
+                def _bias_of(ctx, name=name):
+                    blk = ctx[name].block
+                    fs = blk.frame_space()
+                    if fs is None:   # recompressed since kinds_for()
+                        raise ExprCompileError("FOR frame gone")
+                    return np.asarray(fs[1], dtype=blk.enc.orig_dtype)
+
+                bi = lowering._const_idx(_bias_of)
+                inner = low
+                low = _Low(lambda env, c, xp, inner=inner, bi=bi:
+                           xp.asarray(inner.fn(env, c, xp),
+                                      dtype=c[bi].dtype) + c[bi], ("num",))
                 out_str_cols.append(None)
             else:
                 out_str_cols.append(None)
@@ -877,7 +936,15 @@ class CompiledExprSet:
         env = {}
         for n in self.cols:
             if kinds[n] == "ndict":
-                env[n] = np.asarray(ctx[n].block.code_space()[0])
+                cs = ctx[n].block.code_space()
+                if cs is None:   # recompressed between kinds_for and here
+                    raise ExprCompileError("dict codes gone (recompressed)")
+                env[n] = np.asarray(cs[0])
+            elif kinds[n] == "for":
+                fs = ctx[n].block.frame_space()
+                if fs is None:   # recompressed between kinds_for and here
+                    raise ExprCompileError("FOR frame gone (recompressed)")
+                env[n] = np.asarray(fs[0])
             else:
                 env[n] = np.asarray(ctx[n].arr)
         consts = tuple(np.asarray(f(ctx)) for f in plan.extractors)
@@ -898,8 +965,8 @@ class CompiledExpr(CompiledExprSet):
     """`compile_expr(e)`: a one-expression CompiledExprSet returning the
     single ColumnVal directly."""
 
-    def __init__(self, expr: Expr):
-        super().__init__([expr])
+    def __init__(self, expr: Expr, compressed_domain: bool = True):
+        super().__init__([expr], compressed_domain=compressed_domain)
         self.expr = expr
 
     def __call__(self, ctx: Dict[str, ColumnVal]) -> ColumnVal:

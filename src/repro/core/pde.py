@@ -71,6 +71,12 @@ class PDEConfig:
     # force the compiled reduce path regardless of size (differential tests
     # drive the oracle grid with this on and off)
     reduce_force_compiled: bool = False
+    # -- compressed-domain execution (DESIGN.md §12) -------------------------
+    # evaluate range predicates on frame-of-reference codes and run-level
+    # predicates/aggregates on RLE runs without widening the column; off
+    # forces the decode-then-evaluate routes (differential tests drive the
+    # oracle grid both ways)
+    compressed_domain: bool = True
 
 
 @dataclasses.dataclass

@@ -20,6 +20,7 @@ re-plans:
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -147,6 +148,13 @@ class ExecMetrics:
     # the scan path never runs interpreted operator-at-a-time)
     interpreted_ops: int = 0
     interpreted_scan_ops: int = 0
+    # storage tier (DESIGN.md §12): per-query deltas of the StorageManager
+    # counters — partitions spilled / bytes written while this query ran,
+    # spill segments read back, warm recompressions taken
+    spills: int = 0
+    spill_bytes: float = 0.0
+    spill_reads: int = 0
+    recompressions: int = 0
 
     def describe_joins(self) -> str:
         """One line per join boundary, execution order — the runtime twin of
@@ -344,7 +352,8 @@ class SegmentRunner:
             if not exprs:
                 return None
             try:
-                self._exprset = CompiledExprSet(exprs)
+                self._exprset = CompiledExprSet(
+                    exprs, compressed_domain=self.cfg.compressed_domain)
             except ExprCompileError:
                 self._exprset_failed = True
                 raise
@@ -456,6 +465,15 @@ class SegmentRunner:
                 codes, d = cs
                 kept.append(out_name)
                 return ColumnVal(d[codes[mask]])
+            if self.cfg.compressed_domain:
+                fs = v.block.frame_space()
+                if fs is not None:
+                    # FOR codes filtered narrow; only survivors widen
+                    codes, bias = fs
+                    kept.append(out_name)
+                    orig = v.block.enc.orig_dtype
+                    sel = codes[mask].astype(np.int64) + int(bias)
+                    return ColumnVal(sel.astype(orig))
         return ColumnVal(np.asarray(v.arr)[mask])
 
     # -- fused aggregation -----------------------------------------------------
@@ -585,9 +603,17 @@ class SegmentRunner:
         from ..kernels import ops as kernel_ops
         _, fcol, lo, hi, vcol = shape
         fv = batch.col(fcol)
+        if (self.cfg.compressed_domain and not pallas
+                and fv.block is not None and not fv.materialized
+                and not fv.is_string and fv.block.run_space() is not None):
+            # run-level RLE scan: predicate on run VALUES, never widened
+            return self._run_rle_scan(batch, fcol, lo, hi, vcol, aggs)
         vals = np.asarray(batch.col(vcol).arr)
         coded = (fv.block is not None and not fv.materialized
                  and fv.block.code_space() is not None)
+        framed = (not coded and self.cfg.compressed_domain
+                  and fv.block is not None and not fv.materialized
+                  and fv.block.frame_space() is not None)
         with _x64():
             if pallas and coded:
                 codes, d = fv.block.code_space()
@@ -613,6 +639,20 @@ class SegmentRunner:
                                               np.float64(clo),
                                               np.float64(chi))
                 route = "jit-colscan"
+            elif framed:
+                # frame-of-reference: value bounds translate to CODE bounds
+                # by pure integer arithmetic (code = value - bias is order-
+                # preserving); the scan compares the narrow code lane and
+                # the filter column never widens (DESIGN.md §12)
+                codes, bias = fv.block.frame_space()
+                clo = (float(int(math.ceil(lo)) - int(bias))
+                       if math.isfinite(lo) else -np.inf)
+                chi = (float(int(math.floor(hi)) - int(bias))
+                       if math.isfinite(hi) else np.inf)
+                res = _fused_colscan_fns()(codes, vals,
+                                              np.float64(clo),
+                                              np.float64(chi))
+                route = "for-colscan"
             else:
                 res = _fused_colscan_fns()(np.asarray(fv.arr), vals,
                                               np.float64(lo), np.float64(hi))
@@ -621,6 +661,44 @@ class SegmentRunner:
         cnt, s, mn, mx = (float(res[0]), float(res[1]), float(res[2]),
                           float(res[3]))
         int_sum = np.issubdtype(np.asarray(vals).dtype, np.integer)
+        return self._colscan_result(aggs, cnt, s, mn, mx, int_sum), route
+
+    def _run_rle_scan(self, batch: PartitionBatch, fcol: str, lo, hi,
+                      vcol: str, aggs) -> Tuple[PartitionBatch, str]:
+        """Run-level RLE scan (DESIGN.md §12): the predicate is evaluated
+        once per RUN on the run values.  When the aggregate reads the same
+        column the whole filter+aggregate is run-level (O(runs), never
+        expanded); otherwise the run mask expands via np.repeat and only
+        the value column is touched row-wise.  float64 accumulation
+        (numpy-oracle parity)."""
+        rs = batch.col(fcol).block.run_space()
+        if rs is None:      # recompressed since the route check
+            raise ExprCompileError("RLE runs gone (recompressed)")
+        run_values, run_lengths = rs
+        rl = np.asarray(run_lengths, np.int64)
+        rmask = (run_values >= lo) & (run_values <= hi)
+        if vcol == fcol:
+            sel_v = np.asarray(run_values[rmask], np.float64)
+            sel_l = rl[rmask]
+            cnt = float(sel_l.sum())
+            s = float((sel_v * sel_l).sum())
+            mn = float(sel_v.min()) if sel_v.size else float("inf")
+            mx = float(sel_v.max()) if sel_v.size else float("-inf")
+            int_sum = np.issubdtype(np.asarray(run_values).dtype, np.integer)
+        else:
+            mask = np.repeat(rmask, rl)
+            vraw = np.asarray(batch.col(vcol).arr)
+            int_sum = np.issubdtype(vraw.dtype, np.integer)
+            sel = vraw[mask].astype(np.float64)
+            cnt = float(sel.shape[0])
+            s = float(sel.sum())
+            mn = float(sel.min()) if sel.size else float("inf")
+            mx = float(sel.max()) if sel.size else float("-inf")
+        return self._colscan_result(aggs, cnt, s, mn, mx, int_sum), "rle-scan"
+
+    @staticmethod
+    def _colscan_result(aggs, cnt: float, s: float, mn: float, mx: float,
+                        int_sum: bool) -> PartitionBatch:
         out: Dict[str, ColumnVal] = {}
         for spec in aggs:
             sc = _agg_state_cols(spec)
@@ -638,7 +716,7 @@ class SegmentRunner:
                 out[sc[0]] = ColumnVal(np.array([mx], np.float64))
             else:
                 raise ExprCompileError(str(spec.func))
-        return PartitionBatch(out), route
+        return PartitionBatch(out)
 
     def _run_groupby(self, batch: PartitionBatch, shape, group_cols, aggs,
                      ndv: int, kernel: bool = True
@@ -1012,11 +1090,26 @@ class Executor:
 
     # ---------------------------------------------------------------- public
 
+    def _storage(self):
+        mm = self.ctx.block_manager.memory_manager
+        return getattr(mm, "storage", None) if mm is not None else None
+
     def execute(self, plan: Node) -> ExecResult:
         self.metrics = ExecMetrics()
+        storage = self._storage()
+        before = storage.stats() if storage is not None else None
         plan = optimize(plan, self.catalog)
         compiled = self._compile(plan)
         batches = self.ctx.scheduler.run_result_stage(compiled.rdd)
+        if storage is not None:
+            after = storage.stats()
+            m = self.metrics
+            m.spills = after["spills"] - before["spills"]
+            m.spill_bytes = (after["spill_write_bytes"]
+                             - before["spill_write_bytes"])
+            m.spill_reads = after["spill_reads"] - before["spill_reads"]
+            m.recompressions = (after["recompressions"]
+                                - before["recompressions"])
         return ExecResult(batches, compiled.names)
 
     # ------------------------------------------------------------- internals

@@ -171,6 +171,7 @@ class TableScanRDD(RDD):
 
     def compute(self, split: int, tc: TaskContext) -> PartitionBatch:
         part = self.table.partitions[self.selected[split]]
+        part.touch()    # access recency drives coldest-first spill (§12)
         return PartitionBatch.from_partition(part, self.columns)
 
 

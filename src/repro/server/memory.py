@@ -21,12 +21,24 @@ Eviction policy (deterministic, documented order):
   1. cached partition blocks, least-recently-used first — cheapest to hold
      wrong and always recomputable from lineage;
   2. query-result-cache entries, LRU — tiny (final aggregates), so they are
-     evicted only when partition eviction alone cannot satisfy the budget.
+     evicted only when partition eviction alone cannot satisfy the budget;
+  3. memoized decode caches (HOT -> WARM, first half): pure derived state
+     that re-materializes on the next decode;
+  4. with a StorageManager attached (DESIGN.md §12), the storage-hierarchy
+     rungs: adaptive recompression of resident catalog partitions
+     (WARM, second half), then spilling the coldest partition to disk
+     (COLD) — least-recently-scanned first.
 
 If the just-inserted partition alone exceeds what the budget can hold even
 after evicting everything else, it is itself dropped — a cache-admission
 *bypass*: the query that computed it already has the batch in hand, so
 correctness is unaffected.
+
+Accounting: `cache_bytes()` always includes the memoized decode caches
+(they are real memory, not free), and — when a StorageManager is attached —
+the catalog's resident encoded bytes, since the storage tier can actually
+release those.  Spill-file bytes live on disk, not in memory: they are
+reported (`spill_bytes`) but never counted against the memory budget.
 """
 
 from __future__ import annotations
@@ -55,6 +67,7 @@ class MemoryManager:
         self.decode_cache_drops = 0
         self.decode_cache_dropped_bytes = 0
         self._catalog = None
+        self.storage = None        # core.storage.StorageManager, optional
         self.bm.memory_manager = self
 
     def attach_result_cache(self, result_cache) -> None:
@@ -65,6 +78,12 @@ class MemoryManager:
         (`Encoded._decoded`, see core/compression.py) this manager may
         release under pressure."""
         self._catalog = catalog
+
+    def attach_storage(self, storage) -> None:
+        """Attach the out-of-core storage tier (DESIGN.md §12): enables the
+        recompression and spill rungs of `enforce()` and adds the catalog's
+        resident encoded bytes to the governed budget."""
+        self.storage = storage
 
     def drop_decoded_caches(self) -> int:
         """Release every catalog table's memoized decode cache — pure
@@ -86,12 +105,33 @@ class MemoryManager:
     def accounted_bytes(self) -> int:
         """Everything tracked: cache bytes + in-flight shuffle output."""
         rc = self._result_cache
-        return self.bm.nbytes() + (rc.nbytes if rc is not None else 0)
+        return (self.bm.nbytes() + (rc.nbytes if rc is not None else 0)
+                + self.decoded_cache_bytes() + self.catalog_resident_bytes())
+
+    def decoded_cache_bytes(self) -> int:
+        """Memoized decode caches across catalog tables — real memory the
+        budget must govern (historically unaccounted)."""
+        cat = self._catalog
+        if cat is None:
+            return 0
+        return sum(t.decoded_cache_nbytes for t in list(cat._tables.values()))
+
+    def catalog_resident_bytes(self) -> int:
+        """Resident encoded bytes of catalog tables.  Governed only when a
+        storage tier is attached — without one these bytes are primary
+        storage the manager cannot release, so counting them would just
+        burn the budget on unevictable state."""
+        if self.storage is None or self._catalog is None:
+            return 0
+        return sum(t.resident_nbytes
+                   for t in list(self._catalog._tables.values()))
 
     def cache_bytes(self) -> int:
-        """Evictable bytes the budget governs (partitions + results)."""
+        """Evictable bytes the budget governs: partition blocks + results +
+        decode memos (+ catalog resident bytes when spillable)."""
         rc = self._result_cache
-        return self.bm.part_bytes + (rc.nbytes if rc is not None else 0)
+        return (self.bm.part_bytes + (rc.nbytes if rc is not None else 0)
+                + self.decoded_cache_bytes() + self.catalog_resident_bytes())
 
     # -- BlockManager hooks ---------------------------------------------------
 
@@ -133,10 +173,20 @@ class MemoryManager:
                     if rc.evict_lru() > 0:
                         self.result_evictions += 1
                         continue
-                # last resort before giving up: release the column store's
-                # memoized decode caches (derived state, unaccounted by the
-                # budget but real memory all the same)
-                self.drop_decoded_caches()
+                # HOT -> WARM, first half: release the column store's
+                # memoized decode caches (derived state that re-materializes
+                # on the next decode)
+                if self.drop_decoded_caches() > 0:
+                    continue
+                if self.storage is not None:
+                    # WARM, second half: adaptively recompress resident
+                    # catalog partitions (RLE / BITPACK / FOR from stats)
+                    if self._recompress_pass() > 0:
+                        continue
+                    # WARM -> COLD: spill the least-recently-scanned
+                    # partition to disk (or drop it, in drop mode)
+                    if self._spill_coldest() > 0:
+                        continue
                 if (protect is not None and protect[0] == "part"
                         and protect in self.bm.sizes):
                     # the new block alone exceeds the budget: refuse
@@ -148,16 +198,57 @@ class MemoryManager:
                     self.cache_bytes() > self.budget_bytes)
                 break
 
+    # -- storage-hierarchy rungs (DESIGN.md §12) ------------------------------
+
+    def _recompress_pass(self) -> int:
+        """One WARM pass: recompress every resident catalog partition.
+        Idempotent — a second pass over already-recompressed blocks frees
+        nothing, so enforce() falls through to the spill rung."""
+        cat = self._catalog
+        if cat is None:
+            return 0
+        freed = 0
+        for table in list(cat._tables.values()):
+            for part in table.partitions:
+                if part.resident:
+                    freed += self.storage.recompress_partition(part)
+        return freed
+
+    def _spill_coldest(self) -> int:
+        """One COLD transition: evict the least-recently-scanned resident
+        catalog partition.  Lineage-bearing partitions go first (their
+        recovery story is complete even if the segment is later lost); in
+        drop mode they are the only candidates, since dropping without
+        lineage would lose data outright."""
+        cat = self._catalog
+        if cat is None:
+            return 0
+        candidates = []
+        for name, table in list(cat._tables.items()):
+            for part in table.partitions:
+                if part.resident and part.resident_nbytes > 0:
+                    candidates.append((part.lineage is None,
+                                       part.last_access, name, part))
+        if self.storage.mode == "drop":
+            candidates = [c for c in candidates if not c[0]]
+        if not candidates:
+            return 0
+        _, _, name, part = min(candidates, key=lambda c: (c[0], c[1]))
+        return self.storage.evict(name, part)
+
     # -- reporting -------------------------------------------------------------
 
     def stats(self) -> Dict[str, int]:
         rc = self._result_cache
         part_bytes = self.bm.part_bytes
+        st = self.storage.stats() if self.storage is not None else {}
         return {
             "budget_bytes": self.budget_bytes or 0,
             "partition_bytes": part_bytes,
             "working_bytes": self.bm.nbytes() - part_bytes,  # shuffle
             "result_cache_bytes": rc.nbytes if rc is not None else 0,
+            "decoded_cache_bytes": self.decoded_cache_bytes(),
+            "catalog_resident_bytes": self.catalog_resident_bytes(),
             "cache_bytes": self.cache_bytes(),
             "accounted_bytes": self.accounted_bytes(),
             "partition_hits": self.bm.part_hits,
@@ -170,4 +261,11 @@ class MemoryManager:
             "over_budget_events": self.over_budget_events,
             "decode_cache_drops": self.decode_cache_drops,
             "decode_cache_dropped_bytes": self.decode_cache_dropped_bytes,
+            # storage tier (zeros when no StorageManager is attached, so
+            # BENCH_concurrent.json always carries the keys)
+            "spills": st.get("spills", 0),
+            "spill_bytes": st.get("spill_bytes", 0),
+            "spill_reads": st.get("spill_reads", 0),
+            "recompressions": st.get("recompressions", 0),
+            "lineage_faults": st.get("lineage_faults", 0),
         }

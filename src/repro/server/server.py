@@ -63,7 +63,9 @@ class SharkServer:
                  pde_config: Optional[PDEConfig] = None,
                  speculation: bool = True,
                  task_launch_overhead_s: float = 0.0,
-                 backend: str = "compiled", exchange: str = "coded"):
+                 backend: str = "compiled", exchange: str = "coded",
+                 spill_dir: Optional[str] = None,
+                 spill_mode: Optional[str] = None):
         self.ctx = SharkContext(num_workers=num_workers,
                                 max_threads=max_threads,
                                 speculation=speculation,
@@ -71,6 +73,14 @@ class SharkServer:
         self.catalog = Catalog()
         self.memory = MemoryManager(self.ctx.block_manager,
                                     budget_bytes=cache_budget_bytes)
+        # out-of-core storage tier (DESIGN.md §12): opt-in — without it the
+        # server behaves exactly as before (LRU eviction + recompute only)
+        self.storage = None
+        if spill_mode is not None or spill_dir is not None:
+            from ..core.storage import StorageManager
+            self.storage = StorageManager(spill_dir=spill_dir,
+                                          mode=spill_mode or "spill")
+            self.memory.attach_storage(self.storage)
         self.scan_cache = ScanCache()
         self.result_cache = (ResultCache(result_cache_entries)
                              if enable_result_cache else None)
@@ -225,4 +235,6 @@ class SharkServer:
     def shutdown(self) -> None:
         self.scheduler.shutdown()
         self.scan_cache.clear()
+        if self.storage is not None:
+            self.storage.shutdown()
         self.ctx.shutdown()

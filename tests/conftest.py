@@ -1,0 +1,17 @@
+"""Shared test fixtures.
+
+`SHARK_SPILL_DIR` isolation: the storage tier (DESIGN.md §12) writes spill
+segments to the directory named by this env var (falling back to a private
+mkdtemp).  Tests must never share spill state with each other or with
+whatever the developer's shell exports, so every test gets a fresh tmpdir.
+"""
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _isolated_spill_dir(tmp_path, monkeypatch):
+    spill = tmp_path / "spill"
+    spill.mkdir()
+    monkeypatch.setenv("SHARK_SPILL_DIR", str(spill))
+    yield str(spill)

@@ -12,6 +12,8 @@ partitions AND shuffle map outputs — and asserts:
     queries complete (no leak even when recovery re-materialized them).
 """
 
+import glob
+import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
 
@@ -19,6 +21,7 @@ import numpy as np
 import pytest
 
 from repro.core import DType, Schema
+from repro.core.catalog import ExternalSource
 from repro.server import SharkServer
 
 pytestmark = pytest.mark.tier1
@@ -136,6 +139,116 @@ def test_worker_loss_with_dictionary_preserving_shuffle():
                 f"boundary {k}: dict-shuffle result diverged after recompute"
             _assert_shuffles_released(srv)
         assert scheduler.tasks_recomputed > 0
+    finally:
+        srv.shutdown()
+
+
+N_EXT = 60_000
+
+
+def _ext_fact_loader():
+    """Deterministic stand-in for an HDFS fact table: same seed -> same
+    arrays -> same partition slices, which is what makes recompute-from-
+    lineage (both the scheduler's and the storage tier's) exact."""
+    def load():
+        rng = np.random.default_rng(11)
+        return {"sk": rng.integers(0, 8, N_EXT).astype(np.int64),
+                "mk": rng.integers(0, 300, N_EXT).astype(np.int64),
+                "rev": rng.uniform(0, 10, N_EXT)}
+    return load
+
+
+def _make_spill_server(budget=None, spill_mode=None, spill_dir=None):
+    srv = SharkServer(num_workers=4, max_threads=4,
+                      cache_budget_bytes=budget,
+                      max_concurrent_queries=2, default_partitions=6,
+                      default_shuffle_buckets=8,
+                      spill_mode=spill_mode, spill_dir=spill_dir)
+    srv.register_external(ExternalSource("fact", Schema.of(
+        sk=DType.INT64, mk=DType.INT64, rev=DType.FLOAT64),
+        _ext_fact_loader(), 6))
+    srv.create_table("small_d", Schema.of(skey=DType.INT64, sval=DType.INT64),
+                     {"skey": np.arange(8, dtype=np.int64),
+                      "sval": np.arange(8, dtype=np.int64) % 3})
+    srv.create_table("mid_d", Schema.of(mkey=DType.INT64, mval=DType.INT64),
+                     {"mkey": np.arange(300, dtype=np.int64),
+                      "mval": np.arange(300, dtype=np.int64) % 9})
+    return srv
+
+
+def _spill_query(i: int) -> str:
+    # rev is uniform(0, 10): the WHERE keeps every row, but each variant has
+    # its own plan fingerprint so repeated rounds execute instead of hitting
+    # the result cache (pressure -> spill must actually happen each round).
+    return ("SELECT sval, COUNT(*) AS c, SUM(rev) AS total FROM fact "
+            "JOIN small_d ON fact.sk = small_d.skey "
+            "JOIN mid_d ON fact.mk = mid_d.mkey "
+            f"WHERE rev >= -{i + 1} GROUP BY sval")
+
+
+def test_worker_loss_while_blocks_spilled_and_spill_file_deleted(tmp_path):
+    """Storage-tier chaos (DESIGN.md §12): with the working set spilled to
+    disk under memory pressure, kill a worker mid-query AND delete a spill
+    segment out from under the store.  The scheduler re-runs lost tasks from
+    RDD lineage; the storage tier restores the missing segment from
+    partition lineage (the external loader).  Either way the answer must be
+    identical to the failure-free run — a lost spill file is a performance
+    event, never a correctness event."""
+    base_srv = _make_spill_server()           # no budget, no storage tier
+    try:
+        baseline = _canon(base_srv.session("base").sql_np(_spill_query(0)))
+    finally:
+        base_srv.shutdown()
+    assert baseline, "baseline produced no groups"
+
+    spill_dir = str(tmp_path / "chaos-spill")
+    srv = _make_spill_server(budget=200_000, spill_mode="spill",
+                             spill_dir=spill_dir)
+    try:
+        sess = srv.session("spill-chaos")
+        assert _canon(sess.sql_np(_spill_query(0))) == baseline
+        srv.storage.flush()
+        assert srv.storage.stats()["spills"] > 0, "working set never spilled"
+        assert glob.glob(os.path.join(spill_dir, "*.shk"))
+
+        scheduler = srv.ctx.scheduler
+        orig_map_stage = scheduler.run_map_stage
+        state = {"fired": False}
+        lock = threading.Lock()
+
+        def chaotic_map_stage(dep):
+            stats = orig_map_stage(dep)
+            with lock:
+                fire = not state["fired"]
+                state["fired"] = True
+            if fire:
+                w = sorted(scheduler.alive)[0]
+                scheduler.kill_worker(w)
+                scheduler.add_worker()
+                srv.storage.flush()
+                files = sorted(glob.glob(os.path.join(spill_dir, "*.shk")))
+                if files:
+                    os.remove(files[0])      # segment vanishes mid-query
+            return stats
+
+        scheduler.run_map_stage = chaotic_map_stage
+        try:
+            got = _canon(sess.sql_np(_spill_query(1)))
+        finally:
+            scheduler.run_map_stage = orig_map_stage
+        assert state["fired"]
+        assert got == baseline, "worker loss + spill-file loss diverged"
+        _assert_shuffles_released(srv)
+
+        # total spill loss: every segment deleted -> every cold partition
+        # must come back through partition lineage, not the disk tier
+        srv.storage.flush()
+        for f in glob.glob(os.path.join(spill_dir, "*.shk")):
+            os.remove(f)
+        assert _canon(sess.sql_np(_spill_query(2))) == baseline
+        st = srv.storage.stats()
+        assert st["spill_lost"] + st["lineage_faults"] > 0, \
+            f"expected lineage recovery after deleting spill files: {st}"
     finally:
         srv.shutdown()
 
