@@ -15,7 +15,11 @@
 # string-keyed group-by/join shapes), and the out-of-core storage tier
 # benchmark (emits BENCH_spill.json; asserts that with a working set 4x the
 # cache budget the spill tier finishes with zero wrong results and less
-# wall clock than eviction + recompute-from-lineage).
+# wall clock than eviction + recompute-from-lineage), and the cluster-tier
+# leg (runs the multidevice-marked tests plus the fleet scale-out benchmark
+# under XLA_FLAGS=--xla_force_host_platform_device_count=8; emits
+# BENCH_scale.json and asserts QPS scales >= 1.6x from 1 to 4 replicas with
+# zero wrong results, including one replica killed mid-storm).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -51,3 +55,11 @@ echo "wrote BENCH_shuffle.json"
 echo "== out-of-core storage tier: spill vs recompute-from-lineage =="
 python -m benchmarks.spill_bench --quick --json-out BENCH_spill.json
 echo "wrote BENCH_spill.json"
+
+echo "== cluster tier: 8-device mesh tests + fleet scale-out =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q -m multidevice
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.scale_bench --quick --assert-floor 1.6 \
+    --json-out BENCH_scale.json
+echo "wrote BENCH_scale.json"

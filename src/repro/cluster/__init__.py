@@ -1,0 +1,21 @@
+"""Cluster tier (DESIGN.md §13): mesh-sharded execution + replicated
+SharkServer fleet.
+
+Two independent scale-out axes over the single-host engine:
+
+- `mesh` — a MeshContext places catalog partitions onto the devices of a
+  JAX mesh and runs the compiled aggregate pipeline under shard_map; the
+  compiled exchange ships radix-partition buckets *across devices* with
+  all_to_all instead of through one BlockManager.  Device loss mid-query
+  re-places and recomputes (`DeviceLost` -> new placement generation).
+- `fleet` — N full SharkServer replicas behind a routing frontend with one
+  catalog-epoch protocol, so plan-fingerprint result caches stay coherent
+  across replicas; a replica dying mid-query re-routes to a survivor and
+  recomputes from that replica's own lineage.
+"""
+
+from .mesh import DeviceLost, MeshContext, MeshPlacement
+from .fleet import FleetEpochError, ReplicaLost, SharkFleet
+
+__all__ = ["DeviceLost", "MeshContext", "MeshPlacement",
+           "FleetEpochError", "ReplicaLost", "SharkFleet"]

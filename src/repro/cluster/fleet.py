@@ -1,0 +1,237 @@
+"""Replicated SharkServer fleet (DESIGN.md §13.2).
+
+N full SharkServer replicas — each with its own workers, block store,
+memory budget, and result cache — behind a routing frontend:
+
+    fleet = SharkFleet(num_replicas=4, routing="least_loaded", ...)
+    fleet.create_table("rankings", schema, data)     # fanned to every replica
+    h = fleet.submit("SELECT ...")                   # routed, async
+    fleet.kill_replica(2)                            # chaos: h re-routes
+
+Routing is round-robin or least-loaded (the replica scheduler's queued +
+in-flight query count).  Base tables and DDL fan out to every replica under
+one DDL lock, and the fleet runs ONE catalog-epoch protocol across them:
+after a DDL lands everywhere, every replica's catalog version for the table
+is forced to the fleet-wide maximum (`Catalog.adopt_version`), firing each
+replica's invalidation listeners.  Plan fingerprints hash the optimized
+plan text plus the versions of the tables it reads, so with aligned
+versions the SAME query has the SAME fingerprint on every replica — a
+result cached on one replica can never be served stale on another, and a
+DDL invalidates the entry fleet-wide in one epoch bump.
+
+Replica loss: `kill_replica(i)` marks the replica dead.  A `FleetHandle`
+whose query is in flight there re-submits on a survivor, which recomputes
+from its own replicated lineage — results are identical to the failure-free
+run because every replica holds the same deterministic base tables.  The
+dead replica's in-progress work still drains in the background (its
+scheduler threads finish and release their shuffle blocks), so nothing
+leaks from the shared store of a replica that died mid-query.
+"""
+
+from __future__ import annotations
+
+import copy
+import threading
+import time
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from ..core.plan import Node
+from ..core.sql import CreateStmt, parse
+from ..core.types import Schema
+from ..server.server import SharkServer
+
+
+class ReplicaLost(RuntimeError):
+    """No alive replica can serve the query."""
+
+
+class FleetEpochError(RuntimeError):
+    """Replica catalog versions diverged after a DDL fan-out."""
+
+
+class _Replica:
+    __slots__ = ("index", "server", "alive", "served")
+
+    def __init__(self, index: int, server: SharkServer):
+        self.index = index
+        self.server = server
+        self.alive = True
+        self.served = 0
+
+
+class FleetHandle:
+    """Async handle that survives replica loss: `result()` re-routes to a
+    survivor if the replica serving the query dies before finishing."""
+
+    _POLL_S = 0.02
+
+    def __init__(self, fleet: "SharkFleet", query, client: str):
+        self._fleet = fleet
+        self._query = query
+        self._client = client
+        self.reroutes = 0
+        self._replica, self._inner = fleet._submit_on(None, query, client)
+
+    @property
+    def replica_index(self) -> int:
+        return self._replica.index
+
+    def done(self) -> bool:
+        return self._inner.done()
+
+    def result(self, timeout: Optional[float] = None):
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while True:
+            try:
+                return self._inner.result(timeout=self._POLL_S)
+            except TimeoutError:
+                if not self._replica.alive and not self._inner.done():
+                    self._reroute()     # died mid-query: recompute elsewhere
+                    continue
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise TimeoutError("fleet query timed out")
+            except Exception:
+                if not self._replica.alive:
+                    # the dying replica surfaced an error — its failure must
+                    # not become the fleet's answer
+                    self._reroute()
+                    continue
+                raise
+
+    def _reroute(self) -> None:
+        self.reroutes += 1
+        with self._fleet._lock:
+            self._fleet.reroutes += 1
+        self._replica, self._inner = self._fleet._submit_on(
+            self._replica, self._query, self._client)
+
+
+class SharkFleet:
+    def __init__(self, num_replicas: int = 2, routing: str = "round_robin",
+                 **server_kw):
+        assert routing in ("round_robin", "least_loaded"), routing
+        self.routing = routing
+        self.replicas = [_Replica(i, SharkServer(**server_kw))
+                         for i in range(num_replicas)]
+        self._lock = threading.Lock()
+        self._ddl_lock = threading.Lock()
+        self._rr = 0
+        self.reroutes = 0
+
+    # -- routing --------------------------------------------------------------
+
+    def alive_replicas(self) -> List[_Replica]:
+        return [r for r in self.replicas if r.alive]
+
+    def _pick(self, exclude: Optional[_Replica]) -> _Replica:
+        cands = [r for r in self.replicas if r.alive and r is not exclude]
+        if not cands:
+            cands = self.alive_replicas()
+        if not cands:
+            raise ReplicaLost("every replica is dead")
+        if self.routing == "least_loaded":
+            with self._lock:
+                return min(cands,
+                           key=lambda r: (r.server.scheduler.load(), r.index))
+        with self._lock:
+            r = cands[self._rr % len(cands)]
+            self._rr += 1
+            return r
+
+    def _submit_on(self, exclude: Optional[_Replica], query, client: str):
+        r = self._pick(exclude)
+        # plan objects are mutated by optimize(); each replica gets its own
+        q = copy.deepcopy(query) if isinstance(query, Node) else query
+        handle = r.server.submit(q, client=client)
+        with self._lock:
+            r.served += 1
+        return r, handle
+
+    # -- queries --------------------------------------------------------------
+
+    def submit(self, query: Union[str, Node], client: str = "default"
+               ) -> FleetHandle:
+        return FleetHandle(self, query, client)
+
+    def sql(self, sql: str, client: str = "default"):
+        stmt = parse(sql)
+        if isinstance(stmt, CreateStmt):
+            return self._ddl(sql, stmt, client)
+        return self.submit(sql, client=client).result()
+
+    def sql_np(self, sql: str, client: str = "default"):
+        return self.sql(sql, client=client).to_numpy()
+
+    # -- warehouse / epoch protocol -------------------------------------------
+
+    def create_table(self, name: str, schema: Schema,
+                     data: Dict[str, np.ndarray],
+                     num_partitions: Optional[int] = None,
+                     distribute_by: Optional[str] = None) -> None:
+        """Load the same base table into every alive replica and align
+        catalog epochs — the replicas must be indistinguishable sources of
+        truth for the routing layer."""
+        with self._ddl_lock:
+            for r in self.alive_replicas():
+                r.server.create_table(name, schema, data,
+                                      num_partitions=num_partitions,
+                                      distribute_by=distribute_by)
+            self._align_epochs(name)
+
+    def _ddl(self, sql: str, stmt: CreateStmt, client: str):
+        """CTAS fan-out: every replica executes the (deterministic) DDL so
+        their derived tables are identical, then epochs align fleet-wide."""
+        with self._ddl_lock:
+            results = [r.server.sql(sql, client=client)
+                       for r in self.alive_replicas()]
+            self._align_epochs(stmt.name)
+            return results[0]
+
+    def _align_epochs(self, name: str) -> None:
+        """One epoch protocol across replicas: force every alive replica's
+        version of `name` to the fleet-wide maximum.  `adopt_version` fires
+        the replica's catalog listeners, so result-cache entries reading
+        the table invalidate everywhere in the same logical epoch."""
+        alive = self.alive_replicas()
+        target = max(r.server.catalog.version(name) for r in alive)
+        for r in alive:
+            if r.server.catalog.version(name) != target:
+                r.server.catalog.adopt_version(name, target)
+        versions = {r.server.catalog.version(name) for r in alive}
+        if len(versions) != 1:
+            raise FleetEpochError(
+                f"replica versions diverged for {name!r}: {versions}")
+
+    def epochs(self, name: str) -> List[int]:
+        return [r.server.catalog.version(name) for r in self.alive_replicas()]
+
+    # -- chaos / lifecycle ----------------------------------------------------
+
+    def kill_replica(self, index: int) -> None:
+        """Chaos: the replica stops receiving queries; in-flight FleetHandles
+        bound to it re-route to survivors.  Its scheduler threads drain in
+        the background, releasing per-query shuffle blocks as usual."""
+        r = self.replicas[index]
+        if not r.alive:
+            return
+        if len(self.alive_replicas()) == 1:
+            raise RuntimeError("cannot kill the last replica")
+        r.alive = False
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            return {
+                "replicas": len(self.replicas),
+                "alive": len(self.alive_replicas()),
+                "reroutes": self.reroutes,
+                "served": {r.index: r.served for r in self.replicas},
+                "load": {r.index: r.server.scheduler.load()
+                         for r in self.alive_replicas()},
+            }
+
+    def shutdown(self) -> None:
+        for r in self.replicas:
+            r.server.shutdown()

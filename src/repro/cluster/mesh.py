@@ -1,0 +1,150 @@
+"""Mesh placement layer (DESIGN.md §13.1).
+
+A `MeshContext` wraps the process's JAX devices (CPU emulation via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` gives N of them) and
+owns the *placement* of catalog partitions onto them: round-robin over the
+alive device slots, same convention as the DESIGN.md §5 ``('data',)`` axis.
+Placement is physical-layer state only — it never appears in a logical
+plan, so explain() output and plan fingerprints are byte-identical with
+sharding on or off.
+
+Device loss is modeled the way worker loss is in the runtime scheduler:
+``kill_device(slot)`` marks the slot dead and bumps the placement
+*generation*.  A dispatch that observes a generation change (or catches
+`DeviceLost` from a chaos hook) rebuilds the placement over the survivors
+and recomputes — results are identical because every mesh program computes
+pure partial states from host-resident partitions (the lineage the
+single-host path already has).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class DeviceLost(RuntimeError):
+    """A mesh device died mid-dispatch (raised by chaos hooks; real device
+    loss would surface as an XLA runtime error wrapped into this)."""
+
+    def __init__(self, slot: int):
+        super().__init__(f"mesh device slot {slot} lost")
+        self.slot = slot
+
+
+@dataclass(frozen=True)
+class MeshPlacement:
+    """Partition -> device-slot assignment for ONE dispatch: round-robin of
+    `num_parts` partitions over the alive slots at `generation`."""
+    generation: int
+    alive_slots: Tuple[int, ...]
+    device_of: Tuple[int, ...]          # partition ordinal -> alive-slot index
+    parts_per_device: int               # padded per-device partition count
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.alive_slots)
+
+
+class MeshContext:
+    """Device pool + placement authority for mesh-sharded execution.
+
+    Thread-safe: executors on server worker threads share one context.
+    The jitted shard_map programs are cached per (generation, shape) key by
+    `cluster.shard_exec`, keyed off `mesh()` which is itself cached per
+    generation.
+    """
+
+    def __init__(self, max_devices: Optional[int] = None,
+                 max_retries: int = 3):
+        import jax
+        devs = list(jax.devices())
+        if max_devices is not None:
+            devs = devs[:max_devices]
+        self.devices = devs
+        self.alive: List[bool] = [True] * len(devs)
+        self.generation = 0
+        self.max_retries = max_retries
+        self.lock = threading.RLock()
+        # chaos hook: called at every dispatch with (ctx, dispatch_ordinal);
+        # tests install a killer that calls kill_device / raises DeviceLost
+        self.on_dispatch: Optional[Callable[["MeshContext", int], None]] = None
+        self.dispatches = 0
+        self.retries = 0                # dispatches re-run after device loss
+        self._mesh_cache: Dict[int, object] = {}    # generation -> Mesh
+
+    # -- device liveness ------------------------------------------------------
+
+    def alive_slots(self) -> List[int]:
+        with self.lock:
+            return [i for i, a in enumerate(self.alive) if a]
+
+    @property
+    def n_alive(self) -> int:
+        return len(self.alive_slots())
+
+    def kill_device(self, slot: int) -> None:
+        """Chaos: mark a device slot dead.  Every placement built at an
+        older generation is stale; in-flight dispatches recompute over the
+        survivors."""
+        with self.lock:
+            if not self.alive[slot]:
+                return
+            if sum(self.alive) == 1:
+                raise RuntimeError("cannot kill the last mesh device")
+            self.alive[slot] = False
+            self.generation += 1
+
+    def revive_all(self) -> None:
+        with self.lock:
+            if not all(self.alive):
+                self.alive = [True] * len(self.devices)
+                self.generation += 1
+
+    # -- placement ------------------------------------------------------------
+
+    def mesh(self):
+        """1-D ('data',) mesh over the alive devices, cached per
+        generation (shard_map program caches key off this object)."""
+        from ..parallel import compat
+        with self.lock:
+            gen = self.generation
+            m = self._mesh_cache.get(gen)
+            if m is None:
+                devs = [self.devices[i] for i in self.alive_slots()]
+                m = compat.make_mesh((len(devs),), ("data",), devices=devs)
+                self._mesh_cache = {gen: m}     # old generations are stale
+            return m, gen
+
+    def place(self, num_parts: int) -> MeshPlacement:
+        """Round-robin `num_parts` catalog partitions over the alive
+        slots.  `parts_per_device` is the padded per-device count (the
+        shard_map leading axis is `n_devices * parts_per_device`)."""
+        with self.lock:
+            slots = tuple(self.alive_slots())
+            n = len(slots)
+            device_of = tuple(i % n for i in range(num_parts))
+            per = max(1, -(-num_parts // n)) if num_parts else 1
+            return MeshPlacement(self.generation, slots, device_of, per)
+
+    # -- dispatch bookkeeping -------------------------------------------------
+
+    def fire_dispatch(self) -> int:
+        """Invoke the chaos hook (if any) and count the dispatch.  Returns
+        the generation observed at dispatch start, so callers can detect a
+        placement made stale *during* the dispatch."""
+        with self.lock:
+            ordinal = self.dispatches
+            self.dispatches += 1
+            gen = self.generation
+        hook = self.on_dispatch
+        if hook is not None:
+            hook(self, ordinal)
+        return gen
+
+    def stats(self) -> Dict[str, int]:
+        with self.lock:
+            return {"devices": len(self.devices), "alive": sum(self.alive),
+                    "generation": self.generation,
+                    "dispatches": self.dispatches, "retries": self.retries}

@@ -95,6 +95,20 @@ class Catalog:
         for fn in listeners:
             fn(name, epoch)
 
+    def adopt_version(self, name: str, version: int) -> None:
+        """Force `name`'s version to a peer catalog's (the fleet epoch
+        protocol, DESIGN.md §13.2): the global epoch advances to at least
+        `version` and listeners fire, so dependent result-cache entries
+        invalidate exactly as they would for a local mutation.  Idempotent
+        when the versions already agree."""
+        with self._lock:
+            if self._versions.get(name, 0) == version:
+                return
+            self._epoch = max(self._epoch, version)
+            self._versions[name] = version
+            note = (list(self._listeners), name, version)
+        self._fire(note)
+
     # -- registry ------------------------------------------------------------
 
     def register_table(self, table: Table) -> None:

@@ -112,6 +112,21 @@ class ColumnBlock:
             return None
         return enc.run_values, enc.run_lengths
 
+    def pack_space(self):
+        """Encoded-aware access for bit-packed blocks:
+        (words, bit_width, bias, n) where the uint32 words hold
+        `value - bias` lanes at `bit_width` bits.  Like FOR, the biased code
+        stream is order-preserving, so range/equality predicates translate
+        to code bounds host-side and the scan unpacks + compares the narrow
+        lanes without ever widening to the logical dtype — the BITPACK twin
+        of `frame_space()` (DESIGN.md §12).  None for every other encoding
+        and for dictionary-string blocks (their code order is dictionary
+        order, not value order of the packed lane)."""
+        enc = self.enc
+        if enc.encoding != Encoding.BITPACK or self.str_dict is not None:
+            return None
+        return enc.words, enc.bit_width, enc.bias, enc.n
+
     def recompress(self) -> int:
         """Adaptive WARM-tier recompression (pressure hook): re-encode with
         the scheme `choose_recompression` picks from run-length/span/NDV

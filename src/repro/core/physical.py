@@ -155,6 +155,14 @@ class ExecMetrics:
     spill_bytes: float = 0.0
     spill_reads: int = 0
     recompressions: int = 0
+    # cluster tier (DESIGN.md §13): partitions whose map side ran on the
+    # device mesh, mesh size at dispatch, rows the cross-device exchange
+    # shipped off their source device, and dispatches recomputed after a
+    # device loss
+    mesh_partitions: int = 0
+    mesh_devices: int = 0
+    mesh_shipped_rows: int = 0
+    mesh_retries: int = 0
 
     def describe_joins(self) -> str:
         """One line per join boundary, execution order — the runtime twin of
@@ -208,6 +216,44 @@ def _fused_colscan_fns():
 
         _FUSED_COLSCAN_JIT = jax.jit(scan)
     return _FUSED_COLSCAN_JIT
+
+
+_BITPACK_COLSCAN_JIT: Dict[int, object] = {}
+
+
+def _bitpack_colscan_fn(width: int):
+    """XLA-fused unpack+filter+aggregate for BITPACK filter columns: the
+    packed uint32 words are unpacked to biased codes INSIDE the traced
+    program (per-lane shift/mask), compared against code bounds translated
+    host-side (code = value - bias is order-preserving, same arithmetic as
+    the FOR route), and the value column aggregated — the filter column
+    never widens to its logical dtype.  Same [count, sum, min, max]
+    contract as `_fused_colscan_fns`; the tail lanes of the last word are
+    masked by the valid-row count.  One trace per bit width."""
+    fn = _BITPACK_COLSCAN_JIT.get(width)
+    if fn is None:
+        import jax
+        import jax.numpy as jnp
+
+        per_word = 32 // width
+        lane_mask = np.uint32((1 << width) - 1)
+
+        def scan(words, a, n, lo, hi):
+            shifts = jnp.arange(per_word, dtype=jnp.uint32) * jnp.uint32(width)
+            codes = (words[:, None] >> shifts[None, :]) & lane_mask
+            codes = codes.reshape(-1).astype(jnp.float64)
+            valid = jnp.arange(codes.shape[0]) < n
+            mask = (codes >= lo) & (codes <= hi) & valid
+            a = a.astype(jnp.float64)
+            cnt = jnp.sum(mask.astype(jnp.float64))
+            s = jnp.sum(jnp.where(mask, a, 0.0))
+            mn = jnp.min(jnp.where(mask, a, jnp.inf))
+            mx = jnp.max(jnp.where(mask, a, -jnp.inf))
+            return jnp.stack([cnt, s, mn, mx])
+
+        fn = jax.jit(scan)
+        _BITPACK_COLSCAN_JIT[width] = fn
+    return fn
 
 
 def _code_groupby(codes: np.ndarray, vals: np.ndarray,
@@ -614,6 +660,10 @@ class SegmentRunner:
         framed = (not coded and self.cfg.compressed_domain
                   and fv.block is not None and not fv.materialized
                   and fv.block.frame_space() is not None)
+        packed = (not coded and not framed and not pallas
+                  and self.cfg.compressed_domain
+                  and fv.block is not None and not fv.materialized
+                  and fv.block.pack_space() is not None)
         with _x64():
             if pallas and coded:
                 codes, d = fv.block.code_space()
@@ -653,6 +703,27 @@ class SegmentRunner:
                                               np.float64(clo),
                                               np.float64(chi))
                 route = "for-colscan"
+            elif packed:
+                # bit-packed: value bounds translate to biased-code bounds
+                # host-side exactly like FOR, and the packed words unpack
+                # inside the fused scan — no host-side widening of the
+                # filter column (DESIGN.md §12)
+                ps = fv.block.pack_space()
+                if ps is None:      # recompressed since the route check
+                    raise ExprCompileError("BITPACK words gone (recompressed)")
+                words, width, bias, nrows = ps
+                clo = (float(int(math.ceil(lo)) - int(bias))
+                       if math.isfinite(lo) else -np.inf)
+                chi = (float(int(math.floor(hi)) - int(bias))
+                       if math.isfinite(hi) else np.inf)
+                pad = words.shape[0] * (32 // width) - nrows
+                a = np.asarray(vals, np.float64)
+                if pad:
+                    a = np.pad(a, (0, pad))
+                res = _bitpack_colscan_fn(width)(words, a, np.int64(nrows),
+                                                 np.float64(clo),
+                                                 np.float64(chi))
+                route = "bitpack-colscan"
             else:
                 res = _fused_colscan_fns()(np.asarray(fv.arr), vals,
                                               np.float64(lo), np.float64(hi))
@@ -1035,11 +1106,17 @@ class Executor:
                  enable_map_pruning: bool = True,
                  default_shuffle_buckets: int = 64,
                  scan_cache: Optional[ScanCache] = None,
-                 backend: str = "compiled", exchange: str = "coded"):
+                 backend: str = "compiled", exchange: str = "coded",
+                 mesh=None):
         assert backend in ("compiled", "numpy"), backend
         assert exchange in ("coded", "decoded"), exchange
         self.ctx = ctx
         self.catalog = catalog
+        # cluster.MeshContext (DESIGN.md §13.1): when set, eligible
+        # aggregate map sides run sharded over the device mesh and the
+        # compiled exchange ships buckets across devices.  Physical layer
+        # only — plans, explain() and fingerprints never see it.
+        self.mesh = mesh
         self.pde = pde
         self.enable_pde = enable_pde
         self.enable_map_pruning = enable_map_pruning
@@ -1269,8 +1346,20 @@ class Executor:
             # function per partition, kernel-lowered when the shape allows
             scanc, runner = self._make_runner(seg, "aggregate")
             src = self._segment_source_rdd(scanc, seg, ensure_nonempty=True)
-            map_rdd = self._prep_exchange(src.map_partitions(
-                lambda s, b: runner.run_aggregate(b, group_cols, aggs)))
+            mesh_partials = None
+            if self.mesh is not None and self.backend == "compiled":
+                # cluster tier: run the map side sharded over the device
+                # mesh; the partial states feed the SAME shuffle/merge
+                # reduce below, so semantics and row order match the
+                # single-host path by construction
+                mesh_partials = self._mesh_partials(src, runner, group_cols,
+                                                    aggs)
+            if mesh_partials is not None:
+                map_rdd = self._prep_exchange(
+                    self.ctx.parallelize(mesh_partials))
+            else:
+                map_rdd = self._prep_exchange(src.map_partitions(
+                    lambda s, b: runner.run_aggregate(b, group_cols, aggs)))
         else:
             child = self._materialize_empty(self._compile(node.child),
                                             node.child)
@@ -1308,6 +1397,89 @@ class Executor:
         reduce_fn = lambda split, b: rrunner.merge(b, group_cols, aggs)
         rdd = ShuffledRDD(dep, groups, reduce_fn)
         return Compiled(rdd, names)
+
+    # -- mesh-sharded map side (cluster tier, DESIGN.md §13.1) ----------------
+
+    def _mesh_partials(self, src: RDD, runner: "SegmentRunner",
+                       group_cols, aggs) -> Optional[List[PartitionBatch]]:
+        """Compute the aggregate's partial states on the device mesh.
+
+        Eligibility is the kernel shape check the single-host routes use
+        (`_agg_kernel_shape`) narrowed to numeric columns; anything else
+        returns None and the host map side runs — a silent, always-correct
+        fallback.  The colscan shape shards (device × partition) with no
+        collective; the group-by shape runs the compiled radix exchange
+        across devices and partial-aggregates each device's received rows.
+        Either way the output is a list of partial-state batches that feed
+        the standard shuffle + merge, so the final rows (and their order)
+        are produced by exactly the single-host reduce path.
+        """
+        shape = runner._agg_kernel_shape(group_cols, aggs)
+        if shape is None:
+            return None
+        from ..cluster import shard_exec
+        mesh = self.mesh
+        before = mesh.retries
+        batches = self.ctx.scheduler.run_result_stage(src)
+        try:
+            if shape[0] == "colscan":
+                _, fcol, lo, hi, vcol = shape
+                fvals, avals, int_sum = [], [], False
+                for b in batches:
+                    fv, vv = b.col(fcol), b.col(vcol)
+                    if fv.is_string or vv.is_string:
+                        return None
+                    varr = np.asarray(vv.arr)
+                    int_sum = int_sum or np.issubdtype(varr.dtype, np.integer)
+                    fvals.append(np.asarray(fv.arr, np.float64))
+                    avals.append(varr.astype(np.float64, copy=False))
+                stats, report = shard_exec.mesh_colscan(
+                    mesh, fvals, avals, float(lo), float(hi))
+                out = []
+                for (cnt, s, mn, mx), b in zip(stats, batches):
+                    out.append(runner._colscan_result(
+                        aggs, float(cnt), float(s), float(mn), float(mx),
+                        int_sum))
+                    runner._note("mesh-colscan", b.num_rows, 1,
+                                 float(b.nbytes))
+            else:                                   # ("groupby_mxu", g, v)
+                _, gsrc, vcol = shape
+                keys, vals = [], ([] if vcol is not None else None)
+                kdt = None
+                for b in batches:
+                    gv = b.col(gsrc)
+                    karr = np.asarray(gv.arr)
+                    if gv.is_string or not np.issubdtype(karr.dtype,
+                                                         np.integer):
+                        return None     # exchange hashes integer key lanes
+                    kdt = karr.dtype
+                    keys.append(karr)
+                    if vcol is not None:
+                        vv = b.col(vcol)
+                        if vv.is_string:
+                            return None
+                        vals.append(np.asarray(vv.arr))
+                per_dev, report = shard_exec.mesh_group_exchange(
+                    mesh, keys, vals)
+                self.metrics.mesh_shipped_rows += report["shipped_rows"]
+                out = []
+                for kd, vd in per_dev:
+                    cols = {group_cols[0]: ColumnVal(
+                        kd.astype(kdt, copy=False))}
+                    for a in aggs:
+                        if a.arg is not None:
+                            cols[a.arg.name] = ColumnVal(vd)
+                    pb = partial_aggregate(PartitionBatch(cols), group_cols,
+                                           aggs)
+                    runner._note("mesh-exchange", int(kd.shape[0]),
+                                 pb.num_rows, float(kd.nbytes))
+                    out.append(pb)
+        except ExprCompileError:
+            return None
+        self.metrics.mesh_partitions += len(batches)
+        self.metrics.mesh_devices = report["devices"]
+        self.metrics.mesh_retries += mesh.retries - before
+        return out
 
     # -- joins ----------------------------------------------------------------
 

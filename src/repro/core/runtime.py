@@ -80,6 +80,16 @@ class BlockManager:
         # task attempts finishing late must not resurrect their blocks
         self.released_shuffles: Set[int] = set()
         self.memory_manager = None  # attached by server.MemoryManager
+        # shuffle blocks moved to the storage tier under memory pressure:
+        # key -> SpillRef.  A spilled block leaves worker memory (and its
+        # worker's block set — the segment is server-local disk, so worker
+        # loss does not take it down); fetch_shuffle faults it back in, and
+        # a lost/corrupt segment degrades to FetchFailed -> lineage
+        # recompute, never a wrong answer.
+        self.spilled_shuffle: Dict[Tuple, Any] = {}
+        self.shuffle_storage = None  # attached by MemoryManager.attach_storage
+        self.shuffle_spill_faults = 0
+        self.shuffle_spill_lost = 0
 
     def _put_locked(self, key: Tuple, worker: int,
                     batch: PartitionBatch) -> None:
@@ -143,13 +153,20 @@ class BlockManager:
             return nbytes
 
     def drop_shuffle(self, shuffle_id: int) -> int:
-        """Release all map output of a finished shuffle; returns bytes freed.
-        The release is sticky: later writes for this shuffle (straggler /
-        speculative attempts outliving their query) are dropped on arrival."""
+        """Release all map output of a finished shuffle — in-memory blocks
+        AND spilled segments; returns bytes freed.  The release is sticky:
+        later writes for this shuffle (straggler / speculative attempts
+        outliving their query) are dropped on arrival."""
         with self.lock:
             self.released_shuffles.add(shuffle_id)
             keys = [k for k in self.blocks
                     if k[0] == "shuf" and k[1] == shuffle_id]
+            spilled = [k for k in self.spilled_shuffle if k[1] == shuffle_id]
+            storage = self.shuffle_storage
+            for k in spilled:
+                ref = self.spilled_shuffle.pop(k)
+                if storage is not None:
+                    storage.forget_shuffle(ref)
         return sum(self.drop_block(k) for k in keys)
 
     def lru_partition_keys(self) -> List[Tuple]:
@@ -172,8 +189,40 @@ class BlockManager:
 
     def has_map_output(self, shuffle_id: int, map_split: int) -> bool:
         with self.lock:
-            return any(k[0] == "shuf" and k[1] == shuffle_id and k[2] == map_split
-                       for k in self.blocks)
+            return any(k[0] == "shuf" and k[1] == shuffle_id
+                       and k[2] == map_split
+                       for k in (*self.blocks, *self.spilled_shuffle))
+
+    def spill_shuffle_block(self, key: Tuple) -> int:
+        """Move one shuffle block from worker memory to the storage tier;
+        returns resident bytes freed (0 when no storage is attached, the
+        block is gone, or it is already spilled).  Called by the
+        MemoryManager's working-set rung — shuffle output obeys the budget
+        like everything else once a spill tier exists."""
+        with self.lock:
+            storage = self.shuffle_storage
+            if storage is None:
+                return 0
+            hit = self.blocks.get(key)
+            if hit is None:
+                return 0
+            if key in self.spilled_shuffle:
+                # a deterministic recompute re-created a block whose segment
+                # is still live: the bytes on disk are identical, just
+                # release the memory copy
+                return self.drop_block(key)
+            ref = storage.spill_shuffle(key, hit[1])
+            if ref is None:
+                return 0
+            self.spilled_shuffle[key] = ref
+            return self.drop_block(key)
+
+    def shuffle_spill_candidates(self) -> List[Tuple]:
+        """Resident (non-spilled) shuffle block keys, largest first — the
+        eviction order for the working-set rung."""
+        with self.lock:
+            keys = [k for k in self.blocks if k[0] == "shuf"]
+            return sorted(keys, key=lambda k: -self.sizes.get(k, 0))
 
     def fetch_shuffle(self, shuffle_id: int, num_maps: int,
                       buckets: Sequence[int],
@@ -198,11 +247,25 @@ class BlockManager:
         with self.lock:
             for m in (range(num_maps) if maps is None else maps):
                 for b in buckets:
-                    hit = self.blocks.get(("shuf", shuffle_id, m, b))
-                    if hit is None:
-                        missing.add(m)
-                    else:
+                    key = ("shuf", shuffle_id, m, b)
+                    hit = self.blocks.get(key)
+                    if hit is not None:
                         pieces.append(hit[1])
+                        continue
+                    ref = self.spilled_shuffle.get(key)
+                    if ref is not None and self.shuffle_storage is not None:
+                        # spilled to the storage tier: fault the segment
+                        # back in (checksum-verified).  A lost or corrupt
+                        # segment degrades to a missing map output and the
+                        # scheduler recomputes it from lineage.
+                        batch = self.shuffle_storage.fault_shuffle(ref)
+                        if batch is not None:
+                            self.shuffle_spill_faults += 1
+                            pieces.append(batch)
+                            continue
+                        self.shuffle_spill_lost += 1
+                        self.spilled_shuffle.pop(key, None)
+                    missing.add(m)
         if missing:
             raise FetchFailed(shuffle_id, sorted(missing))
         return pieces

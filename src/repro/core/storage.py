@@ -130,7 +130,8 @@ def serialize_partition(index: int, columns: Dict[str, ColumnBlock]) -> bytes:
                                 "nbytes": len(raw)}
             chunks.append(raw)
         cols_meta.append(meta)
-    header = json.dumps({"index": index, "columns": cols_meta}).encode()
+    header = json.dumps({"kind": "partition", "index": index,
+                         "columns": cols_meta}).encode()
     body = b"".join([MAGIC, struct.pack("<I", len(header)), header] + chunks)
     return body + struct.pack("<I", zlib.crc32(body))
 
@@ -160,6 +161,8 @@ def deserialize_partition(data: bytes) -> Tuple[int, Dict[str, ColumnBlock]]:
     except ValueError as e:
         raise SpillCorrupt(f"bad header: {e}") from e
     offset = hstart + hlen
+    if header.get("kind", "partition") != "partition":
+        raise SpillCorrupt(f"not a partition segment: {header.get('kind')}")
     columns: Dict[str, ColumnBlock] = {}
     for meta in header["columns"]:
         kwargs = {}
@@ -178,6 +181,66 @@ def deserialize_partition(data: bytes) -> Tuple[int, Dict[str, ColumnBlock]]:
                                             _stats_from_json(meta["stats"]),
                                             str_dict)
     return header["index"], columns
+
+
+def serialize_batch(batch) -> bytes:
+    """Encode one shuffle block (PartitionBatch) as a self-describing
+    segment — the SHUFFLE sibling of `serialize_partition`, sharing the
+    container framing (magic | header | arrays | crc32).  Columns
+    materialize on serialization (shuffle blocks are already materialized
+    row views; block-backed columns decode once here), and string columns
+    keep their dictionary-preserving (codes, dictionary) form so a faulted
+    block is byte-identical to the in-memory one the reduce side expects."""
+    cols_meta: List[dict] = []
+    chunks: List[bytes] = []
+    for name, v in batch.cols.items():
+        arr = np.ascontiguousarray(np.asarray(v.arr))
+        raw = arr.tobytes()
+        meta = {"name": name, "dtype": arr.dtype.str,
+                "shape": list(arr.shape), "nbytes": len(raw),
+                "sorted_dict": bool(v.sorted_dict), "sdict": None}
+        chunks.append(raw)
+        if v.sdict is not None:
+            sraw = np.ascontiguousarray(v.sdict).tobytes()
+            meta["sdict"] = {"dtype": v.sdict.dtype.str,
+                             "shape": list(v.sdict.shape),
+                             "nbytes": len(sraw)}
+            chunks.append(sraw)
+        cols_meta.append(meta)
+    header = json.dumps({"kind": "shuffle", "columns": cols_meta}).encode()
+    body = b"".join([MAGIC, struct.pack("<I", len(header)), header] + chunks)
+    return body + struct.pack("<I", zlib.crc32(body))
+
+
+def deserialize_batch(data: bytes):
+    """Validate and decode one shuffle segment; raises SpillCorrupt on any
+    structural or checksum mismatch (the caller treats that as a lost map
+    output: FetchFailed -> recompute from lineage)."""
+    from .batch import PartitionBatch
+    from .expr import ColumnVal
+    if len(data) < len(MAGIC) + 8 or data[: len(MAGIC)] != MAGIC:
+        raise SpillCorrupt("bad magic")
+    body, (crc,) = data[:-4], struct.unpack("<I", data[-4:])
+    if zlib.crc32(body) != crc:
+        raise SpillCorrupt("checksum mismatch")
+    (hlen,) = struct.unpack_from("<I", body, len(MAGIC))
+    hstart = len(MAGIC) + 4
+    try:
+        header = json.loads(body[hstart: hstart + hlen].decode())
+    except ValueError as e:
+        raise SpillCorrupt(f"bad header: {e}") from e
+    if header.get("kind") != "shuffle":
+        raise SpillCorrupt(f"not a shuffle segment: {header.get('kind')}")
+    offset = hstart + hlen
+    cols: Dict[str, "ColumnVal"] = {}
+    for meta in header["columns"]:
+        arr, offset = _take(body, offset, meta)
+        sdict = None
+        if meta["sdict"] is not None:
+            sdict, offset = _take(body, offset, meta["sdict"])
+        cols[meta["name"]] = ColumnVal(arr, sdict,
+                                       sorted_dict=meta["sorted_dict"])
+    return PartitionBatch(cols)
 
 
 # ---------------------------------------------------------------------------
@@ -219,6 +282,9 @@ class StorageManager:
         self.spill_lost = 0             # fault found the file missing
         self.spill_corrupt = 0          # fault found the file corrupt
         self.lineage_faults = 0         # faults that recomputed from lineage
+        self.shuffle_spills = 0         # shuffle blocks written to a segment
+        self.shuffle_faults = 0         # shuffle blocks read back from disk
+        self.shuffle_lost = 0           # shuffle faults that found no segment
         self.recompressions = 0         # blocks shrunk by the WARM hook
         self.recompressed_bytes = 0
         self.released_bytes = 0         # resident bytes freed by cold transitions
@@ -323,6 +389,75 @@ class StorageManager:
         except OSError:
             pass
 
+    # -- COLD: shuffle blocks -------------------------------------------------
+
+    def spill_shuffle(self, key: Tuple, batch) -> Optional[SpillRef]:
+        """Write one shuffle block to the cold tier (spill mode only —
+        dropping shuffle output mid-query forces recompute storms, so drop
+        mode never evicts shuffle blocks).  Same write-behind path as
+        partition segments; the block key lands in the file name for
+        operator forensics."""
+        if self.mode != "spill":
+            return None
+        payload = serialize_batch(batch)
+        path = os.path.join(
+            self.dir,
+            f"shuf-{next(self._seq):06d}"
+            f"-s{key[1]}-m{key[2]}-b{key[3]}.shk")
+        with self.lock:
+            self._pending[path] = payload
+            self._live.add(path)
+            self.shuffle_spills += 1
+            self.spills += 1
+            self.spill_bytes += len(payload)
+            self.spill_write_bytes += len(payload)
+            if self._writer is not None:
+                self._queue.put((path, payload))
+            else:
+                self._flush_one(path, payload)
+        return SpillRef(path, len(payload))
+
+    def fault_shuffle(self, ref: SpillRef):
+        """Read one spilled shuffle block back; returns None when the
+        segment is lost or corrupt — the caller reports the map output
+        missing (FetchFailed) and the scheduler recomputes it from lineage,
+        the same fault contract as partition segments."""
+        with self.lock:
+            data = self._pending.get(ref.path)
+        if data is None:
+            try:
+                with open(ref.path, "rb") as f:
+                    data = f.read()
+            except OSError:
+                with self.lock:
+                    self.shuffle_lost += 1
+                    self.spill_lost += 1
+                return None
+        try:
+            batch = deserialize_batch(data)
+        except SpillCorrupt:
+            with self.lock:
+                self.spill_corrupt += 1
+                self.shuffle_lost += 1
+            return None
+        with self.lock:
+            self.shuffle_faults += 1
+            self.spill_reads += 1
+            self.spill_read_bytes += len(data)
+        return batch
+
+    def forget_shuffle(self, ref: SpillRef) -> None:
+        """Retire one shuffle segment (its shuffle finished, or its block
+        was recomputed): release path, pending payload, and file."""
+        with self.lock:
+            self._pending.pop(ref.path, None)
+            self._live.discard(ref.path)
+            self.spill_bytes -= ref.nbytes
+        try:
+            os.remove(ref.path)
+        except OSError:
+            pass
+
     # -- write-behind ---------------------------------------------------------
 
     def _flush_one(self, path: str, payload: bytes) -> None:
@@ -370,6 +505,9 @@ class StorageManager:
                 "spill_lost": self.spill_lost,
                 "spill_corrupt": self.spill_corrupt,
                 "lineage_faults": self.lineage_faults,
+                "shuffle_spills": self.shuffle_spills,
+                "shuffle_faults": self.shuffle_faults,
+                "shuffle_lost": self.shuffle_lost,
                 "recompressions": self.recompressions,
                 "recompressed_bytes": self.recompressed_bytes,
                 "released_bytes": self.released_bytes,

@@ -43,14 +43,22 @@ def fold_keys_u32(keys: np.ndarray) -> np.ndarray:
         np.uint32)
 
 
+def mix_u32(h):
+    """The radix-partition hash mix, on pre-folded uint32 lanes.  Written in
+    ops numpy and jnp share, so the host stride mirror of the cross-device
+    exchange (cluster/shard_exec.py) computes bit-identical bucket ids to
+    the compiled programs — one hash, three executors (host numpy, shard_map
+    XLA, Pallas kernel)."""
+    h = h * _GOLDEN32                                   # uint32 wrap-around
+    h = h ^ (h >> np.uint32(15))
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> np.uint32(13))
+    return h
+
+
 def _bucket_ids(keys_ref, *, num_buckets: int, num_buckets_padded: int,
                 valid_rows: int, block: int, prog_id):
-    k = keys_ref[...]
-    h = k * _GOLDEN32                                   # uint32 wrap-around
-    h = h ^ (h >> jnp.uint32(15))
-    h = h * jnp.uint32(0x85EBCA6B)
-    h = h ^ (h >> jnp.uint32(13))
-    b = (h % jnp.uint32(num_buckets)).astype(jnp.int32)
+    b = (mix_u32(keys_ref[...]) % jnp.uint32(num_buckets)).astype(jnp.int32)
     # padding rows -> out-of-range bucket: excluded from the histogram and
     # sliced off the per-row ids by the wrapper
     pos = jax.lax.broadcasted_iota(jnp.int32, (block,), 0) + prog_id * block

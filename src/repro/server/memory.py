@@ -10,12 +10,16 @@ cache, and enforces a configurable budget.
 
 The budget governs *evictable cache bytes* — cached partition blocks plus
 result-cache entries.  Shuffle map outputs are working memory, not cache:
-a running reducer holds a fetch dependency on them, so evicting them here
+a running reducer holds a fetch dependency on them, so *dropping* them
 would only trade eviction for immediate lineage recovery churn.  They are
 accounted and reported (`working_bytes`), and the server releases them
 deterministically when their query completes (`BlockManager.drop_shuffle`);
 a worker death dropping them mid-query is already handled by the
-scheduler's lineage recovery.
+scheduler's lineage recovery.  With a spill-mode StorageManager attached,
+however, the working set obeys the budget too: when cache eviction alone
+cannot satisfy it, shuffle blocks are *spilled* (largest first) to
+checksummed segments and fault back in on fetch — a lost segment degrades
+to FetchFailed -> lineage recompute, the same contract as everything else.
 
 Eviction policy (deterministic, documented order):
   1. cached partition blocks, least-recently-used first — cheapest to hold
@@ -82,8 +86,13 @@ class MemoryManager:
     def attach_storage(self, storage) -> None:
         """Attach the out-of-core storage tier (DESIGN.md §12): enables the
         recompression and spill rungs of `enforce()` and adds the catalog's
-        resident encoded bytes to the governed budget."""
+        resident encoded bytes to the governed budget.  In spill mode the
+        BlockManager gains the shuffle spill/fault path too (drop mode
+        keeps shuffle output pinned — dropping it mid-query just forces
+        recompute storms)."""
         self.storage = storage
+        if storage is not None and storage.mode == "spill":
+            self.bm.shuffle_storage = storage
 
     def drop_decoded_caches(self) -> int:
         """Release every catalog table's memoized decode cache — pure
@@ -197,6 +206,25 @@ class MemoryManager:
                 self.over_budget_events += (
                     self.cache_bytes() > self.budget_bytes)
                 break
+            self._enforce_working_set(protect)
+
+    def _enforce_working_set(self, protect: Optional[Tuple]) -> None:
+        """Working-set rung: with a spill-mode storage tier attached, total
+        accounted bytes (cache + shuffle output) obey the budget too —
+        shuffle blocks spill largest-first and fault back in on fetch.
+        Runs after the cache rungs so catalog state always yields before
+        mid-query working memory does."""
+        if (self.storage is None or self.storage.mode != "spill"
+                or self.bm.shuffle_storage is None):
+            return
+        if self.accounted_bytes() <= self.budget_bytes:
+            return
+        for key in self.bm.shuffle_spill_candidates():
+            if key == protect:
+                continue
+            self.bm.spill_shuffle_block(key)
+            if self.accounted_bytes() <= self.budget_bytes:
+                return
 
     # -- storage-hierarchy rungs (DESIGN.md §12) ------------------------------
 
@@ -268,4 +296,7 @@ class MemoryManager:
             "spill_reads": st.get("spill_reads", 0),
             "recompressions": st.get("recompressions", 0),
             "lineage_faults": st.get("lineage_faults", 0),
+            "shuffle_spills": st.get("shuffle_spills", 0),
+            "shuffle_faults": st.get("shuffle_faults", 0),
+            "shuffle_lost": st.get("shuffle_lost", 0),
         }

@@ -107,6 +107,7 @@ class FairScheduler:
         self._cv = threading.Condition()
         self._clients: Dict[str, _ClientState] = {}
         self._queued = 0
+        self._inflight = 0
         self._vfloor = 0.0
         self._shutdown = False
         self.rejected = 0
@@ -183,6 +184,7 @@ class FairScheduler:
                     return
                 client, handle = picked
                 self._queued -= 1
+                self._inflight += 1
                 self._vfloor = max(self._vfloor, client.vtime)
                 self._cv.notify_all()  # queue space freed: wake submitters
             handle.started = time.monotonic()
@@ -201,14 +203,22 @@ class FairScheduler:
                 client.vtime += elapsed / client.weight
                 client.served += 1
                 client.service_s += elapsed
+                self._inflight -= 1
             handle._event.set()
 
     # -- lifecycle / reporting -------------------------------------------------
+
+    def load(self) -> int:
+        """Queued + in-flight query count — the routing signal the fleet's
+        least-loaded frontend uses (cluster/fleet.py)."""
+        with self._cv:
+            return self._queued + self._inflight
 
     def stats(self) -> Dict[str, object]:
         with self._cv:
             return {
                 "queued": self._queued,
+                "inflight": self._inflight,
                 "rejected": self.rejected,
                 "clients": {
                     name: {"weight": c.weight, "served": c.served,

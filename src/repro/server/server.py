@@ -65,7 +65,8 @@ class SharkServer:
                  task_launch_overhead_s: float = 0.0,
                  backend: str = "compiled", exchange: str = "coded",
                  spill_dir: Optional[str] = None,
-                 spill_mode: Optional[str] = None):
+                 spill_mode: Optional[str] = None,
+                 mesh=None):
         self.ctx = SharkContext(num_workers=num_workers,
                                 max_threads=max_threads,
                                 speculation=speculation,
@@ -93,7 +94,7 @@ class SharkServer:
             pde=pde_config or PDEConfig(), enable_pde=enable_pde,
             enable_map_pruning=enable_map_pruning,
             default_shuffle_buckets=default_shuffle_buckets,
-            backend=backend, exchange=exchange)
+            backend=backend, exchange=exchange, mesh=mesh)
         self.scheduler = FairScheduler(
             self._run_query, max_concurrent=max_concurrent_queries,
             max_queue_depth=max_queue_depth)

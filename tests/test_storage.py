@@ -17,7 +17,8 @@ from repro.core.compression import (Encoding, choose_recompression, decode_np,
 from repro.core.pde import PDEConfig
 from repro.core.session import SharkSession
 from repro.core.storage import (SpillCorrupt, StorageManager,
-                                deserialize_partition, serialize_partition)
+                                deserialize_batch, deserialize_partition,
+                                serialize_batch, serialize_partition)
 from repro.core.types import DType, Field, Schema
 from repro.server.memory import MemoryManager
 from repro.server.server import SharkServer
@@ -317,6 +318,124 @@ class TestServerSpill:
 
 
 # ---------------------------------------------------------------------------
+# Shuffle-block spill (working-set rung)
+# ---------------------------------------------------------------------------
+
+
+class TestShuffleSpill:
+    def test_batch_segment_round_trip(self):
+        from repro.core.expr import ColumnVal
+        rng = np.random.default_rng(9)
+        batch = PartitionBatch({
+            "k": ColumnVal(rng.integers(0, 100, 500).astype(np.int64)),
+            "v": ColumnVal(rng.normal(size=500)),
+            "g": ColumnVal(rng.integers(0, 3, 500).astype(np.int32),
+                           sdict=np.array(["aa", "bb", "cc"]),
+                           sorted_dict=True)})
+        out = deserialize_batch(serialize_batch(batch))
+        assert out.names() == batch.names()
+        for name in batch.names():
+            np.testing.assert_array_equal(np.asarray(out.col(name).arr),
+                                          np.asarray(batch.col(name).arr))
+        np.testing.assert_array_equal(out.col("g").sdict, batch.col("g").sdict)
+        assert out.col("g").sorted_dict
+
+    def test_segment_kinds_do_not_cross(self):
+        part, _ = _partition(seed=8)
+        pblob = serialize_partition(0, part.columns)
+        with pytest.raises(SpillCorrupt):
+            deserialize_batch(pblob)
+        from repro.core.expr import ColumnVal
+        sblob = serialize_batch(PartitionBatch(
+            {"v": ColumnVal(np.arange(10.0))}))
+        with pytest.raises(SpillCorrupt):
+            deserialize_partition(sblob)
+        flipped = bytearray(sblob)
+        flipped[len(flipped) // 2] ^= 0xFF
+        with pytest.raises(SpillCorrupt):
+            deserialize_batch(bytes(flipped))
+
+    def test_budgeted_shuffle_spills_and_results_identical(self, tmp_path):
+        rng = np.random.default_rng(5)
+        n = 60_000
+        data = {"k": rng.integers(0, 2000, n).astype(np.int64),
+                "v": rng.normal(size=n)}
+        schema = Schema([Field("k", DType.INT64), Field("v", DType.FLOAT64)])
+        q = ("SELECT k, SUM(v) AS s, COUNT(*) AS c FROM t "
+             "GROUP BY k ORDER BY k")
+
+        def run(budget):
+            sess = SharkSession(num_workers=2, max_threads=4,
+                                default_partitions=4)
+            sess.create_table("t", schema,
+                              {k: v.copy() for k, v in data.items()})
+            st = None
+            if budget:
+                mm = MemoryManager(sess.ctx.block_manager,
+                                   budget_bytes=budget)
+                mm.attach_catalog(sess.catalog)
+                st = StorageManager(spill_dir=str(tmp_path),
+                                    async_write=False)
+                mm.attach_storage(st)
+            r = sess.sql_np(q)
+            return r, st, sess
+
+        base, _, _ = run(None)
+        out, st, sess = run(120_000)
+        for k in base:
+            np.testing.assert_allclose(base[k], out[k], rtol=1e-9)
+        stats = st.stats()
+        assert stats["shuffle_spills"] > 0
+        assert stats["shuffle_faults"] > 0
+        assert stats["shuffle_lost"] == 0
+        # releasing the shuffles retires every spilled segment (the server
+        # tier calls this per completed query)
+        sess.release_shuffles()
+        assert sess.ctx.block_manager.spilled_shuffle == {}
+        assert glob.glob(str(tmp_path / "shuf-*.shk")) == []
+
+    def test_lost_shuffle_segment_recomputes_from_lineage(self, tmp_path):
+        rng = np.random.default_rng(6)
+        n = 60_000
+        data = {"k": rng.integers(0, 2000, n).astype(np.int64),
+                "v": rng.normal(size=n)}
+        schema = Schema([Field("k", DType.INT64), Field("v", DType.FLOAT64)])
+        q = ("SELECT k, SUM(v) AS s, COUNT(*) AS c FROM t "
+             "GROUP BY k ORDER BY k")
+        base_sess = SharkSession(num_workers=2, max_threads=4,
+                                 default_partitions=4)
+        base_sess.create_table("t", schema,
+                               {k: v.copy() for k, v in data.items()})
+        base = base_sess.sql_np(q)
+
+        sess = SharkSession(num_workers=2, max_threads=4,
+                            default_partitions=4)
+        sess.create_table("t", schema, {k: v.copy() for k, v in data.items()})
+        mm = MemoryManager(sess.ctx.block_manager, budget_bytes=120_000)
+        mm.attach_catalog(sess.catalog)
+        st = StorageManager(spill_dir=str(tmp_path), async_write=False)
+        mm.attach_storage(st)
+        # hostile filesystem: the first faulted segment of each fetch is
+        # gone — the fetch must degrade to FetchFailed -> lineage recompute
+        real = st.fault_shuffle
+        state = {"dropped": 0}
+
+        def flaky(ref):
+            if state["dropped"] < 3:
+                state["dropped"] += 1
+                st.forget_shuffle(ref)
+                return None
+            return real(ref)
+
+        st.fault_shuffle = flaky
+        out = sess.sql_np(q)
+        for k in base:
+            np.testing.assert_allclose(base[k], out[k], rtol=1e-9)
+        assert state["dropped"] > 0
+        assert sess.ctx.block_manager.shuffle_spill_lost > 0
+
+
+# ---------------------------------------------------------------------------
 # Compressed-domain execution routes
 # ---------------------------------------------------------------------------
 
@@ -364,6 +483,37 @@ class TestCompressedDomainRoutes:
             r_on, r_off = on.sql_np(q), off.sql_np(q)
             assert "rle-scan" in on.metrics().segment_routes()
             assert "rle-scan" not in off.metrics().segment_routes()
+            for k in r_on:
+                np.testing.assert_allclose(r_on[k], r_off[k], rtol=1e-12)
+
+    def test_bitpack_colscan_route_and_parity(self):
+        # small-range ints BITPACK-encode at load; the jit colscan must
+        # compare biased codes on the packed lanes (host-translated bounds)
+        # instead of widening the filter column
+        def _bp_session(cd: bool):
+            rng = np.random.default_rng(7)
+            n = 40_000
+            data = {"b": rng.integers(-50, 50, n).astype(np.int64),
+                    "v": rng.normal(size=n)}
+            schema = Schema([Field("b", DType.INT64),
+                             Field("v", DType.FLOAT64)])
+            sess = SharkSession(num_workers=2, max_threads=4,
+                                default_partitions=4,
+                                pde_config=PDEConfig(compressed_domain=cd))
+            sess.create_table("t", schema, data)
+            encs = {nm: blk.enc.encoding
+                    for p in sess.catalog.get("t").partitions
+                    for nm, blk in p._columns.items()}
+            assert encs["b"] == Encoding.BITPACK
+            return sess
+
+        on, off = _bp_session(True), _bp_session(False)
+        for q in ("SELECT COUNT(*) AS c, SUM(v) AS s, MIN(v) AS mn, "
+                  "MAX(v) AS mx FROM t WHERE b BETWEEN -30 AND 20",
+                  "SELECT COUNT(*) AS c, SUM(v) AS s FROM t WHERE b >= 44"):
+            r_on, r_off = on.sql_np(q), off.sql_np(q)
+            assert "bitpack-colscan" in on.metrics().segment_routes()
+            assert "bitpack-colscan" not in off.metrics().segment_routes()
             for k in r_on:
                 np.testing.assert_allclose(r_on[k], r_off[k], rtol=1e-12)
 
