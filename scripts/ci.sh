@@ -56,6 +56,10 @@ echo "== out-of-core storage tier: spill vs recompute-from-lineage =="
 python -m benchmarks.spill_bench --quick --json-out BENCH_spill.json
 echo "wrote BENCH_spill.json"
 
+echo "== whole-stage compilation: fused stage programs vs seam-by-seam =="
+python -m benchmarks.pipeline_bench --quick --json-out BENCH_pipeline.json
+echo "wrote BENCH_pipeline.json"
+
 echo "== cluster tier: 8-device mesh tests + fleet scale-out =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -q -m multidevice

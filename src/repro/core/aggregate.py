@@ -87,6 +87,26 @@ def seg_minmax(inverse: np.ndarray, val: np.ndarray, num_groups: int,
     return acc
 
 
+def combine_colscan_stats(stats: Sequence[Sequence[float]]
+                          ) -> Tuple[float, float, float, float]:
+    """Combine per-chunk colscan [count, sum, min, max] states into one.
+
+    Count/min/max combine exactly; the sum stays in the same float64
+    rounding class as a single-pass accumulation (DESIGN.md §14: the
+    double-buffered chunked colscan must be a semantic no-op)."""
+    cnt = 0.0
+    s = np.float64(0.0)
+    mn = np.inf
+    mx = -np.inf
+    for st in stats:
+        cnt += float(st[0])
+        s = s + np.float64(st[1])
+        if float(st[0]) > 0:
+            mn = min(mn, float(st[2]))
+            mx = max(mx, float(st[3]))
+    return cnt, float(s), mn, mx
+
+
 # State columns per aggregate: AVG keeps (sum, count); COUNT_DISTINCT defers
 # to the reduce side (map side emits distinct (group, value) pairs).
 

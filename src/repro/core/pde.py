@@ -71,6 +71,18 @@ class PDEConfig:
     # force the compiled reduce path regardless of size (differential tests
     # drive the oracle grid with this on and off)
     reduce_force_compiled: bool = False
+    # -- whole-stage fusion (DESIGN.md §14) ----------------------------------
+    # below this many rows the fused stage program gains nothing over the
+    # segment-at-a-time path (the partition routes to the numpy oracle
+    # anyway); partitions at/above it fuse map-side work and bucketing into
+    # the stage program when the session allows
+    stage_fusion_min_rows: int = 64
+    # the pipelined map→reduce overlap adds one runnable thread per reduce
+    # split; it can only shorten the critical path when the executor pool
+    # keeps at least this many slots free of map tasks — a saturated pool
+    # means the overlap thread steals time from the maps (GIL + block-store
+    # lock convoy), so the boundary falls back to the sequential pull fetch
+    pipeline_reduce_slack_threads: int = 1
     # -- compressed-domain execution (DESIGN.md §12) -------------------------
     # evaluate range predicates on frame-of-reference codes and run-level
     # predicates/aggregates on RLE runs without widening the column; off
@@ -335,6 +347,63 @@ def decide_reduce_backend(num_rows: int,
             + ("" if on_tpu else " (forced interpret mode)"))
     return SegmentBackendDecision(
         "jit", f"{num_rows} rows -> compiled reduce")
+
+
+def decide_stage_fusion(num_rows: int, mode: str = "on",
+                        backend: str = "compiled", exchange: str = "coded",
+                        cfg: PDEConfig = PDEConfig()
+                        ) -> SegmentBackendDecision:
+    """Whole-stage fusion decision (DESIGN.md §14): should this partition's
+    map-side work run as ONE fused stage program — segment + partial
+    aggregate + radix bucketing with no host seam before the shuffle — or
+    stay on the segment-at-a-time path?
+
+    Routes: "whole-stage" or "segment".  The fused program requires the
+    compiled backend and the dictionary-preserving exchange (the decoded
+    exchange re-materializes strings between the segment and the shuffle,
+    a host seam by definition); `mode="force"` bypasses the row threshold
+    (differential tests drive the oracle grid with it), `mode="off"` is
+    the semantic-oracle escape hatch."""
+    if mode == "off":
+        return SegmentBackendDecision("segment", "stage fusion disabled")
+    if backend != "compiled":
+        return SegmentBackendDecision(
+            "segment", "numpy backend: the interpreted oracle keeps every "
+            "host seam")
+    if exchange != "coded":
+        return SegmentBackendDecision(
+            "segment", "decoded exchange re-materializes strings before "
+            "the shuffle: host seam required")
+    if mode != "force" and num_rows < cfg.stage_fusion_min_rows:
+        return SegmentBackendDecision(
+            "segment", f"{num_rows} rows < {cfg.stage_fusion_min_rows} "
+            "stage-fusion threshold")
+    return SegmentBackendDecision(
+        "whole-stage", f"{num_rows} rows -> fused stage program")
+
+
+def decide_pipelined_reduce(num_map_splits: int, max_threads: int,
+                            mode: str = "on",
+                            cfg: PDEConfig = PDEConfig()
+                            ) -> SegmentBackendDecision:
+    """Should a single-bucket boundary start its reduce DURING the map stage
+    (DESIGN.md §14)?  The overlap is an admission decision: the reduce runs
+    as an extra runnable thread, so it only shortens the critical path when
+    the executor pool has slots the map stage is not using — on a pool the
+    map splits saturate, the thread can only steal time from the maps.
+    Routes: "pipelined" or "pull".  `mode="force"` bypasses the slack check
+    (the §14 chaos/differential tiers drive the overlap machinery
+    deterministically at any scale)."""
+    if mode == "force":
+        return SegmentBackendDecision(
+            "pipelined", "stage fusion forced -> overlapped reduce")
+    slack = max_threads - num_map_splits
+    if slack >= cfg.pipeline_reduce_slack_threads:
+        return SegmentBackendDecision(
+            "pipelined", f"{slack} spare pool threads -> overlapped reduce")
+    return SegmentBackendDecision(
+        "pull", f"{num_map_splits} map splits saturate {max_threads} pool "
+        "threads -> sequential fetch")
 
 
 def likely_small_side(left_hint_bytes: Optional[float],

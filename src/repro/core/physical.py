@@ -26,8 +26,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .aggregate import (CompiledMerge, group_indices, merge_aggregate,
-                        partial_aggregate)
+from .aggregate import (CompiledMerge, combine_colscan_stats, group_indices,
+                        merge_aggregate, partial_aggregate)
 from .batch import PartitionBatch
 from .catalog import Catalog
 from .columnar import Table
@@ -36,18 +36,20 @@ from .expr import (_FLIP_CMP, Between, Cmp, Col, ColumnVal, CompiledExprSet,
                    split_conjuncts)
 from .joins import broadcast_join, compile_probe, join_local
 from .pde import (JoinChoice, PDEConfig, SkewShard, decide_join,
-                  decide_parallelism, decide_reduce_backend,
-                  decide_segment_backend, decide_skew_join,
-                  likely_small_side)
+                  decide_parallelism, decide_pipelined_reduce,
+                  decide_reduce_backend, decide_segment_backend,
+                  decide_skew_join, decide_stage_fusion, likely_small_side)
 from .plan import (AggFunc, AggregateNode, AggSpec, FilterNode, JoinNode,
                    JoinStrategy, LimitNode, Node, PipelineSegment,
                    ProjectNode, ScanNode, SortNode, fold_pipeline, optimize,
                    required_columns)
 from .pruning import may_match
-from .rdd import (RDD, MapPartitionsRDD, ShuffleDependency, ShuffledRDD,
-                  TaskContext, ZipPartitionsRDD)
+from .rdd import (RDD, MapPartitionsRDD, PipelinedShuffledRDD,
+                  ShuffleDependency, ShuffledRDD, TaskContext,
+                  ZipPartitionsRDD)
 from .runtime import SharkContext
-from .shuffle import bucket_by_composite, bucket_by_hash, single_bucket
+from .shuffle import (BucketedBatch, bucket_by_composite, bucket_by_hash,
+                      single_bucket, split_bucket_pieces)
 from .stats import (HeavyHitterAccumulator, SizeAccumulator, StageStats,
                     block_ndv)
 from .types import DType
@@ -118,16 +120,30 @@ class SegmentRecord:
     routes: Dict[str, int] = dataclasses.field(default_factory=dict)
     fallbacks: int = 0              # ExprCompileError -> numpy fallbacks
     kept_code_cols: List[str] = dataclasses.field(default_factory=list)
+    # whole-stage fusion (DESIGN.md §14): partitions whose map side ran as
+    # ONE stage program — segment + partial aggregate + radix bucketing with
+    # no host seam before the shuffle.  Keyed by the inner kernel route
+    # (colscan / groupby_mxu / jit / ...) so kernel-routing assertions keep
+    # holding; every count here is ALSO counted in `routes` above.
+    fused_routes: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def compiled_partitions(self) -> int:
         return sum(n for r, n in self.routes.items() if r != "numpy")
 
+    @property
+    def fused_partitions(self) -> int:
+        return sum(self.fused_routes.values())
+
     def describe(self) -> str:
         routes = ",".join(f"{r}:{n}" for r, n in sorted(self.routes.items()))
+        fused = ""
+        if self.fused_routes:
+            fused = " whole-stage=" + ",".join(
+                f"{r}:{n}" for r, n in sorted(self.fused_routes.items()))
         return (f"segment[{self.table}->{self.consumer} depth={self.depth}] "
                 f"parts={self.partitions} rows={self.rows_in}->"
-                f"{self.rows_out} routes={{{routes}}}")
+                f"{self.rows_out} routes={{{routes}}}{fused}")
 
 
 @dataclasses.dataclass
@@ -137,6 +153,7 @@ class ExecMetrics:
     scanned_partitions: int = 0
     join_decisions: List[str] = dataclasses.field(default_factory=list)
     reducer_decisions: List[str] = dataclasses.field(default_factory=list)
+    pipeline_decisions: List[str] = dataclasses.field(default_factory=list)
     join_boundaries: List[JoinBoundaryDecision] = dataclasses.field(
         default_factory=list)
     shuffled_bytes: float = 0.0
@@ -173,15 +190,25 @@ class ExecMetrics:
         return "\n".join(s.describe() for s in self.segments)
 
     def segment_routes(self) -> Dict[str, int]:
-        """Aggregate partition counts per backend route across segments."""
+        """Aggregate partition counts per backend route across segments.
+        Partitions that ran as a fused stage program additionally appear
+        under the synthetic `whole-stage` key (they keep their inner kernel
+        route in the per-route counts — dual recording, DESIGN.md §14)."""
         out: Dict[str, int] = {}
         for s in self.segments:
             for r, n in s.routes.items():
                 out[r] = out.get(r, 0) + n
+            if s.fused_routes:
+                out["whole-stage"] = (out.get("whole-stage", 0)
+                                      + s.fused_partitions)
         return out
 
     def compiled_partitions(self) -> int:
         return sum(s.compiled_partitions for s in self.segments)
+
+    def fused_partitions(self) -> int:
+        """Partitions whose map stage ran as one traced program."""
+        return sum(s.fused_partitions for s in self.segments)
 
 
 def _on_tpu() -> bool:
@@ -366,7 +393,7 @@ class SegmentRunner:
 
     def _note(self, route: str, rows_in: int, rows_out: int,
               bytes_in: float, fallback: bool = False,
-              kept_codes: Sequence[str] = ()) -> None:
+              kept_codes: Sequence[str] = (), fused: bool = False) -> None:
         rec = self.record
         with self._lock:
             rec.partitions += 1
@@ -375,9 +402,19 @@ class SegmentRunner:
             rec.bytes_in += bytes_in
             rec.routes[route] = rec.routes.get(route, 0) + 1
             rec.fallbacks += int(fallback)
+            if fused:
+                rec.fused_routes[route] = rec.fused_routes.get(route, 0) + 1
             for n in kept_codes:
                 if n not in rec.kept_code_cols:
                     rec.kept_code_cols.append(n)
+
+    def _note_fused(self, route: str) -> None:
+        """Promote the partition most recently noted under `route` to the
+        whole-stage tally — used when the fused wrapper sits OUTSIDE the
+        routed call (exchange bucketing around run())."""
+        rec = self.record
+        with self._lock:
+            rec.fused_routes[route] = rec.fused_routes.get(route, 0) + 1
 
     # -- compiled expression set ----------------------------------------------
 
@@ -409,27 +446,36 @@ class SegmentRunner:
 
     def run(self, batch: PartitionBatch) -> PartitionBatch:
         """Plain narrow segment: filter + project, one fused step."""
+        return self.run_routed(batch)[0]
+
+    def run_routed(self, batch: PartitionBatch,
+                   fused: bool = False) -> Tuple[PartitionBatch, str]:
+        """run() returning (output, route) — the whole-stage wrapper
+        (DESIGN.md §14) needs the route to decide whether the host seam
+        was kept (numpy oracle) or the output may ship pre-bucketed.
+        `fused=True` tallies compiled partitions under fused_routes."""
         rows = batch.num_rows
         nbytes = float(batch.nbytes)
         if self.backend == "numpy":
             out = self._run_numpy(batch)
             self._note("numpy", rows, out.num_rows, nbytes)
-            return out
+            return out, "numpy"
         decision = decide_segment_backend(rows, None, None, _on_tpu(),
                                           self.cfg)
         if decision.route == "numpy":
             out = self._run_numpy(batch)
             self._note("numpy", rows, out.num_rows, nbytes)
-            return out
+            return out, "numpy"
         try:
             out, kept = self._run_jit(batch)
-            self._note("jit", rows, out.num_rows, nbytes, kept_codes=kept)
-            return out
+            self._note("jit", rows, out.num_rows, nbytes, kept_codes=kept,
+                       fused=fused)
+            return out, "jit"
         except ExprCompileError:
             self._exprset_failed = True
             out = self._run_numpy(batch)
             self._note("numpy", rows, out.num_rows, nbytes, fallback=True)
-            return out
+            return out, "numpy"
 
     def _run_numpy(self, batch: PartitionBatch) -> PartitionBatch:
         """The evaluate()-based oracle — operator semantics identical to the
@@ -589,12 +635,25 @@ class SegmentRunner:
         """Fused map side of an aggregation: segment + partial aggregate in
         one step, lowered to a Pallas kernel when the shape and the
         partition statistics allow."""
+        return self._aggregate_routed(batch, group_cols, aggs)[0]
+
+    def _aggregate_routed(self, batch: PartitionBatch,
+                          group_cols: Sequence[str],
+                          aggs: Sequence[AggSpec], fused: bool = False,
+                          force_compiled: bool = False
+                          ) -> Tuple[PartitionBatch, str]:
+        """run_aggregate() returning (partial states, route) — the
+        whole-stage wrapper (DESIGN.md §14) consumes the route to decide
+        whether the output ships pre-bucketed.  `force_compiled` upgrades a
+        small-partition numpy decision to the jit route (the differential
+        grid forces fusion on tiny seeds); empty partitions stay numpy —
+        jnp.min/max of a zero-length array is undefined."""
         rows = batch.num_rows
         nbytes = float(batch.nbytes)
         if self.backend == "numpy":
             out = partial_aggregate(self._run_numpy(batch), group_cols, aggs)
             self._note("numpy", rows, out.num_rows, nbytes)
-            return out
+            return out, "numpy"
         shape = self._agg_kernel_shape(group_cols, aggs)
         ndv = None
         if shape is not None and shape[0] == "groupby_mxu":
@@ -606,6 +665,8 @@ class SegmentRunner:
             rows, shape[0] if shape is not None else None, ndv, _on_tpu(),
             self.cfg)
         route = decision.route
+        if route == "numpy" and force_compiled and rows > 0:
+            route = "jit"
         try:
             if route == "colscan":
                 out, route = self._run_colscan(batch, shape, aggs,
@@ -635,9 +696,10 @@ class SegmentRunner:
             self._exprset_failed = True
             out = partial_aggregate(self._run_numpy(batch), group_cols, aggs)
             self._note("numpy", rows, out.num_rows, nbytes, fallback=True)
-            return out
-        self._note(route, rows, out.num_rows, nbytes)
-        return out
+            return out, "numpy"
+        self._note(route, rows, out.num_rows, nbytes,
+                   fused=fused and route != "numpy")
+        return out, route
 
     def _acc_dtype(self) -> str:
         # float32 is the TPU-native accumulator; CPU interpret mode matches
@@ -669,12 +731,16 @@ class SegmentRunner:
                 codes, d = fv.block.code_space()
                 # decode fused into the scan: the filter column is read as
                 # codes, its dictionary gathered inside the kernel
-                res = kernel_ops.fused_decode_scan(
-                    codes, d, vals, lo, hi, acc_dtype=self._acc_dtype())
+                res = self._pallas_colscan_chunked(
+                    lambda c, v: kernel_ops.fused_decode_scan(
+                        c, d, v, lo, hi, acc_dtype=self._acc_dtype()),
+                    np.asarray(codes), vals)
                 route = "fused_decode_scan"
             elif pallas:
-                res = kernel_ops.colscan(np.asarray(fv.arr), vals, lo, hi,
-                                         acc_dtype=self._acc_dtype())
+                res = self._pallas_colscan_chunked(
+                    lambda f, v: kernel_ops.colscan(
+                        f, v, lo, hi, acc_dtype=self._acc_dtype()),
+                    np.asarray(fv.arr), vals)
                 route = "colscan"
             elif coded:
                 # value bounds translate to CODE bounds host-side (sorted
@@ -733,6 +799,25 @@ class SegmentRunner:
                           float(res[3]))
         int_sum = np.issubdtype(np.asarray(vals).dtype, np.integer)
         return self._colscan_result(aggs, cnt, s, mn, mx, int_sum), route
+
+    def _pallas_colscan_chunked(self, fn, fcol: np.ndarray, vals: np.ndarray):
+        """Double-buffered Pallas colscan (DESIGN.md §14): large partitions
+        split into DOUBLE_BUFFER chunks, each chunk's dispatch overlapping
+        the previous chunk's compute (JAX async dispatch), with the per-
+        chunk [count, sum, min, max] states combined in the same float64
+        rounding class as one pass.  Small partitions take one call."""
+        from ..kernels import ops as kernel_ops
+        chunk = kernel_ops.DOUBLE_BUFFER["chunk_rows"]
+        n = len(fcol)
+        if n < 2 * chunk:
+            return fn(fcol, vals)
+        states = kernel_ops.double_buffer_map(
+            lambda fv_pair: fn(fv_pair[0], fv_pair[1]),
+            [(fcol[i:i + chunk], vals[i:i + chunk])
+             for i in range(0, n, chunk)])
+        cnt, s, mn, mx = combine_colscan_stats(
+            [np.asarray(st) for st in states])
+        return np.array([cnt, s, mn, mx], np.float64)
 
     def _run_rle_scan(self, batch: PartitionBatch, fcol: str, lo, hi,
                       vcol: str, aggs) -> Tuple[PartitionBatch, str]:
@@ -1060,6 +1145,10 @@ class Compiled:
     table: Optional[Table] = None            # set when rdd is a bare scan
     scan_filtered: bool = False              # a filter applies at/below scan
     size_hint: Optional[float] = None        # bytes prior (for join ordering)
+    # the SegmentRunner producing this RDD's partitions, when the RDD is a
+    # segment map — join boundaries use it to tally fused exchanges under
+    # the whole-stage route (DESIGN.md §14)
+    runner: Optional["SegmentRunner"] = None
 
 
 class ScanCache:
@@ -1107,9 +1196,10 @@ class Executor:
                  default_shuffle_buckets: int = 64,
                  scan_cache: Optional[ScanCache] = None,
                  backend: str = "compiled", exchange: str = "coded",
-                 mesh=None):
+                 mesh=None, stage_fusion: str = "on"):
         assert backend in ("compiled", "numpy"), backend
         assert exchange in ("coded", "decoded"), exchange
+        assert stage_fusion in ("on", "off", "force"), stage_fusion
         self.ctx = ctx
         self.catalog = catalog
         # cluster.MeshContext (DESIGN.md §13.1): when set, eligible
@@ -1131,6 +1221,17 @@ class Executor:
         # exchange that materializes raw strings before hashing, kept as
         # the semantic oracle for differential tests and shuffle_bench
         self.exchange = exchange
+        # whole-stage fusion (DESIGN.md §14): "on" fuses eligible map
+        # stages into one traced program ending in pre-bucketed shuffle
+        # output; "force" bypasses the PDE row threshold (test grids);
+        # "off" is the segment-at-a-time semantic oracle.  Fusion requires
+        # the compiled backend and the dictionary-preserving exchange —
+        # the decoded exchange's string re-materialization IS a host seam,
+        # and the numpy oracle must keep every seam — so it self-disables
+        # otherwise.
+        self._fusion_mode = (stage_fusion
+                             if backend == "compiled" and exchange == "coded"
+                             else "off")
         # map-side radix bucketing through the Pallas kernel (TPU/forced);
         # fixed per executor so every map task of a shuffle agrees
         self._radix_kernel = (backend == "compiled"
@@ -1267,7 +1368,7 @@ class Executor:
         scanc, runner = self._make_runner(seg, consumer)
         rdd = scanc.rdd.map_partitions(lambda s, b: runner.run(b))
         return Compiled(rdd, seg.output_names(self.catalog), None,
-                        seg.pred is not None, scanc.size_hint)
+                        seg.pred is not None, scanc.size_hint, runner=runner)
 
     # -- interpreted operators (only ever above shuffle boundaries now) -------
 
@@ -1341,6 +1442,7 @@ class Executor:
         names = group_cols + [a.out_name for a in aggs]
 
         seg = fold_pipeline(node.child)
+        partitioner = None
         if seg is not None:
             # fused map side: scan→filter→project→partial-aggregate is ONE
             # function per partition, kernel-lowered when the shape allows
@@ -1357,6 +1459,19 @@ class Executor:
             if mesh_partials is not None:
                 map_rdd = self._prep_exchange(
                     self.ctx.parallelize(mesh_partials))
+            elif self._fusion_mode != "off":
+                # whole-stage (DESIGN.md §14): the bucket layout is fixed
+                # BEFORE the map fn exists because radix bucketing runs
+                # inside the stage program — one traced call per partition
+                # from scan to pre-bucketed shuffle pieces
+                num_buckets, partitioner = self._bucket_layout(
+                    group_cols, src.num_partitions)
+                from .stage import StageRunner
+                stage = StageRunner(runner, partitioner, num_buckets,
+                                    self._fusion_mode, self.pde)
+                map_rdd = src.map_partitions(
+                    lambda s, b: stage.run_aggregate_stage(b, group_cols,
+                                                           aggs))
             else:
                 map_rdd = self._prep_exchange(src.map_partitions(
                     lambda s, b: runner.run_aggregate(b, group_cols, aggs)))
@@ -1369,19 +1484,23 @@ class Executor:
 
             map_rdd = self._prep_exchange(child.rdd.map_partitions(map_side))
 
-        if not group_cols:
-            partitioner = single_bucket()
-            num_buckets = 1
-        else:
-            num_buckets = max(self.default_shuffle_buckets,
-                              map_rdd.num_partitions)
-            partitioner = bucket_by_composite(group_cols, num_buckets,
-                                              kernel=self._radix_kernel)
+        if partitioner is None:
+            num_buckets, partitioner = self._bucket_layout(
+                group_cols, map_rdd.num_partitions)
 
         dep = self._new_shuffle(
             map_rdd, num_buckets, partitioner,
             accumulators=lambda: [SizeAccumulator(num_buckets)] + (
                 [HeavyHitterAccumulator(group_cols[0])] if group_cols else []))
+
+        if (not group_cols and self._fusion_mode != "off"
+                and self._pipeline_gate(dep)):
+            # single-bucket boundary: no PDE re-planning consumes the map
+            # stats, so the reduce can start as soon as pieces land —
+            # pipelined map→reduce overlap (DESIGN.md §14)
+            rrunner = self._reduce_runner("merge_aggregate", names)
+            reduce_fn = lambda split, b: rrunner.merge(b, group_cols, aggs)
+            return self._pipelined_single_reduce(dep, names, reduce_fn)
 
         stats = self.ctx.scheduler.run_map_stage(dep)
         self.metrics.shuffled_bytes += stats.total_output_bytes()
@@ -1396,6 +1515,43 @@ class Executor:
         rrunner = self._reduce_runner("merge_aggregate", names)
         reduce_fn = lambda split, b: rrunner.merge(b, group_cols, aggs)
         rdd = ShuffledRDD(dep, groups, reduce_fn)
+        return Compiled(rdd, names)
+
+    def _bucket_layout(self, group_cols: Sequence[str], num_maps: int):
+        """(num_buckets, partitioner) for an aggregation boundary — split
+        out so the fused path can fix the layout before building map fns;
+        byte-identical to the legacy inline computation."""
+        if not group_cols:
+            return 1, single_bucket()
+        num_buckets = max(self.default_shuffle_buckets, num_maps)
+        return num_buckets, bucket_by_composite(list(group_cols), num_buckets,
+                                                kernel=self._radix_kernel)
+
+    def _pipeline_gate(self, dep: ShuffleDependency) -> bool:
+        """Admission check for the map→reduce overlap (DESIGN.md §14): the
+        boundary pipelines only when the executor pool has slots free of
+        map tasks; otherwise it takes the sequential pull fetch over the
+        SAME shuffle blocks (the fused map side is unaffected)."""
+        d = decide_pipelined_reduce(dep.parent.num_partitions,
+                                    self.ctx.scheduler.max_threads,
+                                    self._fusion_mode, self.pde)
+        self.metrics.pipeline_decisions.append(d.reason)
+        return d.route == "pipelined"
+
+    def _pipelined_single_reduce(self, dep: ShuffleDependency,
+                                 names: List[str], reduce_fn) -> Compiled:
+        """Run a single-bucket boundary with the pipelined scheduler: the
+        reduce thread consumes map pieces as they land, and the result RDD
+        serves the precomputed batch (falling back to the ordinary fetch
+        path if the pipelined attempt lost a race with a failure)."""
+        groups = [[0]]
+        pipe_fn = (lambda split, pieces:
+                   reduce_fn(split, PartitionBatch.concat(pieces)))
+        stats, pre = self.ctx.scheduler.run_map_stage_pipelined(
+            dep, groups, pipe_fn)
+        self.metrics.shuffled_bytes += stats.total_output_bytes()
+        rdd = PipelinedShuffledRDD(dep, groups, reduce_fn)
+        rdd.offer_precomputed(pre)
         return Compiled(rdd, names)
 
     # -- mesh-sharded map side (cluster tier, DESIGN.md §13.1) ----------------
@@ -1517,6 +1673,35 @@ class Executor:
         self.metrics.join_boundaries.append(dec)
         return dec
 
+    def _fused_exchange(self, side: Compiled, partitioner,
+                        num_buckets: int) -> RDD:
+        """Map-side exchange for one join input.  When the side is a
+        compiled segment map and whole-stage fusion is on, bucket
+        assignment + per-bucket slicing chain into the segment's map task
+        (MapPartitionsRDD composes in-task): the task ships a BucketedBatch
+        of finished pieces, skipping the scheduler's host-assembly copy
+        (DESIGN.md §14).  `partitioner` MUST be the same closure the
+        ShuffleDependency carries, so fused and seam-by-seam pieces are
+        byte-identical.  Falls back to the legacy prep for interpreted /
+        non-segment sides and small partitions."""
+        if self._fusion_mode == "off" or side.runner is None:
+            return self._prep_exchange(side.rdd)
+        runner = side.runner
+        mode = self._fusion_mode
+        cfg = self.pde
+
+        def bucketize(split: int, batch: PartitionBatch):
+            d = decide_stage_fusion(batch.num_rows, mode, runner.backend,
+                                    "coded", cfg)
+            if d.route != "whole-stage":
+                return batch
+            bucket_of = partitioner(batch)
+            pieces = split_bucket_pieces(batch, bucket_of, num_buckets)
+            runner._note_fused("exchange")
+            return BucketedBatch(pieces)
+
+        return side.rdd.map_partitions(bucketize)
+
     def _compile_join(self, node: JoinNode) -> Compiled:
         """One join boundary.  Because _compile recurses left-then-right and
         every boundary runs its map stage(s) eagerly, an N-way join is
@@ -1598,9 +1783,9 @@ class Executor:
         a, b = (left, right) if first == "left" else (right, left)
         akey, bkey = (lkey, rkey) if first == "left" else (rkey, lkey)
 
+        apart = bucket_by_hash(akey, num_buckets, kernel=self._radix_kernel)
         adep = self._new_shuffle(
-            self._prep_exchange(a.rdd), num_buckets,
-            bucket_by_hash(akey, num_buckets, kernel=self._radix_kernel),
+            self._fused_exchange(a, apart, num_buckets), num_buckets, apart,
             accumulators=lambda: [SizeAccumulator(num_buckets),
                                   HeavyHitterAccumulator(akey)])
         astats = self.ctx.scheduler.run_map_stage(adep)
@@ -1640,9 +1825,9 @@ class Executor:
             f"PDE shuffle-join: first side observed {decision.left_bytes:.0f}B "
             f"> threshold; shuffling both")
         self.metrics.shuffled_bytes += astats.total_output_bytes()
+        bpart = bucket_by_hash(bkey, num_buckets, kernel=self._radix_kernel)
         bdep = self._new_shuffle(
-            self._prep_exchange(b.rdd), num_buckets,
-            bucket_by_hash(bkey, num_buckets, kernel=self._radix_kernel),
+            self._fused_exchange(b, bpart, num_buckets), num_buckets, bpart,
             accumulators=lambda: [SizeAccumulator(num_buckets),
                                   HeavyHitterAccumulator(bkey)])
         bstats = self.ctx.scheduler.run_map_stage(bdep)
@@ -1701,14 +1886,14 @@ class Executor:
         num_buckets = max(self.default_shuffle_buckets,
                           left.rdd.num_partitions, right.rdd.num_partitions)
         self.metrics.join_decisions.append(note)
+        lpart = bucket_by_hash(lkey, num_buckets, kernel=self._radix_kernel)
         ldep = self._new_shuffle(
-            self._prep_exchange(left.rdd), num_buckets,
-            bucket_by_hash(lkey, num_buckets, kernel=self._radix_kernel),
-            accumulators=lambda: [SizeAccumulator(num_buckets)])
+            self._fused_exchange(left, lpart, num_buckets), num_buckets,
+            lpart, accumulators=lambda: [SizeAccumulator(num_buckets)])
+        rpart = bucket_by_hash(rkey, num_buckets, kernel=self._radix_kernel)
         rdep = self._new_shuffle(
-            self._prep_exchange(right.rdd), num_buckets,
-            bucket_by_hash(rkey, num_buckets, kernel=self._radix_kernel),
-            accumulators=lambda: [SizeAccumulator(num_buckets)])
+            self._fused_exchange(right, rpart, num_buckets), num_buckets,
+            rpart, accumulators=lambda: [SizeAccumulator(num_buckets)])
         ls = self.ctx.scheduler.run_map_stage(ldep)
         rs = self.ctx.scheduler.run_map_stage(rdep)
         self.metrics.shuffled_bytes += (ls.total_output_bytes()
@@ -1731,14 +1916,25 @@ class Executor:
             src = self._segment_source_rdd(scanc, seg, ensure_nonempty=True)
             names = seg.output_names(self.catalog)
 
-            def seg_sort(split: int, batch: PartitionBatch) -> PartitionBatch:
-                b = runner.run(batch)
-                idx = _sort_indices(b, keys)
-                if limit is not None:
-                    idx = idx[:limit]
-                return b.take(idx)
+            if self._fusion_mode != "off":
+                # whole-stage (DESIGN.md §14): the sorted prefix ships as
+                # one zero-copy piece straight into the shuffle block
+                from .stage import StageRunner
+                stage = StageRunner(runner, single_bucket(), 1,
+                                    self._fusion_mode, self.pde)
+                map_rdd = src.map_partitions(
+                    lambda s, b: stage.run_sort_stage(b, keys, limit))
+            else:
+                def seg_sort(split: int,
+                             batch: PartitionBatch) -> PartitionBatch:
+                    b = runner.run(batch)
+                    idx = _sort_indices(b, keys)
+                    if limit is not None:
+                        idx = idx[:limit]
+                    return b.take(idx)
 
-            map_rdd = self._prep_exchange(src.map_partitions(seg_sort))
+                map_rdd = self._prep_exchange(
+                    src.map_partitions(seg_sort))
             child = Compiled(map_rdd, names)
         else:
             child = self._materialize_empty(self._compile(node.child),
@@ -1755,7 +1951,6 @@ class Executor:
                 child.rdd.map_partitions(local_sort))
         dep = self._new_shuffle(map_rdd, 1, single_bucket(),
                                 accumulators=lambda: [SizeAccumulator(1)])
-        self.ctx.scheduler.run_map_stage(dep)
 
         def final(split: int, batch: PartitionBatch) -> PartitionBatch:
             idx = _sort_indices(batch, keys)
@@ -1763,6 +1958,16 @@ class Executor:
                 idx = idx[:limit]
             return batch.take(idx)
 
+        if self._fusion_mode != "off" and self._pipeline_gate(dep):
+            pipe_fn = (lambda split, pieces:
+                       final(split, PartitionBatch.concat(pieces)))
+            _stats, pre = self.ctx.scheduler.run_map_stage_pipelined(
+                dep, [[0]], pipe_fn)
+            rdd = PipelinedShuffledRDD(dep, [[0]], final)
+            rdd.offer_precomputed(pre)
+            return Compiled(rdd, child.names)
+
+        self.ctx.scheduler.run_map_stage(dep)
         rdd = ShuffledRDD(dep, [[0]], final)
         return Compiled(rdd, child.names)
 
@@ -1775,20 +1980,42 @@ class Executor:
             # fused pushed-down limit: segment + head(n) in one step
             scanc, runner = self._make_runner(seg, "limit")
             src = self._segment_source_rdd(scanc, seg, ensure_nonempty=True)
-            head_rdd = src.map_partitions(lambda s, b: runner.run(b).head(n))
+            if self._fusion_mode != "off":
+                # whole-stage (DESIGN.md §14): surviving columns ship
+                # encoded straight into the shuffle block as one zero-copy
+                # piece — the pass-through host-assembly seam fix
+                from .stage import StageRunner
+                stage = StageRunner(runner, single_bucket(), 1,
+                                    self._fusion_mode, self.pde)
+                head_rdd = src.map_partitions(
+                    lambda s, b: stage.run_limit_stage(b, n))
+            else:
+                head_rdd = src.map_partitions(
+                    lambda s, b: runner.run(b).head(n))
             child = Compiled(head_rdd, seg.output_names(self.catalog))
+            prepped = (head_rdd if self._fusion_mode != "off"
+                       else self._prep_exchange(head_rdd))
         else:
             child = self._materialize_empty(self._compile(node.child),
                                             node.child)
 
             # §2.4: LIMIT pushed to partitions, final limit at collect
             head_rdd = child.rdd.map_partitions(lambda s, b: b.head(n))
+            prepped = self._prep_exchange(head_rdd)
 
         # wrap as a one-partition RDD via shuffle to a single bucket
-        dep = self._new_shuffle(self._prep_exchange(head_rdd), 1,
-                                single_bucket())
+        dep = self._new_shuffle(prepped, 1, single_bucket())
+        final = lambda s, b: b.head(n)
+        if self._fusion_mode != "off" and self._pipeline_gate(dep):
+            pipe_fn = (lambda split, pieces:
+                       final(split, PartitionBatch.concat(pieces)))
+            _stats, pre = self.ctx.scheduler.run_map_stage_pipelined(
+                dep, [[0]], pipe_fn)
+            rdd = PipelinedShuffledRDD(dep, [[0]], final)
+            rdd.offer_precomputed(pre)
+            return Compiled(rdd, child.names)
         self.ctx.scheduler.run_map_stage(dep)
-        rdd = ShuffledRDD(dep, [[0]], lambda s, b: b.head(n))
+        rdd = ShuffledRDD(dep, [[0]], final)
         return Compiled(rdd, child.names)
 
 

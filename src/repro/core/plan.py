@@ -635,6 +635,58 @@ def fold_pipeline(node: Node) -> Optional[PipelineSegment]:
     return None
 
 
+# ---------------------------------------------------------------------------
+# Whole-stage programs (DESIGN.md §14).  One step past PipelineSegment: the
+# entire MAP STAGE of a blocking operator — the narrow segment chained into
+# its consumer's map-side work (partial aggregation, per-partition top-k, or
+# the pushed-down limit) and into the exchange's radix bucketing — described
+# as one unit so the executor can run it as ONE traced program per partition
+# with no host seam before the shuffle.  Still physical-layer only: the
+# logical plan, explain() and plan fingerprints never see stage folding.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StageProgram:
+    """One whole map stage: a PipelineSegment plus the blocking consumer
+    whose map-side work fuses behind it."""
+    segment: PipelineSegment
+    consumer: str                               # aggregate | sort | limit
+    group_cols: List[str] = dataclasses.field(default_factory=list)
+    aggs: List["AggSpec"] = dataclasses.field(default_factory=list)
+    sort_keys: List[Tuple[str, bool]] = dataclasses.field(
+        default_factory=list)
+    limit: Optional[int] = None
+
+
+def fold_stage(node: Node) -> Optional[StageProgram]:
+    """Fold a blocking operator over a narrow chain into a StageProgram, or
+    None when the operator's input is not a foldable scan chain (joins and
+    other wide inputs keep the segment-at-a-time path)."""
+    if isinstance(node, AggregateNode):
+        seg = fold_pipeline(node.child)
+        if seg is None:
+            return None
+        return StageProgram(seg, "aggregate", list(node.group_by),
+                            list(node.aggs))
+    if isinstance(node, SortNode):
+        seg = fold_pipeline(node.child)
+        if seg is None:
+            return None
+        return StageProgram(seg, "sort", sort_keys=list(node.keys))
+    if isinstance(node, LimitNode):
+        if isinstance(node.child, SortNode):
+            prog = fold_stage(node.child)
+            if prog is None:
+                return None
+            return dataclasses.replace(prog, limit=node.n)
+        seg = fold_pipeline(node.child)
+        if seg is None:
+            return None
+        return StageProgram(seg, "limit", limit=node.n)
+    return None
+
+
 def explain(node: Node, indent: int = 0) -> str:
     pad = "  " * indent
     lines = [pad + repr(node)]

@@ -242,6 +242,38 @@ class ShuffledRDD(RDD):
         return merged
 
 
+class PipelinedShuffledRDD(ShuffledRDD):
+    """ShuffledRDD whose splits may already have been computed by the
+    pipelined scheduler (DESIGN.md §14): `Scheduler.run_map_stage_pipelined`
+    ran the reduce concurrently with the map stage and deposits the results
+    here via `offer_precomputed`.  `compute` consumes each precomputed
+    result exactly once — speculative re-runs and lineage recomputes of the
+    same split fall through to the ordinary fetch-from-blocks path, which
+    yields an identical batch because reduce tasks are deterministic."""
+
+    def __init__(self, dep: ShuffleDependency,
+                 bucket_groups: Optional[List[List[int]]] = None,
+                 reduce_fn: Optional[Callable[[int, PartitionBatch],
+                                              PartitionBatch]] = None):
+        super().__init__(dep, bucket_groups, reduce_fn)
+        self._precomputed: Dict[int, PartitionBatch] = {}
+        self._pre_lock = threading.Lock()
+        self.pipelined_hits = 0
+
+    def offer_precomputed(self, results: Dict[int, PartitionBatch]) -> None:
+        with self._pre_lock:
+            self._precomputed.update(results)
+
+    def compute(self, split: int, tc: TaskContext) -> PartitionBatch:
+        with self._pre_lock:
+            hit = self._precomputed.pop(split, None)
+            if hit is not None:
+                self.pipelined_hits += 1
+        if hit is not None:
+            return hit
+        return super().compute(split, tc)
+
+
 class UnionRDD(RDD):
     def __init__(self, parents: List[RDD]):
         self.offsets = []

@@ -64,6 +64,9 @@ class BlockManager:
 
     def __init__(self):
         self.lock = threading.RLock()
+        # pipelined reduces block on this until their input pieces land
+        # (put_shuffle notifies; DESIGN.md §14)
+        self.shuffle_cond = threading.Condition(self.lock)
         # ("part", rdd_id, split) -> (worker, batch)
         # ("shuf", shuffle_id, map_split, bucket) -> (worker, batch)
         self.blocks: Dict[Tuple, Tuple[int, PartitionBatch]] = {}
@@ -183,9 +186,32 @@ class BlockManager:
             # drop_shuffle between them would let this block leak forever
             self._put_locked(("shuf", shuffle_id, map_split, bucket),
                              worker, batch)
+            self.shuffle_cond.notify_all()
             mm = self.memory_manager
         if mm is not None:
             mm.on_put(("shuf", shuffle_id, map_split, bucket))
+
+    def wait_shuffle(self, shuffle_id: int, maps: Sequence[int],
+                     buckets: Sequence[int], timeout: float = 30.0,
+                     cancel: Optional[threading.Event] = None) -> bool:
+        """Block until every (map, bucket) piece in `maps`×`buckets` is
+        present (in memory or spilled); True on success, False on
+        cancel/timeout.  Availability is checked BEFORE cancellation so a
+        waiter racing the map stage's completion signal still wins when
+        its pieces already landed."""
+        deadline = time.monotonic() + timeout
+        with self.lock:
+            while True:
+                if all(("shuf", shuffle_id, m, b) in self.blocks
+                       or ("shuf", shuffle_id, m, b) in self.spilled_shuffle
+                       for m in maps for b in buckets):
+                    return True
+                if cancel is not None and cancel.is_set():
+                    return False
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self.shuffle_cond.wait(min(remaining, 0.05))
 
     def has_map_output(self, shuffle_id: int, map_split: int) -> bool:
         with self.lock:
@@ -310,6 +336,7 @@ class Scheduler:
         self.ctx = ctx
         self.num_workers = num_workers
         self.alive: Set[int] = set(range(num_workers))
+        self.max_threads = max_threads
         self.pool = ThreadPoolExecutor(max_workers=max_threads)
         self.speculation = speculation
         self.speculation_multiplier = speculation_multiplier
@@ -323,6 +350,20 @@ class Scheduler:
         self.tasks_speculated = 0
         self.tasks_recomputed = 0
         self.stage_stats: Dict[int, StageStats] = {}
+        # pipelined-scheduling event log (DESIGN.md §14): monotonically
+        # sequenced (seq, kind, shuffle_id, detail) tuples — the test
+        # probe that reduce tasks observably start before the map stage
+        # drains.  Bounded: trimmed from the front when it grows large.
+        self.stage_events: List[Tuple[int, str, int, Any]] = []
+        self._event_seq = itertools.count()
+
+    def _log_event(self, kind: str, shuffle_id: int, detail: Any = None
+                   ) -> None:
+        with self.lock:
+            self.stage_events.append(
+                (next(self._event_seq), kind, shuffle_id, detail))
+            if len(self.stage_events) > 4096:
+                del self.stage_events[:2048]
 
     # -- cluster membership --------------------------------------------------
 
@@ -491,6 +532,25 @@ class Scheduler:
                 return
         raise ff
 
+    def _map_output_pieces(self, dep: ShuffleDependency,
+                           batch) -> List[PartitionBatch]:
+        """Per-bucket pieces of one map task's output.  A fused stage
+        program (DESIGN.md §14) hands back a BucketedBatch — already
+        partitioned and combined inside the task's single traced program —
+        whose pieces ship as-is; otherwise the scheduler applies the legacy
+        partition→slice→combine seam.  Shared by the map attempt AND
+        lineage recovery, so recomputation climbs through fused stages and
+        re-derives byte-identical blocks (tasks are deterministic)."""
+        from .shuffle import BucketedBatch
+        if isinstance(batch, BucketedBatch):
+            return batch.pieces
+        from .shuffle import split_bucket_pieces
+        bucket_of = dep.partitioner(batch)
+        pieces = split_bucket_pieces(batch, bucket_of, dep.num_buckets)
+        if dep.map_side_combine is not None:
+            pieces = [dep.map_side_combine(p) for p in pieces]
+        return pieces
+
     def _run_map_stage_attempt(self, dep: ShuffleDependency) -> StageStats:
         stage_id = next(_stage_counter)
         parent = dep.parent
@@ -499,21 +559,14 @@ class Scheduler:
 
         def run_one(split: int, tc: TaskContext):
             batch = parent.iterator(split, tc)
-            bucket_of = dep.partitioner(batch)
             accs = dep.accumulators()
-            order = np.argsort(bucket_of, kind="stable")
-            sorted_buckets = np.asarray(bucket_of)[order]
-            bounds = np.searchsorted(sorted_buckets,
-                                     np.arange(dep.num_buckets + 1))
-            for b in range(dep.num_buckets):
-                sel = order[bounds[b]: bounds[b + 1]]
-                piece = batch.take(sel)
-                if dep.map_side_combine is not None:
-                    piece = dep.map_side_combine(piece)
+            pieces = self._map_output_pieces(dep, batch)
+            for b, piece in enumerate(pieces):
                 for acc in accs:
                     acc.update(b, piece)
                 self.ctx.block_manager.put_shuffle(
                     dep.shuffle_id, split, b, piece, tc.worker_id)
+            self._log_event("map-done", dep.shuffle_id, split)
             ts = TaskStats(split, stage_id,
                            {a.name: a.payload() for a in accs})
             with stats_lock:
@@ -533,16 +586,7 @@ class Scheduler:
 
         def run_one(split: int, tc: TaskContext):
             batch = parent.iterator(split, tc)
-            bucket_of = dep.partitioner(batch)
-            order = np.argsort(bucket_of, kind="stable")
-            sorted_buckets = np.asarray(bucket_of)[order]
-            bounds = np.searchsorted(sorted_buckets,
-                                     np.arange(dep.num_buckets + 1))
-            for b in range(dep.num_buckets):
-                sel = order[bounds[b]: bounds[b + 1]]
-                piece = batch.take(sel)
-                if dep.map_side_combine is not None:
-                    piece = dep.map_side_combine(piece)
+            for b, piece in enumerate(self._map_output_pieces(dep, batch)):
                 self.ctx.block_manager.put_shuffle(
                     dep.shuffle_id, split, b, piece, tc.worker_id)
             return True
@@ -550,6 +594,71 @@ class Scheduler:
         with self.lock:
             self.tasks_recomputed += len(missing)
         self._run_tasks(stage_id, missing, run_one)
+
+    # -- pipelined map→reduce overlap (DESIGN.md §14) -------------------------
+
+    def run_map_stage_pipelined(self, dep: ShuffleDependency,
+                                groups: Sequence[Sequence[int]],
+                                reduce_fn: Callable[[int, List[PartitionBatch]],
+                                                    Any]
+                                ) -> Tuple[StageStats, Dict[int, Any]]:
+        """Run the map stage while reduce tasks start as soon as their input
+        pieces land, overlapping shuffle fetch with upstream compute.
+
+        `groups[r]` lists the buckets reduce split `r` consumes;
+        `reduce_fn(split, pieces)` must be deterministic — pieces arrive in
+        the same (map, bucket) order `fetch_shuffle` would return.  Returns
+        (stats, precomputed): reduce splits whose pipelined attempt failed
+        (worker death mid-stage, fetch races) are simply absent from
+        `precomputed` and recompute on the standard pull path — the
+        pipeline is an overlap optimization, never a correctness
+        dependency.  The map stage itself runs via `self.run_map_stage`
+        so chaos-test interceptions (and lineage retries) apply
+        unchanged."""
+        done = threading.Event()
+        results: Dict[int, Any] = {}
+        rlock = threading.Lock()
+        threads = [
+            threading.Thread(
+                target=self._pipelined_reduce,
+                args=(dep, r, list(buckets), reduce_fn, done, results, rlock),
+                daemon=True)
+            for r, buckets in enumerate(groups)]
+        for t in threads:
+            t.start()
+        try:
+            stats = self.run_map_stage(dep)
+        finally:
+            done.set()
+        for t in threads:
+            t.join(timeout=10.0)
+        return stats, dict(results)
+
+    def _pipelined_reduce(self, dep: ShuffleDependency, split: int,
+                          buckets: List[int], reduce_fn, cancel, results,
+                          rlock) -> None:
+        num_maps = dep.parent.num_partitions
+        bm = self.ctx.block_manager
+        pieces: List[PartitionBatch] = []
+        try:
+            # In-order per-map waiting keeps piece order identical to the
+            # pull path's fetch_shuffle and makes the event log
+            # deterministic under a straggler on a later map split.
+            for m in range(num_maps):
+                if not bm.wait_shuffle(dep.shuffle_id, [m], buckets,
+                                       cancel=cancel):
+                    return
+                pieces.extend(bm.fetch_shuffle(
+                    dep.shuffle_id, num_maps, buckets, maps=[m]))
+                if m == 0:
+                    self._log_event("reduce-fetch", dep.shuffle_id, split)
+            self._log_event("reduce-start", dep.shuffle_id, split)
+            out = reduce_fn(split, pieces)
+        except Exception:
+            return  # fall back to the pull path (deterministic parity)
+        with rlock:
+            results[split] = out
+        self._log_event("reduce-done", dep.shuffle_id, split)
 
     # -- result stages --------------------------------------------------------
 

@@ -58,7 +58,8 @@ class SharkSession:
                  task_launch_overhead_s: float = 0.0,
                  server=None, client_id: Optional[str] = None,
                  weight: float = 1.0, backend: str = "compiled",
-                 exchange: str = "coded", mesh=None):
+                 exchange: str = "coded", mesh=None,
+                 stage_fusion: str = "on"):
         self.server = server
         if server is not None:
             # attached mode: share the server's runtime + catalog; queries
@@ -81,7 +82,8 @@ class SharkSession:
             self.ctx, self.catalog, pde_config or PDEConfig(),
             enable_pde=enable_pde, enable_map_pruning=enable_map_pruning,
             default_shuffle_buckets=default_shuffle_buckets,
-            backend=backend, exchange=exchange, mesh=mesh)
+            backend=backend, exchange=exchange, mesh=mesh,
+            stage_fusion=stage_fusion)
 
     # -- data loading ---------------------------------------------------------
 

@@ -74,6 +74,17 @@ def _kernel_buckets(k: np.ndarray, num_buckets: int) -> np.ndarray:
     from ..kernels import ops as kernel_ops
     from ..kernels.radix_partition import fold_keys_u32
     RADIX_KERNEL_CALLS["count"] += 1
+    chunk = kernel_ops.DOUBLE_BUFFER["chunk_rows"]
+    if len(k) >= 2 * chunk:
+        # Double-buffered: fold+dispatch of chunk i+1 overlaps compute of
+        # chunk i (DESIGN.md §14).  Bucket id is per-row, so chunked and
+        # single-shot results are bit-identical.
+        parts = kernel_ops.double_buffer_map(
+            lambda c: kernel_ops.radix_partition(
+                fold_keys_u32(c), num_buckets=num_buckets,
+                with_counts=False)[0],
+            [k[i:i + chunk] for i in range(0, len(k), chunk)])
+        return np.concatenate([np.asarray(p) for p in parts])
     buckets, _ = kernel_ops.radix_partition(
         fold_keys_u32(k), num_buckets=num_buckets, with_counts=False)
     return np.asarray(buckets)
@@ -111,6 +122,44 @@ def bucket_by_composite(keys: Sequence[str], num_buckets: int,
         EXCHANGE_TIMERS["hash"] += time.perf_counter() - t0
         return out
     return partitioner
+
+
+# -- whole-stage fusion: pre-bucketed map output (DESIGN.md §14) -------------
+#
+# A fused stage program finishes the map side *inside* the task — partial
+# aggregate, bucket assignment, and per-bucket slicing all happen before
+# control returns to the scheduler.  The task then hands back a
+# BucketedBatch: the per-reducer pieces in bucket order, produced by the
+# exact slicing the scheduler would otherwise apply (same stable argsort /
+# searchsorted / take), so shuffle blocks are byte-identical to the
+# segment-at-a-time path — including under lineage recovery, where the
+# re-run task re-derives the same pieces deterministically.
+
+
+class BucketedBatch:
+    """Map output already split into per-reducer pieces (bucket order)."""
+
+    def __init__(self, pieces: List[PartitionBatch]):
+        self.pieces = pieces
+
+    @property
+    def num_rows(self) -> int:
+        return sum(p.num_rows for p in self.pieces)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.nbytes for p in self.pieces)
+
+
+def split_bucket_pieces(batch: PartitionBatch, bucket_of: np.ndarray,
+                        num_buckets: int) -> List[PartitionBatch]:
+    """Slice `batch` into per-bucket pieces — the scheduler's legacy
+    slicing, verbatim, so fused and seam-by-seam shuffle blocks match."""
+    order = np.argsort(bucket_of, kind="stable")
+    sorted_buckets = np.asarray(bucket_of)[order]
+    bounds = np.searchsorted(sorted_buckets, np.arange(num_buckets + 1))
+    return [batch.take(order[bounds[b]:bounds[b + 1]])
+            for b in range(num_buckets)]
 
 
 def single_bucket() -> Callable[[PartitionBatch], np.ndarray]:

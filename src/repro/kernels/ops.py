@@ -12,6 +12,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import colscan as _colscan
 from . import dictdecode as _dd
@@ -75,6 +76,38 @@ def segmented_merge(codes, values, num_groups: int,
     return _sm.segmented_merge(jnp.asarray(codes), jnp.asarray(values),
                                num_groups=num_groups, interpret=_interp(),
                                acc_dtype=acc_dtype)
+
+
+# -- double-buffered kernel dispatch (DESIGN.md §14) --------------------
+#
+# JAX dispatch is asynchronous: a jit/Pallas call returns a tracer-backed
+# array before the device work completes, and only np.asarray() blocks.
+# double_buffer_map exploits that to overlap chunk i+1's dispatch (which
+# includes host-side decode/staging of its inputs) with chunk i's compute:
+# exactly one launch is kept in flight while the previous result drains.
+# DOUBLE_BUFFER.dispatches counts launches so tests can assert the
+# chunked path actually ran.
+
+DOUBLE_BUFFER = {"chunk_rows": 131072, "dispatches": 0}
+
+
+def double_buffer_map(fn, chunks):
+    """Map `fn` over `chunks`, keeping one dispatch in flight.
+
+    `fn(chunk)` must return a JAX array (or tuple of them); results are
+    materialized to numpy in order.  With one chunk this degenerates to a
+    plain call — same arithmetic, same rounding class."""
+    out = []
+    inflight = None
+    for chunk in chunks:
+        nxt = fn(chunk)              # async dispatch: returns immediately
+        DOUBLE_BUFFER["dispatches"] += 1
+        if inflight is not None:
+            out.append(jax.tree_util.tree_map(np.asarray, inflight))
+        inflight = nxt
+    if inflight is not None:
+        out.append(jax.tree_util.tree_map(np.asarray, inflight))
+    return out
 
 
 def radix_partition(keys_u32, num_buckets: int, with_counts: bool = True):

@@ -66,7 +66,7 @@ class SharkServer:
                  backend: str = "compiled", exchange: str = "coded",
                  spill_dir: Optional[str] = None,
                  spill_mode: Optional[str] = None,
-                 mesh=None):
+                 mesh=None, stage_fusion: str = "on"):
         self.ctx = SharkContext(num_workers=num_workers,
                                 max_threads=max_threads,
                                 speculation=speculation,
@@ -94,7 +94,8 @@ class SharkServer:
             pde=pde_config or PDEConfig(), enable_pde=enable_pde,
             enable_map_pruning=enable_map_pruning,
             default_shuffle_buckets=default_shuffle_buckets,
-            backend=backend, exchange=exchange, mesh=mesh)
+            backend=backend, exchange=exchange, mesh=mesh,
+            stage_fusion=stage_fusion)
         self.scheduler = FairScheduler(
             self._run_query, max_concurrent=max_concurrent_queries,
             max_queue_depth=max_queue_depth)

@@ -379,3 +379,198 @@ def test_worker_loss_at_each_shuffle_boundary_and_during_reduce():
         assert scheduler.tasks_recomputed > 0 or scheduler.tasks_launched > 0
     finally:
         srv.shutdown()
+
+
+QUERY_FUSED = ("SELECT COUNT(*) AS c, SUM(rev) AS total FROM fact "
+               "JOIN mid_d ON fact.mk = mid_d.mkey WHERE rev >= 0.5")
+
+
+def _make_shuffle_join_server() -> SharkServer:
+    """Like _make_server but with a broadcast threshold low enough that the
+    fact⋈mid_d join truly SHUFFLES both sides: the filtered fact side ships
+    through the fused exchange (whole-stage program, DESIGN.md §14) and the
+    join reduce splits consume its pieces inside the aggregate map stage."""
+    from repro.core.pde import PDEConfig
+    rng = np.random.default_rng(11)
+    # max_threads leaves slack over the 8 join-reduce splits so the final
+    # aggregate boundary passes the pipelined-reduce admission gate — the
+    # kill must land while the overlapped reduce is already fetching
+    srv = SharkServer(num_workers=4, max_threads=12,
+                      enable_result_cache=False,
+                      max_concurrent_queries=2, default_partitions=6,
+                      default_shuffle_buckets=8,
+                      pde_config=PDEConfig(broadcast_threshold_bytes=1024,
+                                           target_reduce_bytes=16384))
+    srv.create_table("fact", Schema.of(
+        sk=DType.INT64, mk=DType.INT64, rev=DType.FLOAT64),
+        {"sk": rng.integers(0, 8, N_FACT).astype(np.int64),
+         "mk": rng.integers(0, 300, N_FACT).astype(np.int64),
+         "rev": rng.uniform(0, 10, N_FACT)})
+    srv.create_table("mid_d", Schema.of(mkey=DType.INT64, mval=DType.INT64),
+                     {"mkey": np.arange(300, dtype=np.int64),
+                      "mval": np.arange(300, dtype=np.int64) % 9})
+    return srv
+
+
+def test_worker_loss_mid_fused_stage_with_reduce_started():
+    """Whole-stage fusion chaos (DESIGN.md §14): the filtered fact side of
+    the join ships through a FUSED exchange stage (scan→filter→partition
+    inside one stage program per map task), and the downstream global
+    aggregate runs its reduce PIPELINED — started while the aggregate's
+    map stage is still draining.
+
+    Phase 1 kills the worker holding fused exchange pieces at the worst
+    moment: the pipelined reduce has already fetched its first map's
+    output, and straggler aggregate maps — whose join fetch needs the
+    dropped fused blocks — are still running, so lineage recovery re-runs
+    the fused stage program *while the pipelined reduce is in flight*.
+    Phase 2 deterministically kills the owner of a fused block right after
+    the exchange stage completes.  Both runs must produce results
+    identical to the failure-free run, recovery must observably climb
+    through the fused stage, and no shuffle blocks may leak."""
+    from repro.core.shuffle import BucketedBatch
+    srv = _make_shuffle_join_server()
+    try:
+        scheduler = srv.ctx.scheduler
+        bm = srv.ctx.block_manager
+        orig_map_stage = scheduler.run_map_stage
+        orig_pieces = scheduler._map_output_pieces
+        fused = {"n": 0}
+        fused_sids = set()
+        lock = threading.Lock()
+
+        def counting_pieces(dep, batch):
+            if isinstance(batch, BucketedBatch):
+                with lock:
+                    fused["n"] += 1
+                    fused_sids.add(dep.shuffle_id)
+            return orig_pieces(dep, batch)
+
+        scheduler._map_output_pieces = counting_pieces
+
+        # ---- failure-free baseline; count shuffle boundaries
+        calls = []
+        scheduler.run_map_stage = lambda dep: (calls.append(dep),
+                                               orig_map_stage(dep))[1]
+        sess = srv.session("fused-chaos")
+        res = sess.sql_np(QUERY_FUSED)
+        baseline = (int(res["c"][0]), round(float(res["total"][0]), 6))
+        scheduler.run_map_stage = orig_map_stage
+        n_boundaries = len(calls)
+        assert n_boundaries >= 3   # both join exchanges + the aggregate
+        assert fused["n"] > 0, "no map task shipped fused stage pieces"
+        _assert_shuffles_released(srv)
+
+        # ---- phase 1: kill the fused-block owner mid-aggregate-stage,
+        # after the pipelined reduce observably started
+        last = n_boundaries - 1     # the aggregate's (pipelined) boundary
+        state = {"i": 0, "killed": None, "sid": None}
+        recomputed_before = scheduler.tasks_recomputed
+        fused_before = fused["n"]
+
+        def kill_fused_owner_after_reduce_fetch(agg_sid):
+            deadline = time.monotonic() + 10.0
+            while time.monotonic() < deadline:
+                if any(e[1] == "reduce-fetch" and e[2] == agg_sid
+                       for e in scheduler.stage_events):
+                    break
+                time.sleep(0.005)
+            victim = None
+            while time.monotonic() < deadline and victim is None:
+                with lock:
+                    sids = set(fused_sids)
+                with bm.lock:
+                    # the fused block for the HIGHEST bucket: that bucket
+                    # is joined by a (delayed) straggler split, so dropping
+                    # it guarantees a post-kill FetchFailed
+                    cands = [(key[3], worker)
+                             for key, (worker, _b) in bm.blocks.items()
+                             if key[0] == "shuf" and key[1] in sids]
+                    if cands:
+                        victim = max(cands)[1]
+                time.sleep(0.005)
+            if victim is not None:
+                scheduler.kill_worker(victim)
+                scheduler.add_worker()
+                with lock:
+                    state["killed"] = victim
+
+        def chaotic_map_stage(dep):
+            with lock:
+                fire = state["i"] == last
+                state["i"] += 1
+            if not fire:
+                return orig_map_stage(dep)
+            state["sid"] = dep.shuffle_id
+            dep.parent.delay_fn = lambda split: 0.0 if split == 0 else 0.5
+            t = threading.Thread(
+                target=kill_fused_owner_after_reduce_fetch,
+                args=(dep.shuffle_id,), daemon=True)
+            t.start()
+            try:
+                return orig_map_stage(dep)
+            finally:
+                t.join(timeout=15.0)
+
+        scheduler.run_map_stage = chaotic_map_stage
+        try:
+            res = sess.sql_np(QUERY_FUSED)
+        finally:
+            scheduler.run_map_stage = orig_map_stage
+        got = (int(res["c"][0]), round(float(res["total"][0]), 6))
+        assert state["killed"] is not None, "kill never fired mid-stage"
+        assert got == baseline, "mid-fused-stage worker loss diverged"
+        _assert_shuffles_released(srv)
+        ev = scheduler.stage_events
+        fetches = [e for e in ev
+                   if e[1] == "reduce-fetch" and e[2] == state["sid"]]
+        dones = [e for e in ev
+                 if e[1] == "map-done" and e[2] == state["sid"]]
+        assert fetches and dones
+        assert fetches[0][0] < max(d[0] for d in dones), \
+            "reduce was not in flight when the worker died"
+        assert scheduler.tasks_recomputed > recomputed_before, \
+            "straggler maps never lineage-recovered the fused blocks"
+        assert fused["n"] > fused_before, \
+            "recovery did not climb through the fused stage program"
+
+        # ---- phase 2: deterministic loss of a fused exchange block right
+        # after its map stage completes — the downstream fetch must
+        # FetchFail and recovery re-runs the fused stage program
+        recomputed_before = scheduler.tasks_recomputed
+        fused_before = fused["n"]
+        state2 = {"fired": False}
+
+        def chaotic_first_boundary(dep):
+            stats = orig_map_stage(dep)
+            with lock:
+                fire = (not state2["fired"]
+                        and dep.shuffle_id in fused_sids)
+                if fire:
+                    state2["fired"] = True
+            if fire:
+                with bm.lock:
+                    owners = [w for key, (w, _b) in bm.blocks.items()
+                              if key[0] == "shuf"
+                              and key[1] == dep.shuffle_id]
+                assert owners, "fused exchange materialized no blocks"
+                scheduler.kill_worker(owners[0])
+                scheduler.add_worker()
+            return stats
+
+        scheduler.run_map_stage = chaotic_first_boundary
+        try:
+            res = sess.sql_np(QUERY_FUSED)
+        finally:
+            scheduler.run_map_stage = orig_map_stage
+            scheduler._map_output_pieces = orig_pieces
+        got = (int(res["c"][0]), round(float(res["total"][0]), 6))
+        assert state2["fired"], "no fused exchange boundary in chaos run"
+        assert got == baseline, "fused-exchange block loss diverged"
+        _assert_shuffles_released(srv)
+        assert scheduler.tasks_recomputed > recomputed_before, \
+            "lineage recovery never re-ran the lost fused map task"
+        assert fused["n"] > fused_before, \
+            "recovery did not climb through the fused stage program"
+    finally:
+        srv.shutdown()

@@ -282,3 +282,84 @@ def test_oracle_grid_covers_multiway_joins(env):
     assert any(q.having is not None for q in queries)
     assert any(q.limit is not None and q.aggs for q in queries)
     assert any(q.limit is not None and not q.aggs for q in queries)
+
+
+# -- whole-stage fusion differential (DESIGN.md §14) --------------------------
+
+N_FUSION_SEEDS = 60
+
+
+@pytest.fixture(scope="module")
+def fusion_env(env):
+    """Three-way fusion differential over the SAME data: whole-stage
+    compilation FORCED (every eligible partition runs the fused stage
+    program), fusion OFF (the segment-at-a-time path with its host seams —
+    the semantic oracle for the fused path), and the fully interpreted
+    numpy backend from `env`.  All three must agree row-identically."""
+    _, sess_n, data, dfs, _ = env
+    sess_ws = SharkSession(backend="compiled", exchange="coded",
+                           stage_fusion="force", **SESSION_KW)
+    sess_seam = SharkSession(backend="compiled", exchange="coded",
+                             stage_fusion="off", **SESSION_KW)
+    register_star_tables(sess_ws, data)
+    register_star_tables(sess_seam, data)
+    fusion_coverage = {}   # archetype -> fused (whole-stage) partitions
+    yield sess_ws, sess_seam, sess_n, data, dfs, fusion_coverage
+    sess_ws.shutdown()
+    sess_seam.shutdown()
+
+
+def _run_one_fused(fusion_env, seed):
+    sess_ws, sess_seam, sess_n, data, dfs, fusion_coverage = fusion_env
+    query = QueryGen(data, seed).gen()
+    sql = query.sql()
+    got_ws = sess_ws.sql_np(sql)
+    mws = sess_ws.metrics()
+    # fused partitions surface as the synthetic "whole-stage" route key and
+    # never as interpreted scan work
+    assert mws.interpreted_scan_ops == 0, sql
+    routes = mws.segment_routes()
+    assert routes.get("whole-stage", 0) == mws.fused_partitions(), sql
+    got_seam = sess_seam.sql_np(sql)
+    mseam = sess_seam.metrics()
+    assert mseam.interpreted_scan_ops == 0, sql
+    assert mseam.fused_partitions() == 0, \
+        f"stage_fusion='off' still fused a stage\n  {sql}"
+    assert "whole-stage" not in mseam.segment_routes(), sql
+    got_n = sess_n.sql_np(sql)
+    assert sess_n.metrics().fused_partitions() == 0, sql
+    for arch in _archetypes(query):
+        fusion_coverage[arch] = (fusion_coverage.get(arch, 0)
+                                 + mws.fused_partitions())
+    return query, sql, got_ws, got_seam, got_n
+
+
+@pytest.mark.parametrize("seed", range(N_FUSION_SEEDS))
+def test_stage_fusion_forced_on_off_parity(fusion_env, seed):
+    """Whole-stage FORCED vs segment-at-a-time vs fully interpreted: all
+    three row-identical to each other and to pandas."""
+    _, _, _, _, dfs, _ = fusion_env
+    query, sql, got_ws, got_seam, got_n = _run_one_fused(fusion_env, seed)
+    ref = query.pandas(dfs)
+    compare(query, got_ws, ref)
+    compare(query, got_seam, ref)
+    compare(query, got_n, ref)
+    assert_backend_parity(query, got_ws, got_seam, sql)
+    assert_backend_parity(query, got_ws, got_n, sql)
+
+
+def test_whole_stage_route_fired_per_archetype(fusion_env):
+    """The whole-stage route must actually fire for every archetype with a
+    shuffle boundary (join exchanges, global aggregates, group-bys, limits;
+    plain scans have no map stage to fuse).  Aggregated across seeds —
+    individual seeds may legitimately fall back (tiny partitions, numpy
+    oracle rungs)."""
+    _, _, _, _, _, fusion_coverage = fusion_env
+    required = ("join", "agg", "groupby", "limit")
+    if any(fusion_coverage.get(a, 0) == 0 for a in required):
+        # standalone / partial-selection run: generate coverage ourselves
+        for seed in range(N_FUSION_SEEDS):
+            _run_one_fused(fusion_env, seed)
+    for arch in required:
+        assert fusion_coverage.get(arch, 0) > 0, \
+            f"archetype {arch!r} never fused a whole stage: {fusion_coverage}"
