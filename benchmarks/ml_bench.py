@@ -1,72 +1,241 @@
-"""Machine learning benchmarks (paper §6.5, Figures 11-12): per-iteration
-logistic regression and k-means over a SQL-selected feature matrix.
+"""Compiled in-engine ML + vector analytics benchmark (paper §6.5,
+Figures 11-12; DESIGN.md §15).
 
-Shark mode caches the feature RDD in worker memory (per-iteration cost =
-compute only); the Hadoop-sim baseline re-runs the SQL + feature extraction
-every iteration (the paper's Hive/Hadoop pipelines reload from HDFS each
-pass — their 100x gap)."""
+    python -m benchmarks.ml_bench [--quick] [--json-out BENCH_ml.json]
+
+Four arms, each with an asserted floor or a zero-wrong invariant:
+
+  1. cached-iteration: logistic-regression iterations over a cached
+     FeatureRDD vs the paper's Hive/Hadoop pipeline, which re-runs the
+     whole per-iteration job: re-load (re-encode) the table — the stand-in
+     for HDFS read + deserialization, per common.py — then SQL + dense
+     featurization + one gradient pass, under the hive-sim 25 ms task
+     launch overhead.  Floor: >= 5x per iteration.
+  2. encoded featurization: time-to-first-gradient with partitions handed
+     to the jitted step still encoded (FOR/BITPACK int columns, decode
+     fused into the XLA program) vs materializing the dense matrix
+     host-side first (`map_rows` legacy layout — decode_np + stack).
+     Floor: >= 1.3x.
+  3. zero-decode invariant: across the cached encoded training runs of
+     arm 1, `expr.DECODE_COUNTERS` numeric counters must not move — the
+     host provably never materialized a feature column.
+  4. filtered similarity search: 3 concurrent server sessions each run
+     `filter(...).similarity_join(...)` storms through the fair
+     scheduler; every result row-identical to the numpy oracle (zero
+     wrong results), kernel-eligible partitions routed per the PDE.
+
+Floors are calibrated for this 2-core CI container; the structural gaps
+(reload vs cache ~100x in the paper, decode-avoidance) are far larger on
+real clusters.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import sys
+import threading
+import time
+from typing import Dict, List
+
 import numpy as np
 
-from repro.core import DType, Schema
-from repro.ml import KMeans, LogisticRegression, table_rdd_to_features
+from repro.core import DType, Schema, SharkSession
+from repro.core.expr import DECODE_COUNTERS
+from repro.ml import LogisticRegression, table_rdd_to_features
 
-from .common import report, shark_session, timeit
+from .common import hive_sim_session, report, shark_session, timeit
 
-N, D = 400_000, 10
+D = 12                      # int feature columns (FOR/BITPACK-encoded)
+ITERATIONS = 5
+SCHEMA = Schema.of(**{f"f{i}": DType.INT64 for i in range(D)},
+                   label=DType.INT64)
 
 
-def load_points(sess):
+def make_points(rows: int) -> Dict[str, np.ndarray]:
+    """Int-heavy feature data: small-range int64 columns land in
+    FOR/BITPACK blocks, labels stay int64 (never through float32)."""
     rng = np.random.default_rng(5)
     w = rng.normal(size=D)
-    X = rng.normal(size=(N, D)).astype(np.float32)
-    y = (X @ w > 0).astype(np.float32)
-    cols = {f"f{i}": X[:, i] for i in range(D)}
-    cols["label"] = y
-    sess.create_table("points", Schema.of(
-        **{f"f{i}": DType.FLOAT32 for i in range(D)}, label=DType.FLOAT32),
-        cols, num_partitions=16)
+    raw = rng.integers(0, 16, size=(rows, D)).astype(np.int64)
+    cols = {f"f{i}": raw[:, i] + 1000 for i in range(D)}
+    cols["label"] = ((raw - 8) @ w > 0).astype(np.int64)
+    return cols
 
 
-def main() -> None:
-    sess = shark_session()
-    load_points(sess)
-    fcols = [f"f{i}" for i in range(D)]
-
-    # Shark: extract once (SQL), cache, iterate
+def bench_iterations(sess, cols, fcols: List[str]) -> Dict[str, object]:
+    """Arms 1 + 3: cached encoded iterations vs the full reload pipeline,
+    with the zero-decode invariant asserted across the cached runs."""
     rdd, _ = sess.sql2rdd("SELECT * FROM points")
     feats = table_rdd_to_features(rdd, fcols, "label")
     feats.cache()
-    clf = LogisticRegression(dims=D, lr=0.5, iterations=1)
-    clf.fit(feats)  # warm: materializes cache + jit
-    t_shark = timeit(lambda: clf.fit(feats), warmup=0, iters=3)
+    clf = LogisticRegression(dims=D, lr=0.5, iterations=ITERATIONS)
+    clf.fit(feats)                      # warm: materialize cache + jit
+    counters0 = dict(DECODE_COUNTERS)
+    t_cached = timeit(lambda: clf.fit(feats), warmup=0, iters=3) / ITERATIONS
+    delta = {k: DECODE_COUNTERS[k] - counters0[k] for k in counters0}
+    assert delta["numeric_blocks"] == 0 and delta["numeric_rows"] == 0, (
+        f"encoded cached training decoded host-side: {delta}")
 
-    # Hadoop-sim: re-run the SQL + extraction EVERY iteration (reload path)
-    def hadoop_iteration():
+    # Hive/Hadoop-sim: every iteration re-loads (re-encodes) the table —
+    # the HDFS read + deserialization stand-in — then re-runs the SQL,
+    # materializes the dense matrix host-side, and takes one gradient pass
+    # under the 25 ms task launch overhead.
+    hive = hive_sim_session()
+    epoch = [0]
+
+    def reload_iteration():
+        name = f"points_{epoch[0]}"
+        epoch[0] += 1
+        hive.create_table(name, SCHEMA, cols, num_partitions=16)
+        r, _ = hive.sql2rdd(f"SELECT * FROM {name}")
+        f = table_rdd_to_features(r, fcols, "label", map_rows=lambda x: x)
+        LogisticRegression(dims=D, lr=0.5, iterations=1).fit(f)
+
+    t_reload = timeit(reload_iteration, warmup=1, iters=2)
+    hive.shutdown()
+    speedup = t_reload / t_cached
+    report("ml_iter_cached", t_cached, f"speedup={speedup:.1f}x")
+    report("ml_iter_reload", t_reload, "")
+    routes = dict(clf.metrics.segments[-1].routes) if clf.metrics else {}
+    return {"iter_cached_s": round(t_cached, 5),
+            "iter_reload_s": round(t_reload, 5),
+            "speedup": round(speedup, 2),
+            "train_routes": routes,
+            "decode_counter_delta": delta}
+
+
+def bench_encoded_featurization(sess, fcols: List[str]) -> Dict[str, object]:
+    """Arm 2: time-to-first-gradient, encoded pass-through partitions vs
+    host-materialized dense matrices (same trainer, same jit route — the
+    only difference is where the decode happens)."""
+    def first_grad(map_rows):
         r, _ = sess.sql2rdd("SELECT * FROM points")
-        f = table_rdd_to_features(r, fcols, "label")
-        clf.fit(f)  # one iteration over uncached data
+        f = table_rdd_to_features(r, fcols, "label", map_rows=map_rows)
+        LogisticRegression(dims=D, lr=0.5, iterations=1).fit(f)
 
-    t_hadoop = timeit(hadoop_iteration, warmup=0, iters=1)
-    report("ml_logreg_iter_shark", t_shark,
-           f"speedup={t_hadoop / t_shark:.1f}x")
-    report("ml_logreg_iter_hadoopsim", t_hadoop, "")
+    def best_of(fn, iters=5):
+        # the decode-placement advantage is deterministic; best-of filters
+        # out scheduler hiccups that a 3-run median on 2 cores lets through
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return min(times)
 
-    km = KMeans(k=8, dims=D, iterations=1)
-    km.fit(feats)
-    t_km = timeit(lambda: km.fit(feats), warmup=0, iters=3)
+    # warm both jit programs before timing
+    first_grad(None)
+    first_grad(lambda x: x)
+    t_encoded = best_of(lambda: first_grad(None))
+    t_mat = best_of(lambda: first_grad(lambda x: x))
+    speedup = t_mat / t_encoded
+    report("ml_featurize_encoded", t_encoded, f"speedup={speedup:.2f}x")
+    report("ml_featurize_materialized", t_mat, "")
+    return {"encoded_s": round(t_encoded, 5),
+            "materialized_s": round(t_mat, 5),
+            "speedup": round(speedup, 2)}
 
-    def hadoop_kmeans():
-        r, _ = sess.sql2rdd("SELECT * FROM points")
-        f = table_rdd_to_features(r, fcols, "label")
-        km.fit(f)
 
-    t_kmh = timeit(hadoop_kmeans, warmup=0, iters=1)
-    report("ml_kmeans_iter_shark", t_km, f"speedup={t_kmh / t_km:.1f}x")
-    report("ml_kmeans_iter_hadoopsim", t_kmh, "")
+def bench_similarity(rows: int, sessions: int = 3,
+                     rounds: int = 4) -> Dict[str, object]:
+    """Arm 4: filtered top-k similarity search under server concurrency —
+    every session's every result must be row-identical to the numpy
+    oracle."""
+    from repro.server import SharkServer
+    d, k = 16, 20
+    rng = np.random.default_rng(11)
+    emb = rng.normal(size=(rows, d)).astype(np.float32)
+    cat = rng.integers(0, 4, rows).astype(np.int64)
+    srv = SharkServer(num_workers=2, max_threads=4,
+                      max_concurrent_queries=sessions,
+                      enable_result_cache=False, default_partitions=8)
+    srv.create_table("docs", Schema.of(id=DType.INT64, cat=DType.INT64),
+                     {"id": np.arange(rows, dtype=np.int64), "cat": cat,
+                      "emb": emb}, num_partitions=8)
+    scores64 = emb.astype(np.float64)
+
+    def oracle(c: int, q: np.ndarray) -> np.ndarray:
+        s = scores64 @ q
+        idx = np.nonzero(cat == c)[0]
+        return idx[np.argsort(-s[idx], kind="stable")[:k]]
+
+    wrong = [0] * sessions
+
+    def storm(slot: int) -> None:
+        sess = SharkSession(server=srv, client_id=f"ml-bench-{slot}")
+        srng = np.random.default_rng(100 + slot)
+        from repro.core.functions import col
+        for _ in range(rounds):
+            c = int(srng.integers(0, 4))
+            q = srng.normal(size=d)
+            got = (sess.table("docs").filter(col("cat") == c)
+                   .similarity_join("emb", q, k).to_numpy())
+            if not np.array_equal(got["id"], oracle(c, q)):
+                wrong[slot] += 1
+
+    threads = [threading.Thread(target=storm, args=(i,))
+               for i in range(sessions)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    srv.shutdown()
+    total = sessions * rounds
+    report("ml_similarity_concurrent", wall / total,
+           f"sessions={sessions} wrong={sum(wrong)}")
+    return {"sessions": sessions, "queries": total,
+            "wall_s": round(wall, 4),
+            "qps": round(total / wall, 2), "wrong": sum(wrong)}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=400_000)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--cached-floor", type=float, default=5.0)
+    ap.add_argument("--encoded-floor", type=float, default=1.3)
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.rows = min(args.rows, 200_000)
+
+    sess = shark_session()
+    cols = make_points(args.rows)
+    sess.create_table("points", SCHEMA, cols, num_partitions=16)
+    fcols = [f"f{i}" for i in range(D)]
+
+    iters = bench_iterations(sess, cols, fcols)
+    feat = bench_encoded_featurization(sess, fcols)
     sess.shutdown()
+    sim = bench_similarity(min(args.rows, 60_000))
+
+    payload = {"rows": args.rows, "dims": D,
+               "cached_vs_reload": iters,
+               "encoded_vs_materialized": feat,
+               "similarity_concurrent": sim}
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+    print(f"# ml: cached-iter speedup={iters['speedup']}x "
+          f"encoded-featurize speedup={feat['speedup']}x "
+          f"similarity wrong={sim['wrong']}")
+
+    failures = []
+    if iters["speedup"] < args.cached_floor:
+        failures.append(f"cached-iteration speedup {iters['speedup']} "
+                        f"< floor {args.cached_floor}")
+    if feat["speedup"] < args.encoded_floor:
+        failures.append(f"encoded featurization speedup {feat['speedup']} "
+                        f"< floor {args.encoded_floor}")
+    if sim["wrong"]:
+        failures.append(f"{sim['wrong']} wrong similarity results")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -140,6 +140,28 @@ def mesh_section(data, queries: List[str], answers) -> Dict[str, object]:
     return out
 
 
+def composed_section(data, queries: List[str], answers) -> Dict[str, object]:
+    """Composed cluster tier (DESIGN.md §13.3): a replicated fleet where
+    EACH replica shards its map stages across its own device mesh.  Gated
+    on multi-device hosts; asserts zero wrong results and that mesh
+    dispatch actually happened inside the replicas."""
+    meshes: Dict[int, MeshContext] = {}
+
+    def factory(i: int) -> MeshContext:
+        meshes[i] = MeshContext()
+        return meshes[i]
+
+    fleet = SharkFleet(num_replicas=2, routing="least_loaded",
+                       mesh_factory=factory, **REPLICA_KW)
+    fleet.create_table(TABLE, SCHEMA, data, num_partitions=8)
+    stats = run_storm(fleet, queries, answers)
+    fleet.shutdown()
+    stats["dispatch"] = {str(i): m.stats() for i, m in meshes.items()}
+    stats["mesh_dispatches"] = sum(
+        s["dispatches"] for s in stats["dispatch"].values())
+    return stats
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=1_000_000)
@@ -183,6 +205,23 @@ def main(argv=None) -> None:
           f"partitions={mesh['mesh_partitions']} "
           f"shipped={mesh['shipped_rows']}")
 
+    # composed tier: mesh-sharded replicas behind the fleet router — only
+    # meaningful when the host exposes more than one XLA device
+    import jax
+    composed = None
+    if len(jax.devices()) > 1:
+        composed = composed_section(
+            data, queries[:max(6, args.queries // 4)], answers)
+        assert composed["wrong"] == 0, \
+            f"composed: {composed['wrong']} wrong results"
+        assert composed["mesh_dispatches"] > 0, \
+            "composed fleet never dispatched through a replica mesh"
+        print(f"# composed: qps={composed['qps']} "
+              f"mesh_dispatches={composed['mesh_dispatches']} "
+              f"wrong={composed['wrong']}")
+    else:
+        print("# composed: skipped (single XLA device)")
+
     payload = {
         "rows": args.rows,
         "working_set_bytes": working_set,
@@ -191,6 +230,7 @@ def main(argv=None) -> None:
         "scaling_1_to_4": scaling,
         "chaos": chaos,
         "mesh": mesh,
+        "composed": composed,
     }
     if args.json_out:
         with open(args.json_out, "w") as f:

@@ -19,7 +19,14 @@
 # leg (runs the multidevice-marked tests plus the fleet scale-out benchmark
 # under XLA_FLAGS=--xla_force_host_platform_device_count=8; emits
 # BENCH_scale.json and asserts QPS scales >= 1.6x from 1 to 4 replicas with
-# zero wrong results, including one replica killed mid-storm).
+# zero wrong results, including one replica killed mid-storm; the scale
+# bench also exercises the composed mesh-per-replica fleet when multiple
+# XLA devices are visible), and the compiled in-engine ML benchmark
+# (emits BENCH_ml.json; asserts cached encoded training iterations beat
+# the reload-per-iteration pipeline >= 5x, encoded featurization beats
+# host materialization >= 1.3x, zero host-side decodes on the encoded
+# path, and zero wrong filtered-similarity results under 3 concurrent
+# server sessions).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -59,6 +66,10 @@ echo "wrote BENCH_spill.json"
 echo "== whole-stage compilation: fused stage programs vs seam-by-seam =="
 python -m benchmarks.pipeline_bench --quick --json-out BENCH_pipeline.json
 echo "wrote BENCH_pipeline.json"
+
+echo "== compiled in-engine ML: cached/encoded training + similarity search =="
+python -m benchmarks.ml_bench --quick --json-out BENCH_ml.json
+echo "wrote BENCH_ml.json"
 
 echo "== cluster tier: 8-device mesh tests + fleet scale-out =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \

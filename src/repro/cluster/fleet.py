@@ -111,11 +111,24 @@ class FleetHandle:
 
 class SharkFleet:
     def __init__(self, num_replicas: int = 2, routing: str = "round_robin",
-                 **server_kw):
+                 mesh_factory=None, **server_kw):
+        """`mesh_factory`: optional callable `index -> MeshContext | None`
+        giving each replica its OWN device mesh (DESIGN.md §13.3) — the
+        composed cluster tier: a fleet of replicated servers, each of which
+        shards its map stages across an intra-replica mesh.  A plain
+        `mesh=` in `server_kw` would share one mesh object (and its
+        health/retry state) across replicas; the factory keeps replica
+        failure domains independent."""
         assert routing in ("round_robin", "least_loaded"), routing
         self.routing = routing
-        self.replicas = [_Replica(i, SharkServer(**server_kw))
-                         for i in range(num_replicas)]
+        if mesh_factory is not None:
+            assert "mesh" not in server_kw, "pass mesh_factory OR mesh"
+            self.replicas = [
+                _Replica(i, SharkServer(mesh=mesh_factory(i), **server_kw))
+                for i in range(num_replicas)]
+        else:
+            self.replicas = [_Replica(i, SharkServer(**server_kw))
+                             for i in range(num_replicas)]
         self._lock = threading.Lock()
         self._ddl_lock = threading.Lock()
         self._rr = 0

@@ -333,6 +333,12 @@ class Table:
     # Co-partitioning metadata (§3.4): set when the table was DISTRIBUTE'd BY
     # a key; two tables sharing (key-column, num_partitions) join shuffle-free.
     distribute_key: Optional[str] = None
+    # Vector analytics metadata (DESIGN.md §15.3): embedding name -> its
+    # fixed-width float lane columns ("emb" -> ["emb_0", "emb_1", ...]).
+    # Lanes are ordinary FLOAT32 columns — they prune, compress, and project
+    # like any other — the mapping just lets `similarity_join` resolve a
+    # logical vector column back to its lanes.
+    embeddings: Dict[str, List[str]] = dataclasses.field(default_factory=dict)
 
     @property
     def num_rows(self) -> int:
@@ -407,8 +413,36 @@ def from_arrays(name: str, schema: Schema, data: Dict[str, np.ndarray],
                 num_partitions: int = 8,
                 distribute_by: Optional[str] = None) -> Table:
     """Distributed data loading (§3.3): split rows into partitions, each
-    'load task' builds its columnar blocks independently."""
+    'load task' builds its columnar blocks independently.
+
+    Embedding columns (DESIGN.md §15.3): a data key that is NOT in the
+    schema and holds a 2-D float array `(rows, width)` is an embedding —
+    it explodes into `width` FLOAT32 lane columns `{key}_{i}` appended to
+    the schema, and the lane mapping is recorded on `Table.embeddings` so
+    `similarity_join` can resolve the vector back to its lanes."""
     n = len(next(iter(data.values()))) if data else 0
+    embeddings: Dict[str, List[str]] = {}
+    schema_names = set(schema.names)
+    extra_fields: List[Field] = []
+    for key in list(data):
+        if key in schema_names:
+            continue
+        v = np.asarray(data[key])
+        if v.ndim != 2:
+            continue        # non-schema 1-D keys stay ignored (legacy)
+        lanes = [f"{key}_{i}" for i in range(v.shape[1])]
+        clash = [l for l in lanes if l in schema_names or l in data]
+        if clash:
+            raise ValueError(
+                f"from_arrays: embedding {key!r} lane column(s) "
+                f"{clash} collide with existing columns")
+        for i, lane in enumerate(lanes):
+            data[lane] = np.ascontiguousarray(v[:, i], dtype=np.float32)
+            extra_fields.append(Field(lane, DType.FLOAT32))
+        embeddings[key] = lanes
+        del data[key]
+    if extra_fields:
+        schema = Schema(schema.fields + tuple(extra_fields))
     # STRING columns: encode to global codes first so DISTRIBUTE BY and joins
     # on strings hash consistently across partitions.
     norm: Dict[str, np.ndarray] = {}
@@ -425,7 +459,8 @@ def from_arrays(name: str, schema: Schema, data: Dict[str, np.ndarray],
             sel = order[bounds[i]: bounds[i + 1]]
             parts.append(build_partition(
                 i, schema, {k: v[sel] for k, v in norm.items()}))
-        return Table(name, schema, parts, distribute_key=distribute_by)
+        return Table(name, schema, parts, distribute_key=distribute_by,
+                     embeddings=embeddings)
     # round-robin contiguous split
     edges = np.linspace(0, n, num_partitions + 1, dtype=np.int64)
     parts = []
@@ -433,4 +468,4 @@ def from_arrays(name: str, schema: Schema, data: Dict[str, np.ndarray],
         lo, hi = int(edges[i]), int(edges[i + 1])
         parts.append(build_partition(
             i, schema, {k: v[lo:hi] for k, v in norm.items()}))
-    return Table(name, schema, parts)
+    return Table(name, schema, parts, embeddings=embeddings)

@@ -244,6 +244,12 @@ def decode_np(enc: Encoded) -> np.ndarray:
     if enc._decoded is not None:
         return enc._decoded
     enc.decode_count += 1
+    # encoded-pipeline promise (DESIGN.md §15): paths that claim to hand
+    # encoded blocks straight to XLA must never reach this point — the
+    # counters make the claim assertable (expr.DECODE_COUNTERS).
+    from .expr import DECODE_COUNTERS
+    DECODE_COUNTERS["numeric_blocks"] += 1
+    DECODE_COUNTERS["numeric_rows"] += int(enc.n)
     if enc.encoding == Encoding.DICT:
         out = enc.dictionary[enc.codes]
     elif enc.encoding == Encoding.FOR:

@@ -211,22 +211,35 @@ def infer_dtype(e: Expr, schema: Schema) -> DType:
 # ---------------------------------------------------------------------------
 
 
-# Row-level string materialization counter.  The dictionary-preserving
-# exchange (DESIGN.md §11) promises that shuffle/join/group paths never
-# decode string columns to raw values; every ColumnVal.decoded() of a
-# string column bumps this, so tests and benchmarks/shuffle_bench.py can
-# assert the promise (counter delta == 0 across execute()).  Plain dict
-# mutation under the GIL — a diagnostic counter, not an exact statistic.
-DECODE_COUNTERS = {"string_cols": 0, "string_rows": 0}
+# Materialization counters.  The dictionary-preserving exchange
+# (DESIGN.md §11) promises that shuffle/join/group paths never decode
+# string columns to raw values; every ColumnVal.decoded() of a string
+# column bumps string_cols/string_rows, so tests and
+# benchmarks/shuffle_bench.py can assert the promise (counter delta == 0
+# across execute()).  The encoded feature pipeline (DESIGN.md §15) makes
+# the same promise for numeric blocks: compression.decode_np bumps
+# numeric_blocks/numeric_rows on every host-side materialization of a
+# non-PLAIN block (memo misses only), so the encoded FeatureRDD train
+# path can assert it hands DICT/FOR/BITPACK/RLE arrays to XLA without a
+# single host decode.  Plain dict mutation under the GIL — diagnostic
+# counters, not exact statistics.
+DECODE_COUNTERS = {"string_cols": 0, "string_rows": 0,
+                   "numeric_blocks": 0, "numeric_rows": 0}
 
 
 def reset_decode_counters() -> None:
     DECODE_COUNTERS["string_cols"] = 0
     DECODE_COUNTERS["string_rows"] = 0
+    DECODE_COUNTERS["numeric_blocks"] = 0
+    DECODE_COUNTERS["numeric_rows"] = 0
 
 
 def string_decode_events() -> int:
     return DECODE_COUNTERS["string_cols"]
+
+
+def numeric_decode_events() -> int:
+    return DECODE_COUNTERS["numeric_blocks"]
 
 
 class ColumnVal:

@@ -42,7 +42,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .expr import Aliased, Col, Expr, rewrite_expr
+from .expr import Aliased, BinOp, Col, Expr, Lit, rewrite_expr
 from .plan import (AggFunc, AggregateNode, FilterNode, JoinNode, LimitNode,
                    Node, ProjectNode, ScanNode, SortNode,
                    explain as explain_plan, optimize)
@@ -273,6 +273,72 @@ class SharkFrame:
     def limit(self, n: int) -> "SharkFrame":
         return self._derive(LimitNode(self._node, int(n)))
 
+    def similarity_join(self, embedding: str, query, k: int,
+                        score_col: str = "score") -> "SharkFrame":
+        """Top-k dot-product similarity search against an embedding's lane
+        columns (DESIGN.md §15.3): every surviving row gets
+        `score = sum(lane_i * query_i)` and the k highest-scoring rows win
+        (ties by physical row order, both execution paths).
+
+        Lowers to ordinary relational nodes —
+        Limit(k, Sort(score desc, Project(*, score))) — which is exactly
+        the plan of the SQL twin `SELECT *, f_0*q_0 + f_1*q_1 + ... AS
+        score FROM ... ORDER BY score DESC LIMIT k`, so filters written
+        before the call push below the score projection and prune
+        partitions as usual, and the physical layer may route eligible
+        partitions to the Pallas `topk_similarity` kernel
+        (`physical._match_topk`).  `embedding` resolves through the
+        catalog's `Table.embeddings` lane mapping, or by `{embedding}_{i}`
+        prefix over this frame's columns."""
+        q = np.asarray(query, dtype=np.float64).ravel()
+        lanes = self._embedding_lanes(embedding)
+        if not lanes:
+            raise FrameBindError(
+                f"SharkFrame.similarity_join(): no embedding {embedding!r} "
+                f"— expected catalog lane metadata or consecutive "
+                f"'{embedding}_0', '{embedding}_1', ... columns; available "
+                f"columns: {', '.join(self.columns)}")
+        if len(q) != len(lanes):
+            raise FrameBindError(
+                f"SharkFrame.similarity_join(): query vector has {len(q)} "
+                f"components but embedding {embedding!r} has {len(lanes)} "
+                f"lanes ({lanes[0]}..{lanes[-1]})")
+        if score_col in self.columns:
+            raise FrameBindError(
+                f"SharkFrame.similarity_join(): score column {score_col!r} "
+                f"already exists; pass score_col= to rename")
+        expr: Optional[Expr] = None
+        for lane, w in zip(lanes, q.tolist()):
+            term = BinOp("*", Col(lane), Lit(float(w)))
+            expr = term if expr is None else BinOp("+", expr, term)
+        proj = ProjectNode(self._node,
+                           [(c, Col(c)) for c in self.columns]
+                           + [(score_col, expr)])
+        return self._derive(
+            LimitNode(SortNode(proj, [(score_col, True)]), int(k)))
+
+    def _embedding_lanes(self, embedding: str) -> List[str]:
+        """Lane columns for `embedding`, in lane order: the source table's
+        `embeddings` metadata when the lanes survive to this frame's
+        output, else consecutive `{embedding}_{i}` name matching."""
+        cols = set(self.columns)
+        node = self._node
+        while True:
+            if isinstance(node, ScanNode):
+                table = self._session.catalog.get(node.table)
+                lanes = table.embeddings.get(embedding)
+                if lanes and all(l in cols for l in lanes):
+                    return list(lanes)
+                break
+            kids = node.children()
+            if len(kids) != 1:
+                break               # joins/unions: fall back to names
+            node = kids[0]
+        lanes = []
+        while f"{embedding}_{len(lanes)}" in cols:
+            lanes.append(f"{embedding}_{len(lanes)}")
+        return lanes
+
     def _bind_agg(self, select_items, group_items, op: str) -> "SharkFrame":
         sess = self._session
         try:
@@ -333,15 +399,21 @@ class SharkFrame:
 
     def to_features(self, feature_cols: Sequence[str],
                     label_col: Optional[str] = None,
-                    map_rows=None):
-        """Feature-matrix RDD for ml/ (Listing 1's mapRows step), extending
-        this frame's lineage graph with one narrow map."""
+                    map_rows=None, dtype=None):
+        """Encoded-feature RDD for ml/ (Listing 1's mapRows step), extending
+        this frame's lineage graph with one narrow map; partitions stay
+        encoded column blocks until the jitted train step decodes them
+        in-trace (DESIGN.md §15.1).  `dtype` sets the feature compute
+        dtype (float32 default; labels always keep their source dtype)."""
         self._check_columns(list(feature_cols)
                             + ([label_col] if label_col else []),
                             "to_features")
+        import numpy as _np
         from ..ml.featurize import table_rdd_to_features
         return table_rdd_to_features(self.to_rdd(), feature_cols, label_col,
-                                     map_rows)
+                                     map_rows,
+                                     dtype=(_np.float32 if dtype is None
+                                            else dtype))
 
     def cache(self, name: str, num_partitions: Optional[int] = None,
               distribute_by: Optional[str] = None) -> "SharkFrame":

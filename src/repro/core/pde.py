@@ -349,6 +349,46 @@ def decide_reduce_backend(num_rows: int,
         "jit", f"{num_rows} rows -> compiled reduce")
 
 
+def decide_train_backend(num_rows: int, dims: int,
+                         kernel_eligible: Optional[str] = None,
+                         on_tpu: bool = False,
+                         cfg: PDEConfig = PDEConfig()
+                         ) -> SegmentBackendDecision:
+    """Training twin of `decide_segment_backend` (DESIGN.md §15): choose how
+    one cached feature partition computes its per-iteration statistics
+    (gradient / centroid assignment).
+
+    `kernel_eligible` names the Pallas kernel the algorithm's update shape
+    could lower to (`train_grad` for logistic/linear gradients — the
+    groupby_mxu-style tiled-partials kernel); k-means assignment has no
+    kernel form yet and passes None.  Routing mirrors the segment rule:
+    tiny partitions stay on the numpy oracle (jit dispatch dominates), the
+    kernel engages on TPU or when forced and the partition is large enough,
+    and the fused assemble+train jit — which decodes DICT/FOR/BITPACK/RLE
+    feature blocks in-trace — is the default compiled path."""
+    if num_rows < cfg.segment_min_compiled_rows:
+        return SegmentBackendDecision(
+            "numpy", f"{num_rows} rows < {cfg.segment_min_compiled_rows} "
+            "compiled threshold: numpy oracle gradient")
+    if kernel_eligible is not None:
+        if num_rows < cfg.segment_kernel_min_rows:
+            return SegmentBackendDecision(
+                "jit", f"{num_rows} rows < {cfg.segment_kernel_min_rows} "
+                "kernel threshold")
+        if on_tpu or cfg.segment_force_kernels:
+            return SegmentBackendDecision(
+                kernel_eligible,
+                f"{num_rows}x{dims} partition, gradient-shaped update -> "
+                f"{kernel_eligible}"
+                + ("" if on_tpu else " (forced interpret mode)"))
+        return SegmentBackendDecision(
+            "jit", "kernel-shaped but no TPU: Pallas interpret mode is a "
+            "correctness tool, the fused assemble+train jit is the CPU "
+            "fast path")
+    return SegmentBackendDecision(
+        "jit", f"{num_rows}x{dims} partition -> fused assemble+train jit")
+
+
 def decide_stage_fusion(num_rows: int, mode: str = "on",
                         backend: str = "compiled", exchange: str = "coded",
                         cfg: PDEConfig = PDEConfig()

@@ -31,9 +31,9 @@ from .aggregate import (CompiledMerge, combine_colscan_stats, group_indices,
 from .batch import PartitionBatch
 from .catalog import Catalog
 from .columnar import Table
-from .expr import (_FLIP_CMP, Between, Cmp, Col, ColumnVal, CompiledExprSet,
-                   Expr, ExprCompileError, Lit, _x64, evaluate,
-                   split_conjuncts)
+from .expr import (_FLIP_CMP, Between, BinOp, Cmp, Col, ColumnVal,
+                   CompiledExprSet, Expr, ExprCompileError, Lit, _x64,
+                   evaluate, split_conjuncts)
 from .joins import broadcast_join, compile_probe, join_local
 from .pde import (JoinChoice, PDEConfig, SkewShard, decide_join,
                   decide_parallelism, decide_pipelined_reduce,
@@ -180,6 +180,10 @@ class ExecMetrics:
     mesh_devices: int = 0
     mesh_shipped_rows: int = 0
     mesh_retries: int = 0
+    # compiled analytics tier (DESIGN.md §15): one entry per training
+    # iteration — {"iteration", "seconds", "rows", "routes"} — appended by
+    # ml.trainer.IterativeTrainer next to its per-iteration SegmentRecords
+    train_iterations: List[Dict] = dataclasses.field(default_factory=list)
 
     def describe_joins(self) -> str:
         """One line per join boundary, execution order — the runtime twin of
@@ -415,6 +419,15 @@ class SegmentRunner:
         rec = self.record
         with self._lock:
             rec.fused_routes[route] = rec.fused_routes.get(route, 0) + 1
+
+    def _note_route(self, route: str) -> None:
+        """Tally an auxiliary route taken ON TOP of the partition's segment
+        route — e.g. the Pallas topk_similarity selection that replaces the
+        host lexsort after a similarity segment ran under `jit`.  Routes
+        only; partition/row counts stay with the primary `_note`."""
+        rec = self.record
+        with self._lock:
+            rec.routes[route] = rec.routes.get(route, 0) + 1
 
     # -- compiled expression set ----------------------------------------------
 
@@ -1683,9 +1696,19 @@ class Executor:
         (DESIGN.md §14).  `partitioner` MUST be the same closure the
         ShuffleDependency carries, so fused and seam-by-seam pieces are
         byte-identical.  Falls back to the legacy prep for interpreted /
-        non-segment sides and small partitions."""
-        if self._fusion_mode == "off" or side.runner is None:
+        non-segment sides and small partitions.
+
+        Bare unfiltered scans have no SegmentRunner (the PR-8 legacy-seam
+        gap): synthesize a pass-through segment for them so their exchange
+        buckets in-task too — observable as a `<table>->exchange-passthrough`
+        record in ExecMetrics.segments."""
+        if self._fusion_mode == "off":
             return self._prep_exchange(side.rdd)
+        if side.runner is None:
+            if side.table is None:
+                return self._prep_exchange(side.rdd)
+            side = dataclasses.replace(
+                side, runner=self._passthrough_runner(side.table))
         runner = side.runner
         mode = self._fusion_mode
         cfg = self.pde
@@ -1697,10 +1720,30 @@ class Executor:
                 return batch
             bucket_of = partitioner(batch)
             pieces = split_bucket_pieces(batch, bucket_of, num_buckets)
+            if getattr(runner, "_passthrough", False):
+                # synthesized bare-scan segment: no run_routed() ever fires,
+                # so tally the partition here for the route assertion
+                runner._note("passthrough", batch.num_rows, batch.num_rows,
+                             float(batch.nbytes))
             runner._note_fused("exchange")
             return BucketedBatch(pieces)
 
         return side.rdd.map_partitions(bucketize)
+
+    def _passthrough_runner(self, table: Table) -> SegmentRunner:
+        """Compiled pass-through segment for a bare unfiltered scan feeding
+        an exchange: no predicate, no projections — it exists so the fused
+        exchange can bucket the scan batch in-task instead of falling back
+        to the scheduler's host-assembly seam (PR-8 follow-up)."""
+        seg = PipelineSegment(ScanNode(table.name), None, None, 0)
+        record = SegmentRecord(
+            table=table.name, depth=0, consumer="exchange-passthrough",
+            outputs=list(table.schema.names), pred=None)
+        self.metrics.segments.append(record)
+        runner = SegmentRunner(seg, table.schema, self.backend, self.pde,
+                               record)
+        runner._passthrough = True
+        return runner
 
     def _compile_join(self, node: JoinNode) -> Compiled:
         """One join boundary.  Because _compile recurses left-then-right and
@@ -1915,13 +1958,19 @@ class Executor:
             scanc, runner = self._make_runner(seg, "sort")
             src = self._segment_source_rdd(scanc, seg, ensure_nonempty=True)
             names = seg.output_names(self.catalog)
+            # ORDER BY <dot-product score> DESC LIMIT k over a segment
+            # whose lanes survive projection: the per-partition top-k may
+            # run the Pallas topk_similarity kernel (DESIGN.md §15.3)
+            topk = (_match_topk(seg, keys[0][0], names)
+                    if limit is not None and len(keys) == 1 and keys[0][1]
+                    else None)
 
             if self._fusion_mode != "off":
                 # whole-stage (DESIGN.md §14): the sorted prefix ships as
                 # one zero-copy piece straight into the shuffle block
                 from .stage import StageRunner
                 stage = StageRunner(runner, single_bucket(), 1,
-                                    self._fusion_mode, self.pde)
+                                    self._fusion_mode, self.pde, topk=topk)
                 map_rdd = src.map_partitions(
                     lambda s, b: stage.run_sort_stage(b, keys, limit))
             else:
@@ -2017,6 +2066,44 @@ class Executor:
         self.ctx.scheduler.run_map_stage(dep)
         rdd = ShuffledRDD(dep, [[0]], final)
         return Compiled(rdd, child.names)
+
+
+def _match_topk(seg: PipelineSegment, key: str,
+                output_names: List[str]) -> Optional[Tuple[List[str],
+                                                           np.ndarray]]:
+    """(lane columns, query weights) when the sort key is a dot-product
+    score — a sum of Col*Lit products over distinct numeric lanes, the
+    shape `SharkFrame.similarity_join` (and its SQL twin) emits.  The lanes
+    must survive the segment's projection: the kernel recomputes the tiled
+    dot product from the lane columns of the segment output.  Returns None
+    for anything else, keeping the generic lexsort path."""
+    if seg.exprs is None:
+        return None
+    expr = next((e for n, e in seg.exprs if n == key), None)
+    if expr is None:
+        return None
+    terms: List[Tuple[str, float]] = []
+
+    def walk(e: Expr) -> bool:
+        if isinstance(e, BinOp) and e.op == "+":
+            return walk(e.left) and walk(e.right)
+        if isinstance(e, BinOp) and e.op == "*":
+            a, b = e.left, e.right
+            if isinstance(a, Col) and isinstance(b, Lit) and _is_num(b.value):
+                terms.append((a.name, float(b.value)))
+                return True
+            if isinstance(b, Col) and isinstance(a, Lit) and _is_num(a.value):
+                terms.append((b.name, float(a.value)))
+                return True
+        return False
+
+    if not walk(expr) or len(terms) < 2:
+        return None
+    lanes = [n for n, _ in terms]
+    out = set(output_names)
+    if len(set(lanes)) != len(lanes) or not all(n in out for n in lanes):
+        return None
+    return lanes, np.asarray([w for _, w in terms], np.float64)
 
 
 def _empty_batch(names: List[str], schema) -> PartitionBatch:

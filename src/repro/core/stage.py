@@ -38,7 +38,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .batch import PartitionBatch
-from .pde import PDEConfig, decide_stage_fusion
+from .pde import PDEConfig, decide_segment_backend, decide_stage_fusion
 from .plan import AggSpec
 from .shuffle import BucketedBatch, split_bucket_pieces
 
@@ -47,12 +47,17 @@ class StageRunner:
     """Fused map-stage driver wrapping one SegmentRunner (physical.py)."""
 
     def __init__(self, runner, partitioner: Callable, num_buckets: int,
-                 mode: str, cfg: PDEConfig):
+                 mode: str, cfg: PDEConfig, topk=None):
         self.runner = runner
         self.partitioner = partitioner
         self.num_buckets = num_buckets
         self.mode = mode                     # "on" | "force"
         self.cfg = cfg
+        # (lane columns, query weights) when the sort stage's key is a
+        # dot-product similarity score (physical._match_topk): eligible
+        # partitions replace the host lexsort with the Pallas
+        # topk_similarity kernel (DESIGN.md §15.3)
+        self.topk = topk
 
     def _gate(self, num_rows: int) -> bool:
         d = decide_stage_fusion(num_rows, self.mode, self.runner.backend,
@@ -84,22 +89,52 @@ class StageRunner:
                        keys: List[Tuple[str, bool]],
                        limit: Optional[int]):
         """Segment + per-partition top-k; the sorted prefix ships as one
-        zero-copy piece (single reducer) — no host-assembly copy."""
-        from .physical import _sort_indices
+        zero-copy piece (single reducer) — no host-assembly copy.
+
+        Similarity-scored stages (self.topk set) route eligible partitions
+        to the Pallas topk_similarity kernel: the tiled dot-product +
+        running top-k selects the same rows, same order, as the lexsort
+        oracle (ties broken by row index, both paths)."""
         if not self._gate(batch.num_rows):
             b = self.runner.run(batch)
-            idx = _sort_indices(b, keys)
-            if limit is not None:
-                idx = idx[:limit]
-            return b.take(idx)
+            return b.take(self._sort_limit_indices(b, keys, limit))
         b, route = self.runner.run_routed(batch, fused=True)
-        idx = _sort_indices(b, keys)
-        if limit is not None:
-            idx = idx[:limit]
-        b = b.take(idx)
+        b = b.take(self._sort_limit_indices(b, keys, limit))
         if route == "numpy":
             return b
         return BucketedBatch([b])
+
+    def _sort_limit_indices(self, b: PartitionBatch,
+                            keys: List[Tuple[str, bool]],
+                            limit: Optional[int]) -> np.ndarray:
+        from .physical import _sort_indices
+        if self.topk is not None and limit is not None and b.num_rows:
+            idx = self._topk_kernel_indices(b, limit)
+            if idx is not None:
+                return idx
+        idx = _sort_indices(b, keys)
+        if limit is not None:
+            idx = idx[:limit]
+        return idx
+
+    def _topk_kernel_indices(self, b: PartitionBatch,
+                             k: int) -> Optional[np.ndarray]:
+        """Row indices of the top-k similarity candidates via the Pallas
+        kernel, or None when the PDE routes this partition elsewhere."""
+        from ..kernels.ops import on_tpu
+        d = decide_segment_backend(b.num_rows, "topk_similarity", None,
+                                   on_tpu(), self.cfg)
+        if d.route != "topk_similarity":
+            return None
+        lanes, weights = self.topk
+        cols = [b.col(n) for n in lanes]
+        if any(c.is_string for c in cols):
+            return None
+        from ..kernels import ops
+        x = np.stack([np.asarray(c.arr) for c in cols], axis=1)
+        _scores, idx = ops.topk_similarity(x, weights, k)
+        self.runner._note_route("topk_similarity")
+        return np.asarray(idx)
 
     def run_limit_stage(self, batch: PartitionBatch, n: int):
         """Segment + head(n), shipped as one zero-copy piece: surviving

@@ -8,17 +8,21 @@ Mosaic.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from . import colscan as _colscan
 from . import dictdecode as _dd
 from . import groupby_mxu as _gb
 from . import radix_partition as _rp
 from . import segmented_merge as _sm
+from . import topk_similarity as _tk
+from . import train_grad as _tg
 
 
 @functools.lru_cache(maxsize=1)
@@ -31,6 +35,13 @@ def on_tpu() -> bool:
 
 def _interp() -> bool:
     return not on_tpu()
+
+
+def _acc_ctx(acc_dtype: str):
+    """x64 scope for float64 accumulation (CPU interpret parity runs);
+    the engine's other kernel call sites wrap in expr._x64() themselves —
+    the analytics wrappers below self-wrap so stage/trainer stay simple."""
+    return enable_x64() if acc_dtype == "float64" else contextlib.nullcontext()
 
 
 def colscan(filter_col, agg_col, lo, hi, acc_dtype: str = "float32"):
@@ -108,6 +119,31 @@ def double_buffer_map(fn, chunks):
     if inflight is not None:
         out.append(jax.tree_util.tree_map(np.asarray, inflight))
     return out
+
+
+def topk_similarity(x, q, k: int, acc_dtype: str = None):
+    """(scores, row indices) of the top-k dot-product matches of query `q`
+    in candidate matrix `x` — scores descending, ties by ascending row
+    index, matching `np.argsort(-scores, kind="stable")[:k]` exactly
+    (DESIGN.md §15.3).  Returns numpy arrays of length min(k, rows)."""
+    if acc_dtype is None:
+        acc_dtype = "float32" if on_tpu() else "float64"
+    with _acc_ctx(acc_dtype):
+        s, i = _tk.topk_similarity(jnp.asarray(x), jnp.asarray(q), int(k),
+                                   interpret=_interp(), acc_dtype=acc_dtype)
+        return np.asarray(s), np.asarray(i)
+
+
+def train_grad(x, y, w, kind: str = "logistic", acc_dtype: str = None):
+    """Unnormalized batch gradient `x.T @ (pred(x @ w) - y)` as a numpy
+    (d,) vector — the Pallas route of `pde.decide_train_backend`."""
+    if acc_dtype is None:
+        acc_dtype = "float32" if on_tpu() else "float64"
+    with _acc_ctx(acc_dtype):
+        return np.asarray(_tg.train_grad(jnp.asarray(x), jnp.asarray(y),
+                                         jnp.asarray(w), kind,
+                                         interpret=_interp(),
+                                         acc_dtype=acc_dtype))
 
 
 def radix_partition(keys_u32, num_buckets: int, with_counts: bool = True):

@@ -7,14 +7,21 @@ fault tolerance.  Every estimator's `fit()` accepts a SharkFrame directly
 (`clf.fit(frame, feature_cols=[...], label_col="y")`), so the paper's
 Listing-1 pipeline is one fluent chain.
 
-The numeric kernels (gradients, distances, centroid updates) are jit-compiled
-JAX: on TPU they hit the MXU; on this CPU container they validate semantics.
+Analytics are a first-class COMPILED workload (DESIGN.md §15): feature
+partitions stay encoded (`FeatureRDD`), each training iteration is a
+PDE-scheduled map stage whose per-partition step fuses block decode +
+gradient/assignment into one XLA program (or the Pallas `train_grad`
+kernel), and the routes/timings land in the same ExecMetrics the SQL
+executor uses.  On TPU the steps hit the MXU; on this CPU container they
+validate semantics.
 """
 
-from .featurize import as_features_rdd, table_rdd_to_features
+from .featurize import FeatureRDD, as_features_rdd, table_rdd_to_features
 from .logreg import LogisticRegression
 from .linreg import LinearRegression
 from .kmeans import KMeans
+from .trainer import IterativeTrainer
 
-__all__ = ["as_features_rdd", "table_rdd_to_features", "LogisticRegression",
+__all__ = ["FeatureRDD", "IterativeTrainer", "as_features_rdd",
+           "table_rdd_to_features", "LogisticRegression",
            "LinearRegression", "KMeans"]

@@ -1,40 +1,20 @@
-"""Distributed k-means clustering (paper §6.5, Figure 12).
+"""Distributed k-means clustering (paper §6.5, Figure 12; DESIGN.md §15.2).
 
-Per iteration, every cached partition computes, with one jit-compiled kernel,
-the per-centroid point sums and counts (assignment via MXU-friendly pairwise
-distances); the master reduces these and recomputes centroids.  The workflow
-is the paper's: SQL select -> feature extraction -> 10 iterations, all
-in-memory.
+Per iteration, every cached feature partition computes its per-centroid
+point sums/counts and objective inside one fused jitted assemble+assign
+step (assignment via MXU-friendly expansion-trick distances; encoded
+block decode traced into the same program), scheduled as a map stage
+under the PDE; the master reduces the stats and recomputes centroids.
+The workflow is the paper's: SQL select -> feature extraction -> 10
+iterations, all in-memory.
 """
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-
-from ..core.batch import PartitionBatch
-from ..core.expr import ColumnVal
-from ..core.rdd import RDD
-
-
-@jax.jit
-def _assign_kernel(centroids: jnp.ndarray, x: jnp.ndarray
-                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (per-centroid sums, per-centroid counts, objective)."""
-    # pairwise squared distances via the expansion trick: one matmul
-    x2 = jnp.sum(x * x, axis=1, keepdims=True)            # n x 1
-    c2 = jnp.sum(centroids * centroids, axis=1)           # k
-    xc = x @ centroids.T                                  # n x k (MXU)
-    d2 = x2 - 2.0 * xc + c2[None, :]
-    assign = jnp.argmin(d2, axis=1)
-    obj = jnp.sum(jnp.min(d2, axis=1))
-    onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=x.dtype)
-    sums = onehot.T @ x                                   # k x d (MXU)
-    counts = jnp.sum(onehot, axis=0)
-    return sums, counts, obj
 
 
 class KMeans:
@@ -45,41 +25,28 @@ class KMeans:
         rng = np.random.default_rng(seed)
         self.centroids = rng.normal(size=(k, dims)).astype(np.float32)
         self.objective_history: List[float] = []
+        self.metrics = None
 
     def fit(self, data, feature_cols=None, label_col=None,
-            map_rows=None) -> "KMeans":
+            map_rows=None, dtype=np.float32) -> "KMeans":
         """`data`: a features RDD, or a SharkFrame / TableRDD plus
         `feature_cols` (featurized on the same lineage graph).  Clustering
         ignores labels, but `label_col` still excludes that column from the
         default feature set when `feature_cols` is omitted."""
         from .featurize import as_features_rdd
+        from .trainer import IterativeTrainer
         features_rdd = as_features_rdd(data, feature_cols, label_col,
-                                       map_rows)
+                                       map_rows, dtype)
         features_rdd.cache()
-        sched = features_rdd.ctx.scheduler
+        trainer = IterativeTrainer(features_rdd, "kmeans", dtype=dtype)
+        self.metrics = trainer.metrics
         for _ in range(self.iterations):
-            c = jnp.asarray(self.centroids)
-
-            def map_stats(split: int, batch: PartitionBatch) -> PartitionBatch:
-                x = jnp.asarray(np.asarray(batch.col("features").arr))
-                sums, counts, obj = _assign_kernel(c, x)
-                return PartitionBatch({
-                    "sums": ColumnVal(np.asarray(sums)[None]),
-                    "counts": ColumnVal(np.asarray(counts)[None]),
-                    "obj": ColumnVal(np.array([float(obj)]))})
-
-            parts = sched.run_result_stage(
-                features_rdd.map_partitions(map_stats))
-            sums = np.sum([np.asarray(b.col("sums").arr)[0] for b in parts],
-                          axis=0)
-            counts = np.sum([np.asarray(b.col("counts").arr)[0]
-                             for b in parts], axis=0)
-            self.objective_history.append(
-                float(sum(np.asarray(b.col("obj").arr)[0] for b in parts)))
+            sums, counts, obj = trainer.kmeans_iteration(self.centroids)
+            self.objective_history.append(obj)
             nonzero = counts > 0
             self.centroids = self.centroids.copy()
-            self.centroids[nonzero] = (sums[nonzero]
-                                       / counts[nonzero, None]).astype(np.float32)
+            self.centroids[nonzero] = (
+                sums[nonzero] / counts[nonzero, None]).astype(np.float32)
         return self
 
     def predict(self, x: np.ndarray) -> np.ndarray:

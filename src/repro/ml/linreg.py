@@ -2,26 +2,17 @@
 regression, logistic regression, and k-means").
 
 Gradient-descent least squares over cached feature partitions, same
-map-gradient / reduce-sum structure as logistic regression.
+PDE-scheduled map-stage / master-reduce structure as logistic regression
+(DESIGN.md §15.2) — routes: numpy oracle / fused jitted assemble+train /
+Pallas `train_grad` kernel.
 """
 
 from __future__ import annotations
 
 from typing import List
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-
-from ..core.batch import PartitionBatch
-from ..core.expr import ColumnVal
-from ..core.rdd import RDD
-
-
-@jax.jit
-def _grad_kernel(w: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-    r = x @ w - y
-    return x.T @ r
 
 
 class LinearRegression:
@@ -31,32 +22,23 @@ class LinearRegression:
         self.lr = lr
         self.iterations = iterations
         self.w = np.zeros(dims, np.float32)
+        self.metrics = None
 
     def fit(self, data, feature_cols=None, label_col=None,
-            map_rows=None) -> "LinearRegression":
+            map_rows=None, dtype=np.float32) -> "LinearRegression":
         """`data`: a features RDD, or a SharkFrame / TableRDD plus
-        `feature_cols`/`label_col` (featurized on the same lineage graph)."""
+        `feature_cols`/`label_col` (featurized on the same lineage
+        graph)."""
         from .featurize import as_features_rdd
+        from .trainer import IterativeTrainer
         features_rdd = as_features_rdd(data, feature_cols, label_col,
-                                       map_rows)
+                                       map_rows, dtype)
         features_rdd.cache()
-        sched = features_rdd.ctx.scheduler
+        trainer = IterativeTrainer(features_rdd, "linreg", dtype=dtype)
+        self.metrics = trainer.metrics
         for _ in range(self.iterations):
-            w = jnp.asarray(self.w)
-
-            def map_grad(split: int, batch: PartitionBatch) -> PartitionBatch:
-                x = jnp.asarray(np.asarray(batch.col("features").arr))
-                y = jnp.asarray(np.asarray(batch.col("label").arr))
-                g = _grad_kernel(w, x, y)
-                return PartitionBatch({
-                    "grad": ColumnVal(np.asarray(g)[None, :]),
-                    "count": ColumnVal(np.array([x.shape[0]], np.int64))})
-
-            parts = sched.run_result_stage(
-                features_rdd.map_partitions(map_grad))
-            g = np.sum([np.asarray(b.col("grad").arr)[0] for b in parts], axis=0)
-            n = sum(int(np.asarray(b.col("count").arr)[0]) for b in parts)
-            self.w = self.w - self.lr * (g / max(n, 1)).astype(np.float32)
+            g, n = trainer.gradient_iteration(self.w, "linear")
+            self.w = self.w - self.lr * (g / max(n, 1)).astype(self.w.dtype)
         return self
 
     def predict(self, x: np.ndarray) -> np.ndarray:

@@ -1,32 +1,26 @@
 """Distributed logistic regression over RDD partitions (paper §4.1 Listing 1,
-§6.5 Figure 11).
+§6.5 Figure 11; DESIGN.md §15.2).
 
-Each iteration maps a jit-compiled gradient kernel over every cached feature
-partition and reduces the per-partition gradients on the master — exactly the
-paper's `data.map(gradient).reduce(+)` loop.  Because the feature RDD is
-cached in worker memory and gradients are computed where the data lives,
-per-iteration cost is one pass of MXU-bound compute plus an O(dims)
-aggregation; a lost worker only recomputes its partitions (lineage).
+Each iteration is a PDE-scheduled map stage over the cached feature RDD:
+every partition routes through `decide_train_backend` — numpy oracle,
+fused jitted assemble+train (decode of encoded blocks traced into the XLA
+program), or the Pallas `train_grad` kernel — and the master reduces the
+per-partition gradients, exactly the paper's `data.map(gradient).reduce(+)`
+loop.  Per-iteration cost on cached encoded partitions is one pass of
+MXU-bound compute plus an O(dims) aggregation; a lost worker only
+recomputes its partitions (lineage), even mid-iteration.
+
+After `fit()`, `self.metrics` (an ExecMetrics) carries one SegmentRecord
+per iteration with the routes taken, plus `train_iterations` timings.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-from ..core.batch import PartitionBatch
-from ..core.rdd import RDD
-
-
-@functools.partial(jax.jit, static_argnames=())
-def _grad_kernel(w: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-    """Sum of per-point logistic gradients: x^T (sigmoid(xw) - y)."""
-    p = jax.nn.sigmoid(x @ w)
-    return x.T @ (p - y)
 
 
 @jax.jit
@@ -44,50 +38,45 @@ class LogisticRegression:
         rng = np.random.default_rng(seed)
         self.w = rng.normal(scale=0.01, size=dims).astype(np.float32)
         self.loss_history: List[float] = []
+        self.metrics = None
 
     def fit(self, data, feature_cols=None, label_col=None,
-            map_rows=None) -> "LogisticRegression":
-        """Train over feature partitions carrying 'features' (n x d) and
-        'label'.  `data` is a features RDD, or a SharkFrame / TableRDD with
+            map_rows=None, dtype=np.float32) -> "LogisticRegression":
+        """Train over feature partitions.  `data` is a FeatureRDD (or a
+        legacy featurized RDD), or a SharkFrame / TableRDD with
         `feature_cols`/`label_col` naming the columns to featurize — the
         paper's Listing-1 pipeline as one fluent chain on one lineage
-        graph."""
+        graph.  `dtype` sets the feature compute dtype when featurizing
+        here (float32 default; see featurize module docstring)."""
         from .featurize import as_features_rdd
+        from .trainer import IterativeTrainer
         features_rdd = as_features_rdd(data, feature_cols, label_col,
-                                       map_rows)
+                                       map_rows, dtype)
         features_rdd.cache()
-        sched = features_rdd.ctx.scheduler
-        n_total = None
-        for it in range(self.iterations):
-            w = jnp.asarray(self.w)
-
-            def map_grad(split: int, batch: PartitionBatch) -> PartitionBatch:
-                x = jnp.asarray(np.asarray(batch.col("features").arr))
-                y = jnp.asarray(np.asarray(batch.col("label").arr))
-                g = _grad_kernel(w, x, y)
-                from ..core.expr import ColumnVal
-                return PartitionBatch({
-                    "grad": ColumnVal(np.asarray(g)[None, :]),
-                    "count": ColumnVal(np.array([x.shape[0]], np.int64))})
-
-            grads = sched.run_result_stage(features_rdd.map_partitions(map_grad))
-            g = np.sum([np.asarray(b.col("grad").arr)[0] for b in grads], axis=0)
-            n_total = int(sum(np.asarray(b.col("count").arr)[0] for b in grads))
-            self.w = self.w - self.lr * (g / max(n_total, 1)).astype(np.float32)
+        trainer = IterativeTrainer(features_rdd, "logreg", dtype=dtype)
+        self.metrics = trainer.metrics
+        for _ in range(self.iterations):
+            g, n = trainer.gradient_iteration(self.w, "logistic")
+            self.w = self.w - self.lr * (g / max(n, 1)).astype(self.w.dtype)
         return self
 
     def loss(self, data, feature_cols=None, label_col=None) -> float:
-        from .featurize import as_features_rdd
+        from ..core.batch import PartitionBatch
+        from ..core.expr import ColumnVal
+        from .featurize import (FeatureRDD, as_features_rdd,
+                                partition_xy_host)
         features_rdd = as_features_rdd(data, feature_cols, label_col)
+        fcols = getattr(features_rdd, "feature_cols", None)
+        lcol = getattr(features_rdd, "label_col", None)
         sched = features_rdd.ctx.scheduler
         w = jnp.asarray(self.w)
 
         def map_loss(split: int, batch: PartitionBatch) -> PartitionBatch:
-            x = jnp.asarray(np.asarray(batch.col("features").arr))
-            y = jnp.asarray(np.asarray(batch.col("label").arr))
-            from ..core.expr import ColumnVal
+            x, y = partition_xy_host(batch, fcols, lcol, np.float32)
+            val = float(_loss_kernel(w, jnp.asarray(x),
+                                     jnp.asarray(y.astype(np.float32))))
             return PartitionBatch({
-                "loss": ColumnVal(np.array([float(_loss_kernel(w, x, y))])),
+                "loss": ColumnVal(np.array([val])),
                 "count": ColumnVal(np.array([x.shape[0]], np.int64))})
 
         parts = sched.run_result_stage(features_rdd.map_partitions(map_loss))

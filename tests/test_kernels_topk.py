@@ -1,0 +1,97 @@
+"""Pallas `topk_similarity` and `train_grad` kernels vs numpy oracles
+(interpret mode on CPU — the TPU kernel routes without hardware).
+
+Tie-breaking parity: the kernel orders by (score desc, row index asc) on
+the scores IT computes.  With integer-valued inputs the dot products are
+exact in f64 regardless of reduction order, so genuine ties exist and the
+kernel's order must match `np.argsort(-scores, kind="stable")` exactly —
+including the k > num_rows and single-row edges.
+"""
+
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+pytestmark = [pytest.mark.tier1, pytest.mark.kernels_interpret]
+
+RNG = np.random.default_rng(3)
+
+
+def _oracle(x, q, k):
+    s = x.astype(np.float64) @ q.astype(np.float64)
+    idx = np.argsort(-s, kind="stable")[: min(k, len(s))]
+    return s[idx], idx
+
+
+@pytest.mark.parametrize("n,d,k", [
+    (1, 1, 1),
+    (2048, 5, 1),
+    (5000, 7, 10),
+    (1024, 128, 128),       # d exactly one lane tile, k == pad width
+    (4096, 16, 200),
+    (300, 3, 500),          # k > num_rows: trimmed to n
+])
+def test_topk_similarity_integer_ties_exact(n, d, k):
+    """Integer-valued lanes: exact products, genuine ties, exact order."""
+    x = RNG.integers(-4, 5, size=(n, d)).astype(np.float64)
+    q = RNG.integers(-3, 4, size=d).astype(np.float64)
+    want_s, want_i = _oracle(x, q, k)
+    if n > 100:             # the sweep must actually contain ties
+        s = x @ q
+        assert len(np.unique(s)) < n
+    got_s, got_i = ops.topk_similarity(x, q, k)
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-12)
+
+
+@pytest.mark.parametrize("n,d,k", [(3000, 12, 25), (777, 40, 33)])
+def test_topk_similarity_continuous(n, d, k):
+    """Continuous data: scores are distinct, so ordering is unambiguous
+    (rounding differences between the kernel's padded matmul and BLAS
+    cannot flip an order separated by more than an ulp)."""
+    x = RNG.normal(size=(n, d))
+    q = RNG.normal(size=d)
+    want_s, want_i = _oracle(x, q, k)
+    got_s, got_i = ops.topk_similarity(x, q, k)
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-9)
+
+
+def test_topk_similarity_all_tied():
+    """Every row identical: top-k must be the first k row indices."""
+    x = np.ones((512, 6))
+    q = np.arange(6, dtype=np.float64)
+    got_s, got_i = ops.topk_similarity(x, q, 20)
+    np.testing.assert_array_equal(got_i, np.arange(20))
+    np.testing.assert_allclose(got_s, np.full(20, q.sum()))
+
+
+def test_topk_similarity_block_boundary():
+    """n a multiple of the row-tile size, plus one-off boundaries: padding
+    rows must never surface as results."""
+    for n in (1024, 1023, 1025, 2048):
+        x = RNG.integers(-2, 3, size=(n, 4)).astype(np.float64)
+        q = np.array([1.0, -1.0, 2.0, 0.5])
+        want_s, want_i = _oracle(x, q, 64)
+        got_s, got_i = ops.topk_similarity(x, q, 64)
+        np.testing.assert_array_equal(got_i, want_i)
+        assert got_i.max() < n
+
+
+@pytest.mark.parametrize("kind", ["logistic", "linear"])
+def test_train_grad_parity(kind):
+    n, d = 4096, 24
+    x = RNG.normal(size=(n, d))
+    w = RNG.normal(size=d)
+    y = (RNG.uniform(size=n) < 0.5).astype(np.float64)
+    got = ops.train_grad(x, y, w, kind)
+    z = x @ w
+    p = 1.0 / (1.0 + np.exp(-z)) if kind == "logistic" else z
+    want = x.T @ (p - y)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_train_grad_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        ops.train_grad(np.ones((4, 2)), np.ones(4), np.ones(2), "huber")

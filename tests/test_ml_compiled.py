@@ -1,0 +1,213 @@
+"""Compiled analytics tier (DESIGN.md §15): encoded feature pipelines,
+PDE-scheduled iterative training, and their fault-tolerance story.
+
+The tentpole claims under test:
+
+  * differential parity — the encoded FeatureRDD path (decode fused into
+    the jitted assemble+train step) produces BIT-IDENTICAL per-iteration
+    gradients and final weights vs the host-materialized dense path, under
+    forced float64 (the decode recipes are exact integer ops, so the XLA
+    matmuls see identical operands);
+  * zero host decode — training over cached encoded partitions never
+    moves `expr.DECODE_COUNTERS`;
+  * scheduling — every iteration is a map stage with a `<train:...>`
+    segment record and per-route counts in ExecMetrics;
+  * chaos — a worker killed mid-iteration (its cached feature blocks AND
+    its map outputs vanish) costs a lineage recompute, not correctness:
+    final weights equal the failure-free run bitwise.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import DType, Schema, SharkSession
+from repro.core.expr import DECODE_COUNTERS
+from repro.core.pde import PDEConfig, decide_train_backend
+from repro.ml import (FeatureRDD, IterativeTrainer, LogisticRegression,
+                      KMeans, table_rdd_to_features)
+
+pytestmark = pytest.mark.tier1
+
+D = 5
+ROWS = 4000
+
+
+def _int_points_session(rows=ROWS, parts=4):
+    """Small-range int64 columns: the load task FOR/BITPACK-encodes them,
+    so the encoded pipeline has real block recipes to fuse."""
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=D)
+    raw = rng.integers(0, 16, size=(rows, D)).astype(np.int64)
+    cols = {f"f{i}": raw[:, i] + 500 for i in range(D)}
+    cols["label"] = ((raw - 8) @ w > 0).astype(np.int64)
+    sess = SharkSession(num_workers=2, max_threads=2)
+    sess.create_table("pts", Schema.of(
+        **{f"f{i}": DType.INT64 for i in range(D)}, label=DType.INT64),
+        cols, num_partitions=parts)
+    return sess, cols
+
+
+def _feats(sess, map_rows=None, dtype=np.float32):
+    frame = sess.sql("SELECT * FROM pts", lazy=True)
+    return table_rdd_to_features(frame, [f"f{i}" for i in range(D)], "label",
+                                 map_rows=map_rows, dtype=dtype)
+
+
+def test_encoded_partitions_stay_encoded_and_labels_keep_dtype():
+    sess, _ = _int_points_session()
+    feats = _feats(sess)
+    assert isinstance(feats, FeatureRDD)
+    batches = feats.collect()
+    for b in batches:
+        assert np.asarray(b.col("label").arr).dtype == np.int64
+        # block-backed pass-through: the feature column still has its block
+        assert b.col("f0").block is not None
+    # legacy dense layout (map_rows) also preserves the label dtype
+    dense = _feats(sess, map_rows=lambda x: x).collect()
+    for b in dense:
+        assert np.asarray(b.col("label").arr).dtype == np.int64
+        assert b.col("features").arr.dtype == np.float32
+    sess.shutdown()
+
+
+def test_differential_parity_encoded_vs_materialized_f64():
+    """Per-iteration gradients and final weights bit-identical between the
+    encoded (decode-in-trace) and materialized (decode_np + stack) paths
+    under float64."""
+    sess, _ = _int_points_session()
+    enc = _feats(sess, dtype=np.float64)
+    mat = _feats(sess, map_rows=lambda x: x, dtype=np.float64)
+    enc.cache()
+    mat.cache()
+    t_enc = IterativeTrainer(enc, "parity-enc", dtype=np.float64)
+    t_mat = IterativeTrainer(mat, "parity-mat", dtype=np.float64)
+    w = np.zeros(D, np.float64)
+    for i in range(4):
+        g_enc, n_enc = t_enc.gradient_iteration(w, "logistic")
+        g_mat, n_mat = t_mat.gradient_iteration(w, "logistic")
+        assert n_enc == n_mat == ROWS
+        assert np.array_equal(g_enc, g_mat), (i, g_enc - g_mat)
+        w = w - 0.5 * g_enc / ROWS
+    sess.shutdown()
+
+
+def test_encoded_training_never_decodes_host_side():
+    sess, _ = _int_points_session()
+    feats = _feats(sess)
+    feats.cache()
+    clf = LogisticRegression(dims=D, lr=0.5, iterations=2)
+    clf.fit(feats)                       # materializes the cache
+    before = dict(DECODE_COUNTERS)
+    clf.fit(feats)
+    clf.fit(feats)
+    delta = {k: DECODE_COUNTERS[k] - before[k] for k in before}
+    assert delta["numeric_blocks"] == 0 and delta["numeric_rows"] == 0, delta
+    sess.shutdown()
+
+
+def test_train_iterations_recorded_with_routes():
+    sess, _ = _int_points_session()
+    feats = _feats(sess)
+    feats.cache()
+    clf = LogisticRegression(dims=D, lr=0.5, iterations=3).fit(feats)
+    m = clf.metrics
+    assert m is not None
+    train_segs = [s for s in m.segments if s.consumer == "train"]
+    assert len(train_segs) == 3                     # one record per iteration
+    for seg in train_segs:
+        assert seg.table == "<train:logreg>"
+        assert sum(seg.routes.values()) == 4        # one route per partition
+        assert seg.rows_in == ROWS
+    assert len(m.train_iterations) == 3
+    for it in m.train_iterations:
+        assert it["rows"] == ROWS and it["routes"]
+    # kmeans records its own segment + objective must improve
+    km = KMeans(k=3, dims=D, iterations=4).fit(feats)
+    assert km.objective_history[-1] < km.objective_history[0]
+    assert len(km.metrics.train_iterations) == 4
+    sess.shutdown()
+
+
+def test_decide_train_backend_routing():
+    cfg = PDEConfig()
+    assert decide_train_backend(10, D, on_tpu=False, cfg=cfg).route == "numpy"
+    assert decide_train_backend(
+        10_000, D, on_tpu=False, cfg=cfg).route == "jit"
+    assert decide_train_backend(
+        10_000, D, kernel_eligible="train_grad", on_tpu=True,
+        cfg=cfg).route == "train_grad"
+    forced = PDEConfig(segment_force_kernels=True)
+    assert decide_train_backend(
+        10_000, D, kernel_eligible="train_grad", on_tpu=False,
+        cfg=forced).route == "train_grad"
+    # below the kernel threshold the fused jit step still wins
+    assert decide_train_backend(
+        1000, D, kernel_eligible="train_grad", on_tpu=True,
+        cfg=cfg).route == "jit"
+
+
+@pytest.mark.kernels_interpret
+def test_train_grad_kernel_route_parity():
+    """Forced kernels: the gradient runs through the Pallas train_grad
+    kernel (interpret mode on CPU) and matches the numpy-oracle route."""
+    sess, _ = _int_points_session()
+    cfg = PDEConfig(segment_force_kernels=True, segment_kernel_min_rows=256)
+    feats = _feats(sess)
+    feats.cache()
+    tr_k = IterativeTrainer(feats, "kernel", cfg=cfg)
+    tr_n = IterativeTrainer(feats, "oracle",
+                            cfg=PDEConfig(segment_min_compiled_rows=10**9))
+    w = np.zeros(D, np.float32)
+    g_k, n_k = tr_k.gradient_iteration(w, "logistic")
+    g_n, n_n = tr_n.gradient_iteration(w, "logistic")
+    assert n_k == n_n == ROWS
+    assert tr_k.metrics.segments[0].routes.get("train_grad", 0) > 0, \
+        tr_k.metrics.segments[0].routes
+    assert tr_n.metrics.segments[0].routes.get("numpy", 0) > 0
+    np.testing.assert_allclose(g_k, g_n, rtol=5e-4, atol=5e-4)
+    sess.shutdown()
+
+
+def test_chaos_worker_killed_mid_iteration_model_identical():
+    """Kill a worker between an iteration's map stage and its fetch: the
+    shuffle outputs AND that worker's cached feature blocks vanish, the
+    trainer recovers from lineage, and the final model is bitwise equal to
+    the failure-free run."""
+    def run(chaos: bool) -> np.ndarray:
+        sess, _ = _int_points_session()
+        sched = sess.ctx.scheduler
+        if chaos:
+            orig = sched.run_map_stage
+            state = {"i": 0}
+
+            def chaotic(dep):
+                stats = orig(dep)
+                state["i"] += 1
+                if state["i"] == 2:      # mid-training: after iteration 2's
+                    w = sorted(sched.alive)[0]   # map stage, before fetch
+                    sched.kill_worker(w)
+                    sched.add_worker()
+                return stats
+
+            sched.run_map_stage = chaotic
+        feats = _feats(sess)
+        feats.cache()
+        clf = LogisticRegression(dims=D, lr=0.5, iterations=5).fit(feats)
+        sess.shutdown()
+        return clf.w
+
+    w_chaos = run(chaos=True)
+    w_clean = run(chaos=False)
+    assert np.array_equal(w_chaos, w_clean)
+
+
+def test_string_feature_column_rejected():
+    sess = SharkSession(num_workers=2)
+    sess.create_table("t", Schema.of(s=DType.STRING, y=DType.INT64),
+                      {"s": np.array(["a", "b"] * 50),
+                       "y": np.arange(100, dtype=np.int64)})
+    feats = table_rdd_to_features(sess.sql("SELECT * FROM t", lazy=True),
+                                  ["s"], "y")
+    with pytest.raises(Exception, match="string column"):
+        feats.collect()
+    sess.shutdown()

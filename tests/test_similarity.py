@@ -1,0 +1,171 @@
+"""Vector analytics (DESIGN.md §15.3): embedding lane columns in the
+catalog, `similarity_join` on the frame surface, its SQL-twin plan, the
+Pallas top-k route, and correctness under server concurrency.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import DType, Schema, SharkSession
+from repro.core.frame import FrameBindError
+from repro.core.functions import col
+from repro.core.pde import PDEConfig
+
+pytestmark = pytest.mark.tier1
+
+N, DIM = 6000, 8
+
+
+def _docs_session(rows=N, **kw):
+    rng = np.random.default_rng(0)
+    emb = rng.normal(size=(rows, DIM)).astype(np.float32)
+    cat = rng.integers(0, 4, rows).astype(np.int64)
+    sess = SharkSession(num_workers=2, **kw)
+    sess.create_table("docs", Schema.of(id=DType.INT64, cat=DType.INT64),
+                      {"id": np.arange(rows, dtype=np.int64), "cat": cat,
+                       "emb": emb}, num_partitions=4)
+    return sess, emb, cat
+
+
+def _oracle(emb, cat, c, q, k):
+    s = emb.astype(np.float64) @ q
+    idx = np.nonzero(cat == c)[0] if c is not None else np.arange(len(s))
+    return idx[np.argsort(-s[idx], kind="stable")[:k]]
+
+
+def test_embedding_lanes_in_catalog():
+    sess, emb, _ = _docs_session()
+    t = sess.catalog.get("docs")
+    assert t.embeddings == {"emb": [f"emb_{i}" for i in range(DIM)]}
+    got = sess.sql_np("SELECT emb_3 FROM docs")["emb_3"]
+    np.testing.assert_array_equal(got, emb[:, 3])
+    sess.shutdown()
+
+
+def test_embedding_lane_name_collision_rejected():
+    from repro.core.columnar import from_arrays
+    with pytest.raises(ValueError, match="emb_0"):
+        from_arrays("t", Schema.of(emb_0=DType.FLOAT32),
+                    {"emb_0": np.zeros(4, np.float32),
+                     "emb": np.zeros((4, 2), np.float32)}, 1)
+
+
+def test_similarity_join_matches_oracle_with_filter_below():
+    sess, emb, cat = _docs_session()
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=DIM)
+    f = sess.table("docs").filter(col("cat") == 2).similarity_join(
+        "emb", q, 25)
+    plan = f.explain()
+    # the filter sits BELOW the score projection: it prunes before scoring
+    assert plan.index("Filter") > plan.index("Project")
+    res = f.to_numpy()
+    np.testing.assert_array_equal(res["id"], _oracle(emb, cat, 2, q, 25))
+    np.testing.assert_allclose(res["score"],
+                               emb.astype(np.float64)[res["id"]] @ q)
+    sess.shutdown()
+
+
+def test_similarity_join_sql_twin_same_plan():
+    """The frame call lowers to the exact plan of its SQL twin — one
+    fingerprint, one result-cache entry (non-negative weights: the SQL
+    parser desugars unary minus to `0 - x`, which would differ textually)."""
+    sess, emb, cat = _docs_session()
+    q = np.array([1.5, 0.25, 2.0, 0.5, 1.0, 0.75, 3.0, 0.125])
+    f = sess.table("docs").filter(col("cat") == 1).similarity_join(
+        "emb", q, 10)
+    lanes = " + ".join(f"emb_{i} * {float(w)!r}" for i, w in enumerate(q))
+    cols = ", ".join(["id", "cat"] + [f"emb_{i}" for i in range(DIM)])
+    twin = sess.sql(
+        f"SELECT {cols}, {lanes} AS score FROM docs WHERE cat = 1 "
+        f"ORDER BY score DESC LIMIT 10", lazy=True)
+    assert f.explain() == twin.explain()
+    np.testing.assert_array_equal(twin.to_numpy()["id"],
+                                  _oracle(emb, cat, 1, q, 10))
+    sess.shutdown()
+
+
+@pytest.mark.kernels_interpret
+def test_similarity_join_topk_kernel_route():
+    sess, emb, cat = _docs_session(
+        rows=20_000,
+        pde_config=PDEConfig(segment_force_kernels=True))
+    q = np.random.default_rng(2).normal(size=DIM)
+    f = sess.table("docs").similarity_join("emb", q, 12)
+    res = f.to_numpy()
+    routes = sess.metrics().segment_routes()
+    assert routes.get("topk_similarity", 0) > 0, routes
+    np.testing.assert_array_equal(res["id"], _oracle(emb, cat, None, q, 12))
+    sess.shutdown()
+
+
+def test_similarity_join_error_paths():
+    sess, _, _ = _docs_session(rows=200)
+    q = np.zeros(DIM)
+    with pytest.raises(FrameBindError, match="no embedding"):
+        sess.table("docs").similarity_join("nope", q, 5)
+    with pytest.raises(FrameBindError, match="lanes"):
+        sess.table("docs").similarity_join("emb", q[:3], 5)
+    with pytest.raises(FrameBindError, match="already exists"):
+        sess.table("docs").similarity_join("emb", q, 5, score_col="id")
+    with pytest.raises(FrameBindError, match="1 lanes"):
+        # projecting away lanes breaks the embedding: the prefix fallback
+        # finds only emb_0 and the 8-component query no longer fits
+        sess.table("docs").select("id", "emb_0").similarity_join(
+            "emb", q, 5)
+    with pytest.raises(FrameBindError, match="no embedding"):
+        sess.table("docs").select("id").similarity_join("emb", q, 5)
+    sess.shutdown()
+
+
+def test_similarity_join_prefix_fallback_after_projection():
+    """A derived frame that keeps ALL lanes (but is no longer a bare scan
+    walkable to the catalog) resolves lanes by name prefix."""
+    from repro.core.functions import count
+    sess, emb, cat = _docs_session()
+    q = np.random.default_rng(3).normal(size=DIM)
+    base = sess.table("docs").filter(col("cat") == 0)
+    agg = (sess.table("docs").group_by(col("cat"))
+           .agg(count(col("id")).alias("n")))
+    joined = base.join(agg, on=("cat", "cat"))
+    res = joined.similarity_join("emb", q, 8).to_numpy()
+    np.testing.assert_array_equal(res["id"], _oracle(emb, cat, 0, q, 8))
+    sess.shutdown()
+
+
+def test_similarity_search_under_server_concurrency():
+    """3 concurrent sessions storm filtered similarity searches through the
+    fair scheduler — zero wrong results."""
+    from repro.server import SharkServer
+    rng = np.random.default_rng(4)
+    rows = 4000
+    emb = rng.normal(size=(rows, DIM)).astype(np.float32)
+    cat = rng.integers(0, 3, rows).astype(np.int64)
+    srv = SharkServer(num_workers=2, max_threads=4,
+                      max_concurrent_queries=3, enable_result_cache=False,
+                      default_partitions=4)
+    srv.create_table("docs", Schema.of(id=DType.INT64, cat=DType.INT64),
+                     {"id": np.arange(rows, dtype=np.int64), "cat": cat,
+                      "emb": emb})
+    wrong = [0, 0, 0]
+
+    def storm(slot):
+        sess = SharkSession(server=srv, client_id=f"sim-{slot}")
+        srng = np.random.default_rng(50 + slot)
+        for _ in range(3):
+            c = int(srng.integers(0, 3))
+            q = srng.normal(size=DIM)
+            got = (sess.table("docs").filter(col("cat") == c)
+                   .similarity_join("emb", q, 15).to_numpy())
+            if not np.array_equal(got["id"], _oracle(emb, cat, c, q, 15)):
+                wrong[slot] += 1
+
+    threads = [threading.Thread(target=storm, args=(i,)) for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sum(wrong) == 0, wrong
+    srv.shutdown()
