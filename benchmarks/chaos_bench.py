@@ -1,0 +1,138 @@
+"""Mid-query fault tolerance, server tier (paper §6.3.3, Figure 9; DESIGN.md
+§16) — the chaos-engine port of the old benchmarks/fault_tolerance.py.
+
+Group-by on a cached lineitem under three conditions: failure-free, with a
+worker killed mid-query by the unified fault-injection engine (a seeded
+`FaultSpec("task.body", count=1, after=K)` — the kill lands after K tasks
+have started, i.e. genuinely mid-query), and after recovery.  The paper's
+claim is that lineage recovery re-runs only the lost partitions in
+parallel (~3 s impact on a 50-node cluster vs a full reload); the
+structural reproduction asserts the with-failure run stays within
+``--assert-ceiling`` (default 2.5x) of the failure-free median AND returns
+byte-identical rows — zero wrong results is part of the acceptance bar.
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench \
+        [--rows 800000] [--kill-after 6] [--assert-ceiling 2.5] \
+        [--json-out BENCH_chaos.json] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import ChaosEngine, DType, FaultSchedule, FaultSpec, Schema
+from repro.server import SharkServer
+
+from .common import report, timeit
+
+QUERY = ("SELECT L_SHIPMODE, COUNT(*) AS c, SUM(L_EXTENDEDPRICE) AS s "
+         "FROM lineitem GROUP BY L_SHIPMODE")
+
+
+def canonical(res: Dict[str, np.ndarray]):
+    rows = []
+    names = sorted(res)
+    for tup in zip(*(np.asarray(res[n]).tolist() for n in names)):
+        rows.append(tuple(round(v, 6) if isinstance(v, float) else v
+                          for v in tup))
+    return tuple(sorted(rows))
+
+
+def make_server(n_rows: int) -> SharkServer:
+    srv = SharkServer(num_workers=8, max_threads=8,
+                      enable_result_cache=False, speculation=False,
+                      default_partitions=16, default_shuffle_buckets=16)
+    rng = np.random.default_rng(2)
+    srv.create_table("lineitem", Schema.of(
+        L_ORDERKEY=DType.INT64, L_QUANTITY=DType.INT32,
+        L_EXTENDEDPRICE=DType.FLOAT64, L_SHIPMODE=DType.STRING), {
+        "L_ORDERKEY": np.sort(rng.integers(0, n_rows // 4, n_rows)).astype(
+            np.int64),
+        "L_QUANTITY": rng.integers(1, 50, n_rows).astype(np.int32),
+        "L_EXTENDEDPRICE": rng.uniform(900, 100_000, n_rows),
+        "L_SHIPMODE": np.array(["AIR", "SHIP", "TRUCK", "RAIL", "MAIL",
+                                "FOB", "REG"])[rng.integers(0, 7, n_rows)],
+    })
+    return srv
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=800_000)
+    ap.add_argument("--kill-after", type=int, default=6,
+                    help="tasks started before the chaos kill lands")
+    ap.add_argument("--assert-ceiling", type=float, default=None,
+                    help="fail unless failure_s <= ceiling * before_s")
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller table (CI smoke)")
+    args = ap.parse_args(argv)
+    n_rows = min(args.rows, 200_000) if args.quick else args.rows
+
+    srv = make_server(n_rows)
+    try:
+        sess = srv.session("chaos-bench")
+        ref = canonical(sess.sql_np(QUERY))         # also warms the scan cache
+        t_before = timeit(lambda: sess.sql_np(QUERY), warmup=1, iters=3)
+
+        # worker killed mid-query by the fault engine: after `kill_after`
+        # task-body passes, one worker dies (its cached blocks vanish) and a
+        # fresh one joins; lineage recomputes only the lost partitions
+        engine = ChaosEngine(FaultSchedule(seed=0, specs=[
+            FaultSpec("task.body", count=1, after=args.kill_after)]))
+        engine.install(srv)
+        try:
+            t0 = time.perf_counter()
+            got = canonical(sess.sql_np(QUERY))
+            t_failure = time.perf_counter() - t0
+        finally:
+            engine.uninstall()
+        assert got == ref, "recovery must be exact"
+        assert engine.trip_count() == 1, engine.stats()
+        resilience = srv.stats()["resilience"]
+        assert resilience["retries"] >= 1, resilience
+
+        t_after = timeit(lambda: sess.sql_np(QUERY), warmup=0, iters=3)
+        assert canonical(sess.sql_np(QUERY)) == ref
+    finally:
+        srv.shutdown()
+
+    overhead = t_failure / max(t_before, 1e-9)
+    report("chaos_before_failure", t_before, "")
+    report("chaos_with_failure", t_failure,
+           f"overhead={overhead:.2f}x trips={engine.trip_count()} "
+           f"retries={resilience['retries']}")
+    report("chaos_after_recovery", t_after, "")
+
+    if args.assert_ceiling is not None:
+        assert overhead <= args.assert_ceiling, (
+            f"with-failure run {t_failure:.3f}s exceeded "
+            f"{args.assert_ceiling}x the failure-free {t_before:.3f}s "
+            f"({overhead:.2f}x)")
+
+    payload = {
+        "rows": n_rows,
+        "kill_after_tasks": args.kill_after,
+        "before_failure_s": round(t_before, 4),
+        "with_failure_s": round(t_failure, 4),
+        "after_recovery_s": round(t_after, 4),
+        "recovery_overhead_x": round(overhead, 3),
+        "ceiling_x": args.assert_ceiling,
+        "fault_trips": [list(t) for t in engine.trips],
+        "scheduler_retries": resilience["retries"],
+        "zero_wrong_results": True,
+    }
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+    print(f"# chaos_bench: before={t_before:.3f}s failure={t_failure:.3f}s "
+          f"after={t_after:.3f}s overhead={overhead:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

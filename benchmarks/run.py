@@ -13,7 +13,7 @@ import traceback
 
 SUITES = ["loading", "kernels_bench", "exec_engine", "shuffle_bench",
           "pavlo", "tpch_micro", "join_pde", "join_bench",
-          "fault_tolerance", "warehouse", "ml_bench", "task_overhead",
+          "chaos_bench", "warehouse", "ml_bench", "task_overhead",
           "concurrent_bench", "frame_overhead", "spill_bench",
           "pipeline_bench"]
 

@@ -26,7 +26,12 @@
 # the reload-per-iteration pipeline >= 5x, encoded featurization beats
 # host materialization >= 1.3x, zero host-side decodes on the encoded
 # path, and zero wrong filtered-similarity results under 3 concurrent
-# server sessions).
+# server sessions), and the resilience leg (the seeded chaos-storm sweep —
+# every fault site injected over 20 seeds against a live spill-tier server
+# with byte-identical results required — plus the Figure 9 mid-query
+# fault-tolerance benchmark, which emits BENCH_chaos.json and asserts the
+# with-failure run stays within 2.5x of failure-free with zero wrong
+# results).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -70,6 +75,14 @@ echo "wrote BENCH_pipeline.json"
 echo "== compiled in-engine ML: cached/encoded training + similarity search =="
 python -m benchmarks.ml_bench --quick --json-out BENCH_ml.json
 echo "wrote BENCH_ml.json"
+
+echo "== resilience: seeded chaos-storm sweep (every fault site, 20 seeds) =="
+python -m pytest -q tests/test_chaos_storm.py tests/test_resilience.py
+
+echo "== resilience: Figure 9 mid-query fault tolerance (chaos engine) =="
+python -m benchmarks.chaos_bench --quick --assert-ceiling 2.5 \
+    --json-out BENCH_chaos.json
+echo "wrote BENCH_chaos.json"
 
 echo "== cluster tier: 8-device mesh tests + fleet scale-out =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Union
 import numpy as np
 
 from ..core.plan import Node
+from ..core.resilience import CircuitBreaker, ResiliencePolicy
 from ..core.sql import CreateStmt, parse
 from ..core.types import Schema
 from ..server.server import SharkServer
@@ -63,9 +64,11 @@ class _Replica:
 
 class FleetHandle:
     """Async handle that survives replica loss: `result()` re-routes to a
-    survivor if the replica serving the query dies before finishing."""
-
-    _POLL_S = 0.02
+    survivor if the replica serving the query dies before finishing.  Poll
+    cadence and reroute budget come from the fleet's ResiliencePolicy; a
+    retryable infrastructure error from an ALIVE replica also reroutes
+    (scoring its circuit breaker), while deterministic application errors
+    surface immediately — rerouting them would just fail N times."""
 
     def __init__(self, fleet: "SharkFleet", query, client: str):
         self._fleet = fleet
@@ -84,22 +87,39 @@ class FleetHandle:
     def result(self, timeout: Optional[float] = None):
         deadline = (None if timeout is None
                     else time.monotonic() + timeout)
+        policy = self._fleet.policy
         while True:
             try:
-                return self._inner.result(timeout=self._POLL_S)
+                out = self._inner.result(timeout=policy.fleet_poll_s)
             except TimeoutError:
+                # chaos seam "fleet.poll": the serving replica dies
+                # mid-query (only while a survivor exists to reroute to)
+                chaos = self._fleet.chaos
+                if (chaos is not None and self._replica.alive
+                        and not self._inner.done()
+                        and len(self._fleet.alive_replicas()) > 1):
+                    if chaos.fire("fleet.poll") is not None:
+                        self._fleet.kill_replica(self._replica.index)
                 if not self._replica.alive and not self._inner.done():
                     self._reroute()     # died mid-query: recompute elsewhere
                     continue
                 if deadline is not None and time.monotonic() >= deadline:
                     raise TimeoutError("fleet query timed out")
-            except Exception:
+            except Exception as exc:
                 if not self._replica.alive:
                     # the dying replica surfaced an error — its failure must
                     # not become the fleet's answer
                     self._reroute()
                     continue
+                self._fleet._record_failure(self._replica)
+                if (policy.is_retryable(exc)
+                        and self.reroutes < policy.fleet_reroute_limit):
+                    self._reroute()
+                    continue
                 raise
+            else:
+                self._fleet._record_success(self._replica)
+                return out
 
     def _reroute(self) -> None:
         self.reroutes += 1
@@ -111,16 +131,24 @@ class FleetHandle:
 
 class SharkFleet:
     def __init__(self, num_replicas: int = 2, routing: str = "round_robin",
-                 mesh_factory=None, **server_kw):
+                 mesh_factory=None, resilience: Optional[ResiliencePolicy] = None,
+                 **server_kw):
         """`mesh_factory`: optional callable `index -> MeshContext | None`
         giving each replica its OWN device mesh (DESIGN.md §13.3) — the
         composed cluster tier: a fleet of replicated servers, each of which
         shards its map stages across an intra-replica mesh.  A plain
         `mesh=` in `server_kw` would share one mesh object (and its
         health/retry state) across replicas; the factory keeps replica
-        failure domains independent."""
+        failure domains independent.
+
+        `resilience`: ResiliencePolicy shared by the routing layer (poll
+        cadence, reroute budget, circuit breakers) and every replica
+        server's scheduler/storage."""
         assert routing in ("round_robin", "least_loaded"), routing
         self.routing = routing
+        self.policy = resilience if resilience is not None else ResiliencePolicy()
+        if resilience is not None:
+            server_kw.setdefault("resilience", resilience)
         if mesh_factory is not None:
             assert "mesh" not in server_kw, "pass mesh_factory OR mesh"
             self.replicas = [
@@ -129,6 +157,11 @@ class SharkFleet:
         else:
             self.replicas = [_Replica(i, SharkServer(**server_kw))
                              for i in range(num_replicas)]
+        # one circuit breaker per replica: repeated failures open it and
+        # routing skips the replica until its reset window elapses
+        self.breakers = {r.index: CircuitBreaker(self.policy)
+                         for r in self.replicas}
+        self.chaos = None   # core.faults.ChaosEngine, when installed
         self._lock = threading.Lock()
         self._ddl_lock = threading.Lock()
         self._rr = 0
@@ -145,23 +178,52 @@ class SharkFleet:
             cands = self.alive_replicas()
         if not cands:
             raise ReplicaLost("every replica is dead")
+        # health-probe routing: skip replicas whose breaker is OPEN; if every
+        # candidate's breaker is open, route anyway (degraded beats dead)
+        now = time.monotonic()
+        routable = [r for r in cands if self.breakers[r.index].routable(now)]
+        if routable:
+            cands = routable
         if self.routing == "least_loaded":
             with self._lock:
-                return min(cands,
-                           key=lambda r: (r.server.scheduler.load(), r.index))
-        with self._lock:
-            r = cands[self._rr % len(cands)]
-            self._rr += 1
-            return r
+                r = min(cands,
+                        key=lambda c: (c.server.scheduler.load(), c.index))
+        else:
+            with self._lock:
+                r = cands[self._rr % len(cands)]
+                self._rr += 1
+        self.breakers[r.index].on_route(now)    # consume half-open probe slot
+        return r
 
     def _submit_on(self, exclude: Optional[_Replica], query, client: str):
         r = self._pick(exclude)
+        # chaos seam "fleet.submit": the picked replica dies between routing
+        # and submission (only while a survivor exists) — re-pick excluding it
+        chaos = self.chaos
+        if chaos is not None and len(self.alive_replicas()) > 1:
+            trip = chaos.fire("fleet.submit")
+            if trip is not None:
+                try:
+                    self.kill_replica(r.index)
+                except RuntimeError:
+                    pass        # raced down to one replica
+                else:
+                    self._record_failure(r)
+                    r = self._pick(r)
         # plan objects are mutated by optimize(); each replica gets its own
         q = copy.deepcopy(query) if isinstance(query, Node) else query
         handle = r.server.submit(q, client=client)
         with self._lock:
             r.served += 1
         return r, handle
+
+    # -- replica health ------------------------------------------------------
+
+    def _record_failure(self, replica: _Replica) -> None:
+        self.breakers[replica.index].record_failure(time.monotonic())
+
+    def _record_success(self, replica: _Replica) -> None:
+        self.breakers[replica.index].record_success()
 
     # -- queries --------------------------------------------------------------
 
@@ -243,7 +305,18 @@ class SharkFleet:
                 "served": {r.index: r.served for r in self.replicas},
                 "load": {r.index: r.server.scheduler.load()
                          for r in self.alive_replicas()},
+                "breakers": {i: b.stats() for i, b in self.breakers.items()},
             }
+
+    def describe_resilience(self) -> str:
+        lines = [f"fleet: {len(self.alive_replicas())}/{len(self.replicas)} "
+                 f"alive, reroutes={self.reroutes}"]
+        for i, b in sorted(self.breakers.items()):
+            s = b.stats()
+            if s["opens"] or s["state"] != "closed":
+                lines.append(f"  replica {i}: breaker {s['state']} "
+                             f"(opens={s['opens']} closes={s['closes']})")
+        return "\n".join(lines)
 
     def shutdown(self) -> None:
         for r in self.replicas:

@@ -57,7 +57,7 @@ class MeshContext:
     """
 
     def __init__(self, max_devices: Optional[int] = None,
-                 max_retries: int = 3):
+                 max_retries: int = 3, policy=None):
         import jax
         devs = list(jax.devices())
         if max_devices is not None:
@@ -65,7 +65,10 @@ class MeshContext:
         self.devices = devs
         self.alive: List[bool] = [True] * len(devs)
         self.generation = 0
-        self.max_retries = max_retries
+        # the ResiliencePolicy owns the dispatch retry budget when given
+        self.max_retries = (policy.mesh_max_retries if policy is not None
+                            else max_retries)
+        self.chaos = None   # core.faults.ChaosEngine, when installed
         self.lock = threading.RLock()
         # chaos hook: called at every dispatch with (ctx, dispatch_ordinal);
         # tests install a killer that calls kill_device / raises DeviceLost
@@ -141,6 +144,21 @@ class MeshContext:
         hook = self.on_dispatch
         if hook is not None:
             hook(self, ordinal)
+        # chaos seam "mesh.dispatch": kill an alive device slot and raise
+        # DeviceLost — the dispatch retry loop re-places over the survivors
+        # and recomputes.  Only armed while >1 slot survives (killing the
+        # last device would be unrecoverable, not chaos).
+        chaos = self.chaos
+        if chaos is not None and self.n_alive > 1:
+            trip = chaos.fire("mesh.dispatch")
+            if trip is not None:
+                slots = self.alive_slots()
+                victim = slots[trip.ordinal % len(slots)]
+                try:
+                    self.kill_device(victim)
+                except RuntimeError:
+                    pass        # raced another killer down to one slot
+                raise DeviceLost(victim)
         return gen
 
     def stats(self) -> Dict[str, int]:

@@ -13,6 +13,9 @@ from .functions import (abs_, avg, ceil, col, count, count_distinct, exp,
                         substr, sum_, upper, year)
 from .session import SharkSession
 from .runtime import SharkContext
+from .resilience import (CircuitBreaker, ResiliencePolicy,
+                         ShuffleWaitTimeout, WorkerHealth)
+from .faults import ChaosEngine, FaultSchedule, FaultSpec, FaultTrip
 
 __all__ = [
     "DType", "Field", "Schema", "Table", "from_arrays",
@@ -25,4 +28,7 @@ __all__ = [
     "substr", "lower", "upper", "length", "abs_", "sqrt", "log", "exp",
     "floor", "ceil", "year",
     "SharkSession", "SharkContext",
+    "ResiliencePolicy", "ShuffleWaitTimeout", "WorkerHealth",
+    "CircuitBreaker",
+    "ChaosEngine", "FaultSchedule", "FaultSpec", "FaultTrip",
 ]

@@ -59,6 +59,9 @@ from .types import DType
 class ExecResult:
     batches: List[PartitionBatch]
     schema_names: List[str]
+    # the executing Executor's per-query ExecMetrics — attached by the
+    # server tier, where the executor itself is not reachable from a handle
+    metrics: Optional["ExecMetrics"] = None
 
     def to_numpy(self) -> Dict[str, np.ndarray]:
         merged = PartitionBatch.concat(self.batches)
@@ -184,6 +187,14 @@ class ExecMetrics:
     # iteration — {"iteration", "seconds", "rows", "routes"} — appended by
     # ml.trainer.IterativeTrainer next to its per-iteration SegmentRecords
     train_iterations: List[Dict] = dataclasses.field(default_factory=list)
+    # resilience tier (DESIGN.md §16): faults the chaos engine injected
+    # while this query ran — (site, ordinal, kind) tuples, replayable via
+    # FaultSchedule.replay — and the scheduler's recovery-counter deltas
+    # (retries / backoffs / app_probes / fast_fails / reaps)
+    fault_trips: List[Tuple[str, int, str]] = dataclasses.field(
+        default_factory=list)
+    resilience_events: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     def describe_joins(self) -> str:
         """One line per join boundary, execution order — the runtime twin of
@@ -1289,6 +1300,9 @@ class Executor:
         self.metrics = ExecMetrics()
         storage = self._storage()
         before = storage.stats() if storage is not None else None
+        chaos = getattr(self.ctx, "chaos", None)
+        trips_before = chaos.trip_count() if chaos is not None else 0
+        res_before = dict(self.ctx.scheduler.resilience_counters)
         plan = optimize(plan, self.catalog)
         compiled = self._compile(plan)
         batches = self.ctx.scheduler.run_result_stage(compiled.rdd)
@@ -1301,6 +1315,13 @@ class Executor:
             m.spill_reads = after["spill_reads"] - before["spill_reads"]
             m.recompressions = (after["recompressions"]
                                 - before["recompressions"])
+        if chaos is not None:
+            self.metrics.fault_trips = [tuple(t) for t in
+                                        chaos.trips_since(trips_before)]
+        res_after = self.ctx.scheduler.resilience_counters
+        self.metrics.resilience_events = {
+            k: res_after[k] - res_before.get(k, 0)
+            for k in res_after if res_after[k] - res_before.get(k, 0)}
         return ExecResult(batches, compiled.names)
 
     # ------------------------------------------------------------- internals

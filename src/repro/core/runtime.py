@@ -32,6 +32,8 @@ import numpy as np
 
 from .batch import PartitionBatch
 from .rdd import (RDD, ShuffleDependency, ShuffledRDD, TaskContext)
+from .resilience import (ResiliencePolicy, ShuffleWaitTimeout, WorkerHealth,
+                         describe_counters)
 from .stats import Accumulator, StageStats, TaskStats
 
 _stage_counter = itertools.count()
@@ -64,6 +66,10 @@ class BlockManager:
 
     def __init__(self):
         self.lock = threading.RLock()
+        # failure-handling knobs (set by SharkContext; None = defaults)
+        self.policy: Optional[ResiliencePolicy] = None
+        # fault-injection engine (faults.ChaosEngine), when installed
+        self.chaos = None
         # pipelined reduces block on this until their input pieces land
         # (put_shuffle notifies; DESIGN.md §14)
         self.shuffle_cond = threading.Condition(self.lock)
@@ -192,25 +198,39 @@ class BlockManager:
             mm.on_put(("shuf", shuffle_id, map_split, bucket))
 
     def wait_shuffle(self, shuffle_id: int, maps: Sequence[int],
-                     buckets: Sequence[int], timeout: float = 30.0,
+                     buckets: Sequence[int], timeout: Optional[float] = None,
                      cancel: Optional[threading.Event] = None) -> bool:
         """Block until every (map, bucket) piece in `maps`×`buckets` is
-        present (in memory or spilled); True on success, False on
-        cancel/timeout.  Availability is checked BEFORE cancellation so a
-        waiter racing the map stage's completion signal still wins when
-        its pieces already landed."""
+        present (in memory or spilled); True on success, False on cancel.
+        The timeout defaults to the ResiliencePolicy's
+        `shuffle_wait_timeout_s` and expiry raises a typed
+        `ShuffleWaitTimeout` carrying the shuffle id and the map splits
+        still missing (the seed returned a bare False, indistinguishable
+        from cancellation and naming nothing).  Availability is checked
+        BEFORE cancellation so a waiter racing the map stage's completion
+        signal still wins when its pieces already landed."""
+        if timeout is None:
+            pol = self.policy
+            timeout = (pol.shuffle_wait_timeout_s if pol is not None
+                       else ResiliencePolicy.shuffle_wait_timeout_s)
         deadline = time.monotonic() + timeout
+
+        def _have(m: int, b: int) -> bool:
+            return (("shuf", shuffle_id, m, b) in self.blocks
+                    or ("shuf", shuffle_id, m, b) in self.spilled_shuffle)
+
         with self.lock:
             while True:
-                if all(("shuf", shuffle_id, m, b) in self.blocks
-                       or ("shuf", shuffle_id, m, b) in self.spilled_shuffle
-                       for m in maps for b in buckets):
+                if all(_have(m, b) for m in maps for b in buckets):
                     return True
                 if cancel is not None and cancel.is_set():
                     return False
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
-                    return False
+                    missing = sorted({m for m in maps
+                                      if any(not _have(m, b)
+                                             for b in buckets)})
+                    raise ShuffleWaitTimeout(shuffle_id, missing, timeout)
                 self.shuffle_cond.wait(min(remaining, 0.05))
 
     def has_map_output(self, shuffle_id: int, map_split: int) -> bool:
@@ -269,6 +289,25 @@ class BlockManager:
         dictionaries with a vectorized merge-remap instead of decoding.
         Recomputed-from-lineage blocks carry byte-identical dictionaries
         because map tasks are deterministic."""
+        chaos = self.chaos
+        if chaos is not None:
+            trip = chaos.fire("shuffle.fetch")
+            if trip is not None:
+                # lose one present map split's blocks for this shuffle: the
+                # scan below reports it missing -> FetchFailed -> the
+                # scheduler recomputes exactly that map task from lineage
+                with self.lock:
+                    present = sorted({k[2] for k in self.blocks
+                                      if k[0] == "shuf"
+                                      and k[1] == shuffle_id})
+                if present:
+                    victim = present[trip.ordinal % len(present)]
+                    with self.lock:
+                        doomed = [k for k in self.blocks
+                                  if k[0] == "shuf" and k[1] == shuffle_id
+                                  and k[2] == victim]
+                    for k in doomed:
+                        self.drop_block(k)
         pieces, missing = [], set()
         with self.lock:
             for m in (range(num_maps) if maps is None else maps):
@@ -332,7 +371,8 @@ class Scheduler:
                  speculation_multiplier: float = 4.0,
                  speculation_quantile: float = 0.5,
                  max_stage_retries: int = 6,
-                 task_launch_overhead_s: float = 0.0):
+                 task_launch_overhead_s: float = 0.0,
+                 policy: Optional[ResiliencePolicy] = None):
         self.ctx = ctx
         self.num_workers = num_workers
         self.alive: Set[int] = set(range(num_workers))
@@ -341,14 +381,24 @@ class Scheduler:
         self.speculation = speculation
         self.speculation_multiplier = speculation_multiplier
         self.speculation_quantile = speculation_quantile
-        self.max_stage_retries = max_stage_retries
+        if policy is None:
+            policy = ResiliencePolicy(max_stage_retries=max_stage_retries)
+        self.policy = policy
+        # kept as a plain attribute: external layers (ml.trainer, the
+        # broadcast fetch in physical.py) read it directly
+        self.max_stage_retries = policy.max_stage_retries
         self.task_launch_overhead_s = task_launch_overhead_s
+        self.health = WorkerHealth(policy)
         self.lock = threading.RLock()
         self._rr = itertools.count()
         # metrics
         self.tasks_launched = 0
         self.tasks_speculated = 0
         self.tasks_recomputed = 0
+        # resilience event counters (policy decisions, DESIGN.md §16)
+        self.resilience_counters: Dict[str, int] = {
+            "retries": 0, "backoffs": 0, "app_probes": 0,
+            "fast_fails": 0, "reaps": 0}
         self.stage_stats: Dict[int, StageStats] = {}
         # pipelined-scheduling event log (DESIGN.md §14): monotonically
         # sequenced (seq, kind, shuffle_id, detail) tuples — the test
@@ -372,6 +422,7 @@ class Scheduler:
         (cached partitions + shuffle outputs) vanish."""
         with self.lock:
             self.alive.discard(worker)
+        self.health.forget(worker)
         return self.ctx.block_manager.drop_worker(worker)
 
     def add_worker(self) -> int:
@@ -384,9 +435,14 @@ class Scheduler:
             return w
 
     def _pick_worker(self, exclude: Optional[Set[int]] = None) -> int:
+        quarantined = self.health.excluded()
         with self.lock:
-            pool = [w for w in sorted(self.alive)
-                    if not exclude or w not in exclude]
+            avoid = [w for w in sorted(self.alive)
+                     if not exclude or w not in exclude]
+            # quarantined workers are skipped until their probation probe is
+            # due; an empty healthy pool falls back to the full one (a task
+            # on a flaky worker beats no task at all)
+            pool = [w for w in avoid if w not in quarantined] or avoid
             if not pool:
                 pool = sorted(self.alive)
             if not pool:
@@ -397,12 +453,35 @@ class Scheduler:
 
     def _run_tasks(self, stage_id: int, splits: Sequence[int],
                    run_one: Callable[[int, TaskContext], Any]) -> Dict[int, Any]:
-        """Run one task per split with failure retry and speculation; returns
-        split -> result.  `run_one` must be deterministic and idempotent."""
+        """Run one task per split under the ResiliencePolicy; returns
+        split -> result.  `run_one` must be deterministic and idempotent.
+
+        Failure handling (DESIGN.md §16):
+          * retryable infrastructure faults (policy.is_retryable) retry on
+            another worker with deterministic exponential backoff, up to
+            `max_task_attempts`; each failure scores against the worker's
+            health and may quarantine it from `_pick_worker`;
+          * deterministic application errors fail FAST: after at most
+            `app_error_probes` cross-worker probes the ORIGINAL exception
+            is re-raised (the seed retried any exception to the attempt
+            cap, surfacing app bugs late with mangled context);
+          * with `task_deadline_s` set, a task running past the deadline is
+            reaped: its future is abandoned (a late result is never
+            observed; late shuffle writes hit the exactly-once released-
+            shuffle guard) and the split relaunches elsewhere — even when
+            ZERO tasks have completed, the case duration-based speculation
+            structurally cannot cover (the seed deadlocked forever here).
+        """
+        policy = self.policy
         results: Dict[int, Any] = {}
         pending: Set[int] = set(splits)
         durations: List[float] = []
         attempt_counter: Dict[int, int] = {s: 0 for s in splits}
+        infra_failures: Dict[int, int] = {s: 0 for s in splits}
+        app_probes: Dict[int, int] = {s: 0 for s in splits}
+        first_app_error: Dict[int, BaseException] = {}
+        # (due_time, split, exclude): backoff-delayed resubmits
+        delayed: List[Tuple[float, int, Set[int]]] = []
 
         def submit(split: int, exclude: Optional[Set[int]] = None,
                    speculative: bool = False) -> TaskRecord:
@@ -419,6 +498,18 @@ class Scheduler:
                 with self.lock:
                     if worker not in self.alive:
                         raise WorkerLost(f"worker {worker} is dead")
+                chaos = getattr(self.ctx, "chaos", None)
+                if chaos is not None:
+                    trip = chaos.fire("task.body")
+                    if trip is not None:
+                        # chaos worker death: the node vanishes (all its
+                        # blocks drop) and a fresh one joins — the exact
+                        # surface the hand-rolled chaos tests poked
+                        self.kill_worker(worker)
+                        self.add_worker()
+                        raise WorkerLost(
+                            f"worker {worker} killed by chaos "
+                            f"({trip.site}#{trip.ordinal})")
                 out = run_one(split, tc)
                 with self.lock:
                     if worker not in self.alive:
@@ -433,15 +524,41 @@ class Scheduler:
             rec.future = self.pool.submit(body)
             return rec
 
+        def resubmit(split: int, exclude: Set[int]) -> None:
+            """Retry with the policy's deterministic backoff schedule."""
+            delay = policy.backoff(infra_failures[split])
+            if delay > 0.0:
+                with self.lock:
+                    self.resilience_counters["backoffs"] += 1
+                delayed.append((time.monotonic() + delay, split,
+                                set(exclude)))
+            else:
+                running[split].append(submit(split, exclude=exclude))
+
         running: Dict[int, List[TaskRecord]] = {}
         for s in splits:
             running[s] = [submit(s)]
 
         while pending:
+            now = time.monotonic()
+            if delayed:
+                due = [d for d in delayed if d[0] <= now]
+                if due:
+                    delayed[:] = [d for d in delayed if d[0] > now]
+                    for _, split, exclude in due:
+                        if split in pending:
+                            running[split].append(
+                                submit(split, exclude=exclude))
             all_futs = {rec.future: (s, rec)
                         for s, recs in running.items() for rec in recs
                         if rec.future is not None and s in pending}
             if not all_futs:
+                if delayed:
+                    # every in-flight attempt is backing off; sleep to the
+                    # nearest due time instead of spinning
+                    nearest = min(d[0] for d in delayed)
+                    time.sleep(min(0.05, max(0.0, nearest - now)))
+                    continue
                 raise RuntimeError("scheduler deadlock: no running tasks")
             done, _ = wait(list(all_futs), timeout=0.05,
                            return_when=FIRST_COMPLETED)
@@ -454,21 +571,58 @@ class Scheduler:
                     res = fut.result()
                 except FetchFailed:
                     raise  # stage-level recovery (lineage) handled above us
-                except Exception:
-                    # task failed (e.g. worker death): retry elsewhere.
+                except Exception as exc:
                     # Clear the handled future FIRST — it would otherwise be
                     # re-observed as "done" on every poll iteration while the
                     # retry waits for a pool thread, spawning a retry per
                     # poll until the attempt cap kills the whole stage.
                     rec.future = None
-                    if attempt_counter[split] > 8:
-                        raise
-                    running[split].append(
-                        submit(split, exclude={rec.worker}))
+                    self.health.record_failure(rec.worker)
+                    if policy.is_retryable(exc):
+                        infra_failures[split] += 1
+                        with self.lock:
+                            self.resilience_counters["retries"] += 1
+                        if attempt_counter[split] > policy.max_task_attempts:
+                            raise
+                        resubmit(split, {rec.worker})
+                    elif app_probes[split] < policy.app_error_probes:
+                        # deterministic app error?  one cross-worker probe
+                        # tells a poison partition from a poison worker
+                        first_app_error.setdefault(split, exc)
+                        app_probes[split] += 1
+                        with self.lock:
+                            self.resilience_counters["app_probes"] += 1
+                        running[split].append(
+                            submit(split, exclude={rec.worker}))
+                    else:
+                        with self.lock:
+                            self.resilience_counters["fast_fails"] += 1
+                        raise first_app_error.get(split, exc)
                     continue
+                self.health.record_success(rec.worker)
                 results[split] = res
                 pending.discard(split)
                 durations.append(now - rec.started)
+            # hung-task reaper: abandon any attempt past the deadline and
+            # relaunch the split elsewhere (policy.task_deadline_s)
+            if policy.task_deadline_s is not None and pending:
+                for split in list(pending):
+                    for rec in list(running[split]):
+                        if (rec.future is None
+                                or now - rec.started
+                                <= policy.task_deadline_s):
+                            continue
+                        rec.future = None       # late result never observed
+                        self.health.record_failure(rec.worker)
+                        infra_failures[split] += 1
+                        with self.lock:
+                            self.resilience_counters["reaps"] += 1
+                        if attempt_counter[split] > policy.max_task_attempts:
+                            raise RuntimeError(
+                                f"task {split} exceeded its "
+                                f"{policy.task_deadline_s}s deadline "
+                                f"{attempt_counter[split]} times")
+                        resubmit(split, {rec.worker})
             # speculation: if a task runs far beyond the median of completed
             # tasks, launch a backup copy on another worker (§2.3 item 3)
             if self.speculation and durations and pending:
@@ -688,6 +842,22 @@ class Scheduler:
         return all(self.ctx.block_manager.has_map_output(dep.shuffle_id, m)
                    for m in range(dep.parent.num_partitions))
 
+    # -- resilience reporting (DESIGN.md §16) ---------------------------------
+
+    def resilience_stats(self) -> Dict[str, int]:
+        with self.lock:
+            out = dict(self.resilience_counters)
+        out.update(self.health.stats())
+        return out
+
+    def describe_resilience(self) -> str:
+        """explain()-adjacent one-stop report of every policy decision this
+        scheduler took: counters, worker health, and the policy knobs."""
+        with self.lock:
+            counters = {k: v for k, v in self.resilience_counters.items()
+                        if v}
+        return describe_counters(counters, self.health, self.policy)
+
 
 def _all_shuffle_deps(rdd: RDD, out: Optional[List[ShuffleDependency]] = None,
                       seen: Optional[Set[int]] = None) -> List[ShuffleDependency]:
@@ -715,12 +885,20 @@ class SharkContext:
 
     def __init__(self, num_workers: int = 8, max_threads: int = 8,
                  speculation: bool = True,
-                 task_launch_overhead_s: float = 0.0):
+                 task_launch_overhead_s: float = 0.0,
+                 policy: Optional[ResiliencePolicy] = None):
         self.block_manager = BlockManager()
         self.scheduler = Scheduler(
             self, num_workers=num_workers, max_threads=max_threads,
             speculation=speculation,
-            task_launch_overhead_s=task_launch_overhead_s)
+            task_launch_overhead_s=task_launch_overhead_s,
+            policy=policy)
+        # one policy object governs the context's layers; the BlockManager
+        # reads it for shuffle-wait timeouts
+        self.policy = self.scheduler.policy
+        self.block_manager.policy = self.policy
+        # fault-injection engine (faults.ChaosEngine.install sets this)
+        self.chaos = None
 
     def parallelize(self, batches: List[PartitionBatch]):
         from .rdd import ParallelCollectionRDD

@@ -59,7 +59,7 @@ class SharkSession:
                  server=None, client_id: Optional[str] = None,
                  weight: float = 1.0, backend: str = "compiled",
                  exchange: str = "coded", mesh=None,
-                 stage_fusion: str = "on"):
+                 stage_fusion: str = "on", resilience=None):
         self.server = server
         if server is not None:
             # attached mode: share the server's runtime + catalog; queries
@@ -75,7 +75,8 @@ class SharkSession:
         self.ctx = SharkContext(num_workers=num_workers,
                                 max_threads=max_threads,
                                 speculation=speculation,
-                                task_launch_overhead_s=task_launch_overhead_s)
+                                task_launch_overhead_s=task_launch_overhead_s,
+                                policy=resilience)
         self.catalog = Catalog()
         self.default_partitions = default_partitions
         self.executor = Executor(
@@ -182,6 +183,9 @@ class SharkSession:
         return {"tasks_launched": s.tasks_launched,
                 "tasks_speculated": s.tasks_speculated,
                 "tasks_recomputed": s.tasks_recomputed}
+
+    def describe_resilience(self) -> str:
+        return self.ctx.scheduler.describe_resilience()
 
     def release_shuffles(self):
         """Drop shuffle map outputs created by this session's executor

@@ -260,9 +260,11 @@ class StorageManager:
     measures against."""
 
     def __init__(self, spill_dir: Optional[str] = None, mode: str = "spill",
-                 async_write: bool = True):
+                 async_write: bool = True, policy=None):
         assert mode in ("spill", "drop"), mode
         self.mode = mode
+        self.policy = policy       # core.resilience.ResiliencePolicy | None
+        self.chaos = None          # core.faults.ChaosEngine, when installed
         env_dir = os.environ.get("SHARK_SPILL_DIR")
         self._own_dir = spill_dir is None and env_dir is None
         self.dir = spill_dir or env_dir or tempfile.mkdtemp(
@@ -318,21 +320,29 @@ class StorageManager:
             if not part.resident:
                 return 0
             if self.mode == "spill":
+                # chaos seam "spill.write": the segment write silently
+                # vanishes (never reaches disk); only armed for partitions
+                # with lineage — the read side then degrades to
+                # recompute-from-lineage, never to data loss
+                trip = None
+                if self.chaos is not None and part.lineage is not None:
+                    trip = self.chaos.fire("spill.write")
                 payload = serialize_partition(part.index, part._columns)
                 path = os.path.join(
                     self.dir,
                     f"spill-{next(self._seq):06d}-{table_name}"
                     f"-p{part.index}.shk")
                 part.spill_ref = SpillRef(path, len(payload))
-                self._pending[path] = payload
                 self._live.add(path)
                 self.spills += 1
                 self.spill_bytes += len(payload)
                 self.spill_write_bytes += len(payload)
-                if self._writer is not None:
-                    self._queue.put((path, payload))
-                else:
-                    self._flush_one(path, payload)
+                if trip is None:
+                    self._pending[path] = payload
+                    if self._writer is not None:
+                        self._queue.put((path, payload))
+                    else:
+                        self._flush_one(path, payload)
             else:
                 part.spill_ref = None
                 self.drops += 1
@@ -350,13 +360,25 @@ class StorageManager:
             columns = None
             ref = part.spill_ref
             if ref is not None:
-                data = self._pending.get(ref.path)
-                if data is None:
-                    try:
-                        with open(ref.path, "rb") as f:
-                            data = f.read()
-                    except OSError:
-                        self.spill_lost += 1
+                # chaos seam "spill.read": kind "lost" pretends the file
+                # vanished, "corrupt" flips a payload byte so the checksum
+                # rejects it; armed only with lineage to recompute from
+                trip = None
+                if self.chaos is not None and part.lineage is not None:
+                    trip = self.chaos.fire("spill.read")
+                if trip is not None and trip.kind != "corrupt":
+                    data = None
+                    self.spill_lost += 1
+                else:
+                    data = self._pending.get(ref.path)
+                    if data is None:
+                        try:
+                            with open(ref.path, "rb") as f:
+                                data = f.read()
+                        except OSError:
+                            self.spill_lost += 1
+                    if trip is not None and data is not None:
+                        data = data[:-1] + bytes([data[-1] ^ 0xFF])
                 if data is not None:
                     try:
                         _, columns = deserialize_partition(data)
@@ -399,22 +421,27 @@ class StorageManager:
         operator forensics."""
         if self.mode != "spill":
             return None
+        # chaos seam "spill.write": a lost shuffle segment degrades to
+        # FetchFailed -> lineage recompute on the read side, always safe
+        trip = self.chaos.fire("spill.write") if self.chaos is not None \
+            else None
         payload = serialize_batch(batch)
         path = os.path.join(
             self.dir,
             f"shuf-{next(self._seq):06d}"
             f"-s{key[1]}-m{key[2]}-b{key[3]}.shk")
         with self.lock:
-            self._pending[path] = payload
             self._live.add(path)
             self.shuffle_spills += 1
             self.spills += 1
             self.spill_bytes += len(payload)
             self.spill_write_bytes += len(payload)
-            if self._writer is not None:
-                self._queue.put((path, payload))
-            else:
-                self._flush_one(path, payload)
+            if trip is None:
+                self._pending[path] = payload
+                if self._writer is not None:
+                    self._queue.put((path, payload))
+                else:
+                    self._flush_one(path, payload)
         return SpillRef(path, len(payload))
 
     def fault_shuffle(self, ref: SpillRef):
@@ -422,6 +449,19 @@ class StorageManager:
         segment is lost or corrupt — the caller reports the map output
         missing (FetchFailed) and the scheduler recomputes it from lineage,
         the same fault contract as partition segments."""
+        # chaos seam "spill.read" (shuffle side): both kinds surface as a
+        # missing segment — the caller raises FetchFailed and the scheduler
+        # recomputes the map output from lineage
+        if self.chaos is not None:
+            trip = self.chaos.fire("spill.read")
+            if trip is not None:
+                with self.lock:
+                    self.shuffle_lost += 1
+                    if trip.kind == "corrupt":
+                        self.spill_corrupt += 1
+                    else:
+                        self.spill_lost += 1
+                return None
         with self.lock:
             data = self._pending.get(ref.path)
         if data is None:
@@ -515,8 +555,10 @@ class StorageManager:
 
     def shutdown(self) -> None:
         if self._writer is not None:
+            join_s = (self.policy.spill_join_timeout_s
+                      if self.policy is not None else 10.0)
             self._queue.put(None)
-            self._writer.join(timeout=10)
+            self._writer.join(timeout=join_s)
             self._writer = None
         with self.lock:
             for path in list(self._live):

@@ -70,8 +70,10 @@ class MemoryManager:
         self.over_budget_events = 0
         self.decode_cache_drops = 0
         self.decode_cache_dropped_bytes = 0
+        self.chaos_pressure_drops = 0
         self._catalog = None
         self.storage = None        # core.storage.StorageManager, optional
+        self.chaos = None          # core.faults.ChaosEngine, when installed
         self.bm.memory_manager = self
 
     def attach_result_cache(self, result_cache) -> None:
@@ -161,6 +163,24 @@ class MemoryManager:
     # -- enforcement ----------------------------------------------------------
 
     def enforce(self, protect: Optional[Tuple] = None) -> None:
+        # chaos seam "memory.enforce": simulated memory pressure drops one
+        # unprotected LRU cached partition — always recoverable (cached
+        # partitions recompute from lineage on the next miss, exactly the
+        # real eviction path below)
+        if self.chaos is not None:
+            trip = self.chaos.fire("memory.enforce")
+            if trip is not None:
+                with self.lock:
+                    for key in self.bm.lru_partition_keys():
+                        if key == protect:
+                            continue
+                        freed = self.bm.drop_block(key)
+                        if freed:
+                            self.evictions += 1
+                            self.evicted_bytes += freed
+                            self.chaos_pressure_drops += 1
+                            self._evicted.add(key)
+                        break
         if self.budget_bytes is None:
             return
         with self.lock:
@@ -289,6 +309,7 @@ class MemoryManager:
             "over_budget_events": self.over_budget_events,
             "decode_cache_drops": self.decode_cache_drops,
             "decode_cache_dropped_bytes": self.decode_cache_dropped_bytes,
+            "chaos_pressure_drops": self.chaos_pressure_drops,
             # storage tier (zeros when no StorageManager is attached, so
             # BENCH_concurrent.json always carries the keys)
             "spills": st.get("spills", 0),

@@ -66,11 +66,13 @@ class SharkServer:
                  backend: str = "compiled", exchange: str = "coded",
                  spill_dir: Optional[str] = None,
                  spill_mode: Optional[str] = None,
-                 mesh=None, stage_fusion: str = "on"):
+                 mesh=None, stage_fusion: str = "on",
+                 resilience=None):
         self.ctx = SharkContext(num_workers=num_workers,
                                 max_threads=max_threads,
                                 speculation=speculation,
-                                task_launch_overhead_s=task_launch_overhead_s)
+                                task_launch_overhead_s=task_launch_overhead_s,
+                                policy=resilience)
         self.catalog = Catalog()
         self.memory = MemoryManager(self.ctx.block_manager,
                                     budget_bytes=cache_budget_bytes)
@@ -80,7 +82,8 @@ class SharkServer:
         if spill_mode is not None or spill_dir is not None:
             from ..core.storage import StorageManager
             self.storage = StorageManager(spill_dir=spill_dir,
-                                          mode=spill_mode or "spill")
+                                          mode=spill_mode or "spill",
+                                          policy=self.ctx.policy)
             self.memory.attach_storage(self.storage)
         self.scan_cache = ScanCache()
         self.result_cache = (ResultCache(result_cache_entries)
@@ -212,6 +215,7 @@ class SharkServer:
         executor = self.make_executor()
         try:
             result = executor.execute(node)
+            result.metrics = executor.metrics
         finally:
             self._release_shuffles(executor)
         if self.result_cache is not None:
@@ -229,10 +233,14 @@ class SharkServer:
 
     def stats(self) -> Dict[str, object]:
         out = {"memory": self.memory.stats(),
-               "scheduler": self.scheduler.stats()}
+               "scheduler": self.scheduler.stats(),
+               "resilience": self.ctx.scheduler.resilience_stats()}
         if self.result_cache is not None:
             out["result_cache"] = self.result_cache.stats()
         return out
+
+    def describe_resilience(self) -> str:
+        return self.ctx.scheduler.describe_resilience()
 
     def shutdown(self) -> None:
         self.scheduler.shutdown()
